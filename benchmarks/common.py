@@ -1,0 +1,35 @@
+"""Benchmark timing helpers (compiled-code wall-clock on CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (µs) of a jitted callable, blocking on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def hlo_ops(fn, *args) -> list:
+    """Sorted op-kind histogram of the optimized HLO (structural comparison)."""
+    import collections
+    import re
+
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    counts = collections.Counter()
+    for line in txt.splitlines():
+        m = re.search(r"= \S+ ([a-z0-9-]+)\(", line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items())

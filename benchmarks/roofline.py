@@ -1,0 +1,139 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips × 819 GB/s)
+  collective term = collective_moved_bytes / (chips × 50 GB/s/link)
+
+HLO_FLOPs / bytes / collective bytes come from the depth-probe extrapolation
+(launch/dryrun.py: cost_analysis counts while-loop bodies once; the probes fit
+metric(L) = a + L·b on unrolled shallow compiles). All probe numbers are
+PER-DEVICE (the compiled module is the post-SPMD per-device program), so no
+division by chip count is applied to them — the hardware denominator is per-chip.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per step (train: includes
+fwd+bwd; decode/prefill: 2·N·D per token forward).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+ARTI = Path("artifacts/dryrun")
+
+
+def model_flops(rec: dict, shape) -> float:
+    """Analytic 'useful' flops per step per CHIP."""
+    n_active = rec["params_active"]
+    world = rec["world"]
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        total = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        total = 2 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2 * n_active * shape.batch
+    return total / world
+
+
+def load_cells(mesh: str = "pod16x16", tag: str = ""):
+    cells = []
+    for f in sorted(ARTI.glob(f"*__{mesh}{'__' + tag if tag else ''}.json")):
+        r = json.loads(Path(f).read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        if not r.get("ok") or r.get("skipped"):
+            continue
+        cells.append(r)
+    return cells
+
+
+def analyze(rec: dict) -> dict:
+    shape = SHAPES[rec["shape"]]
+    e = rec["extrapolated"]
+    flops = e["flops_per_device"]
+    byts = e["bytes_per_device"]
+    coll = e["collective_moved_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec, shape)
+    step = max(t_c, t_m, t_x)  # no-overlap bound
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / step if step else 0.0,
+        "step_bound_s": step,
+        "mem_temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def table(mesh: str = "pod16x16", tag: str = "") -> list:
+    return [analyze(r) for r in load_cells(mesh, tag)]
+
+
+def render_markdown(rows) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful FLOP ratio | roofline frac | bound s/step |\n|---|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['step_bound_s']:.3e} |\n"
+        )
+    return "".join(out)
+
+
+def run(print_csv: bool = True):
+    """Print baseline (artifacts/dryrun) and, when present, the optimized sweep
+    (artifacts/dryrun_opt — §Perf code paths) side by side."""
+    global ARTI
+    out_rows = {}
+    for label, d in (("base", Path("artifacts/dryrun")), ("opt", Path("artifacts/dryrun_opt"))):
+        if not d.exists() or not list(d.glob("*.json")):
+            continue
+        ARTI = d
+        rows = table()
+        out_rows[label] = rows
+        if print_csv:
+            for r in rows:
+                us = r["step_bound_s"] * 1e6
+                print(
+                    f"roofline[{label}]_{r['arch']}_{r['shape']},{us:.1f},"
+                    f"dominant={r['dominant']};frac={r['roofline_fraction']:.2f};"
+                    f"useful={r['useful_ratio']:.2f}"
+                )
+    if print_csv and len(out_rows) == 2:
+        base = {(r["arch"], r["shape"]): r for r in out_rows["base"]}
+        for r in out_rows["opt"]:
+            b = base.get((r["arch"], r["shape"]))
+            if b and b["step_bound_s"] / max(r["step_bound_s"], 1e-12) >= 1.05:
+                print(
+                    f"roofline_speedup_{r['arch']}_{r['shape']},"
+                    f"{r['step_bound_s']*1e6:.1f},"
+                    f"{b['step_bound_s']/r['step_bound_s']:.1f}x_vs_baseline"
+                )
+    Path("artifacts").mkdir(exist_ok=True)
+    Path("artifacts/roofline.json").write_text(json.dumps(out_rows, indent=1))
+    return out_rows

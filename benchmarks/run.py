@@ -1,0 +1,33 @@
+"""Benchmark harness entrypoint: one function per paper table/figure + the
+roofline reader. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run              # paper suite + roofline
+  PYTHONPATH=src python -m benchmarks.run --only paper
+  PYTHONPATH=src python -m benchmarks.run --only roofline
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all", choices=["all", "paper", "roofline"])
+    args = ap.parse_args()
+    if args.only in ("all", "paper"):
+        from benchmarks import paper_suite
+
+        paper_suite.run_all()
+    if args.only in ("all", "roofline"):
+        from benchmarks import roofline
+
+        if not list(Path("artifacts/dryrun").glob("*.json")):
+            print("roofline,0,skipped (run repro.launch.dryrun first)")
+        else:
+            roofline.run()
+
+
+if __name__ == "__main__":
+    main()

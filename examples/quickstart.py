@@ -1,0 +1,73 @@
+"""Quickstart: the paper's mdspan API in JAX — every code example from the paper.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (
+    Extents,
+    LayoutLeft,
+    LayoutRight,
+    LayoutSymmetricPacked,
+    LayoutTiledTPU,
+    MdSpan,
+    QuantizedAccessor,
+    all_,
+    dynamic_extent,
+    mdspan,
+    submdspan,
+)
+from repro.core import algorithms as alg
+
+
+def main():
+    # --- paper §Design: interpret memory as a 20x40 matrix -----------------------
+    data = jnp.arange(20 * 40, dtype=jnp.float32)
+    my_matrix = mdspan(data, 20, 40)
+    print("my_matrix(10, 5) =", float(my_matrix(10, 5)))
+
+    # functional operator(): some_matrix(10, 5) += 3.14
+    my_matrix = my_matrix.set((10, 5), my_matrix(10, 5) + 3.14)
+    print("after += 3.14   =", float(my_matrix(10, 5)))
+
+    # static + dynamic extents:  mdspan<float, 20, dynamic_extent>(data, 40)
+    e = Extents.of(20, dynamic_extent)(40)
+    print("extents:", e, "| static_extent(0) =", e.static_extent(0))
+
+    # --- the extent loop from the paper -------------------------------------------
+    # for(row...) for(col...) my_mat(row, col) *= 2.0  ==> layout-generic scale()
+    doubled = alg.scale(my_matrix, 2.0)
+    print("scaled(0, 38) =", float(doubled(0, 38)))
+
+    # --- subspan: 3x4x5x20 tensor, subspan(t, 2, all, pair{2,4}, 0) -> 4x2 --------
+    my_tens = mdspan(jnp.arange(3 * 4 * 5 * 20, dtype=jnp.float32), 3, 4, 5, 20)
+    my_mat = submdspan(my_tens, 2, all_, (2, 4), 0)
+    print("subspan shape:", my_mat.shape, "| my_mat(1, 1) =", float(my_mat(1, 1)))
+
+    # --- layouts: same data, different mappings ------------------------------------
+    x = jnp.arange(6.0).reshape(2, 3)
+    right = MdSpan.from_dense(x, layout=LayoutRight(Extents.fully_dynamic(2, 3)))
+    left = MdSpan.from_dense(x, layout=LayoutLeft(Extents.fully_dynamic(2, 3)))
+    tiled = MdSpan.from_dense(x, layout=LayoutTiledTPU(Extents.fully_dynamic(2, 3), tile=(2, 2)))
+    print("right codomain:", right.codomain().tolist())
+    print("left  codomain:", left.codomain().tolist())
+    print("tiled codomain:", tiled.codomain().tolist(), "(2x2 hardware tiles, padded)")
+
+    # symmetric packed: non-unique layout; scale() takes the contiguous-codomain path
+    sym = MdSpan.from_dense(
+        jnp.array([[1.0, 2.0], [2.0, 5.0]]),
+        layout=LayoutSymmetricPacked(Extents.fully_dynamic(2, 2)),
+    )
+    print("packed triangle:", sym.codomain().tolist(), "->", alg.scale(sym, 10).to_dense().tolist())
+
+    # --- accessors: int8 quantized view ---------------------------------------------
+    qa = QuantizedAccessor(jnp.float32, bits=8, block=8)
+    q = MdSpan.from_dense(jnp.linspace(-1, 1, 32).reshape(4, 8), accessor=qa)
+    print("quantized storage dtype:", q.buffers["q"].dtype, "| q(2, 3) =", float(q(2, 3)))
+    # accessor-aware scale touches ONLY the scales (64x fewer bytes):
+    q2 = alg.scale(q, 2.0)
+    print("scaled via scales only; q2(2,3) =", float(q2(2, 3)))
+
+
+if __name__ == "__main__":
+    main()

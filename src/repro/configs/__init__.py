@@ -1,0 +1,2 @@
+"""Assigned architecture configs (one module per arch) + input-shape definitions."""
+from .shapes import SHAPES, Shape, applicable_shapes, cell_is_applicable

@@ -1,0 +1,38 @@
+"""The assigned input-shape set. Every (arch x shape) pair is one dry-run cell.
+
+train_*   lowers train_step (fwd+bwd+optimizer update)
+prefill_* lowers the prefill forward (logits + populated caches)
+decode_*  / long_* lower serve_step (one new token against a seq_len KV cache)
+
+long_500k requires sub-quadratic attention: runs for ssm/hybrid families only
+(full-attention archs are skipped — see DESIGN.md SS6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_is_applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.is_subquadratic()
+    return True
+
+
+def applicable_shapes(cfg):
+    return [s for n, s in SHAPES.items() if cell_is_applicable(cfg, n)]

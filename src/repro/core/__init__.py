@@ -1,0 +1,56 @@
+"""repro.core — the paper's contribution: mdspan (extents × layout × accessor) in JAX.
+
+Public surface mirrors P0009 where JAX semantics allow; see DESIGN.md §2/§8 for the
+TPU adaptation and documented deviations.
+"""
+from .extents import Extents, dynamic_extent
+from .layouts import (
+    LayoutError,
+    LayoutLeft,
+    LayoutMapping,
+    LayoutRight,
+    LayoutStride,
+    LayoutSymmetricPacked,
+    LayoutTiledTPU,
+)
+from .accessors import (
+    Accessor,
+    AccumulateAccessor,
+    BasicAccessor,
+    BitPackedAccessor,
+    MemorySpace,
+    MemorySpaceAccessor,
+    QuantizedAccessor,
+    RestrictAccessor,
+    require_same_space,
+)
+from .mdspan import MdSpan, mdspan
+from .submdspan import SliceShape, all_, submdspan
+from . import algorithms
+
+__all__ = [
+    "Extents",
+    "dynamic_extent",
+    "LayoutError",
+    "LayoutLeft",
+    "LayoutMapping",
+    "LayoutRight",
+    "LayoutStride",
+    "LayoutSymmetricPacked",
+    "LayoutTiledTPU",
+    "Accessor",
+    "AccumulateAccessor",
+    "BasicAccessor",
+    "BitPackedAccessor",
+    "MemorySpace",
+    "MemorySpaceAccessor",
+    "QuantizedAccessor",
+    "RestrictAccessor",
+    "require_same_space",
+    "MdSpan",
+    "mdspan",
+    "SliceShape",
+    "all_",
+    "submdspan",
+    "algorithms",
+]

@@ -1,0 +1,332 @@
+"""Accessors: the paper's Table II concept, functionally restated for JAX.
+
+C++ signature                      JAX restatement (documented deviation, DESIGN.md §8)
+--------------------------------   ---------------------------------------------------
+A::pointer                         a pytree of buffers (main storage + auxiliaries,
+                                   e.g. quantization scales)
+A::reference (lvalue)              a get/set pair:
+a.access(p, i) -> reference          access(buffers, i) -> value  (read)
+                                     store(buffers, i, v) -> buffers  (functional write)
+a.offset(p, i) -> pointer          offset(buffers, i) -> buffers rebased at i
+A::offset_policy                   offset_policy property (type of the rebased view)
+decay to ordinary pointer          decay(buffers) -> plain jnp codomain array
+
+Accessors implemented:
+  BasicAccessor        the default (std::accessor_basic); identity access
+  RestrictAccessor     identity — XLA IR is alias-free by construction; kept for API
+                       parity with the paper's Fig. 1 (the annotation is subsumed)
+  AccumulateAccessor   TPU-idiomatic analogue of the paper's AtomicAccessor: stores
+                       are sum-combined (scatter-add); safe on NON-unique layouts
+  BitPackedAccessor    bools packed 8-per-byte (the vector<bool> use case, Fig. §)
+  QuantizedAccessor    intN storage + per-block scales, dequantize on access — the
+                       HPC-scale generalization of bit-packing; backs int8 serving
+                       weights and 8-bit optimizer state
+  MemorySpaceAccessor  strong memory-space types (HBM/VMEM/SMEM/HOST) — the paper's
+                       "strong pointer types for heterogeneous memory"; the tag flows
+                       into Pallas BlockSpec memory_space and sharding memory_kind
+
+All access/store implementations are vectorized: ``i`` may be a scalar or an ndarray
+of offsets (gather/scatter semantics), so whole-domain reads cost one gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Accessor:
+    """Base documenting the concept; see module docstring."""
+
+    element_type: Any  # logical dtype exposed to algorithms
+
+    # storage ------------------------------------------------------------------
+    def storage_dtype(self):
+        return self.element_type
+
+    def alloc(self, span_size: int):
+        """Allocate zeroed buffers for a codomain of ``span_size`` elements."""
+        raise NotImplementedError
+
+    def from_codomain(self, dense_codomain):
+        """Encode a plain codomain array (element_type) into buffers."""
+        raise NotImplementedError
+
+    # access -------------------------------------------------------------------
+    def access(self, buffers, i):
+        raise NotImplementedError
+
+    def store(self, buffers, i, value):
+        raise NotImplementedError
+
+    def decay(self, buffers):
+        """Plain jnp array over the codomain (C++: decay to ordinary pointer)."""
+        raise NotImplementedError
+
+    @property
+    def offset_policy(self) -> "Accessor":
+        return self
+
+    def offset(self, buffers, i):
+        """Rebase buffers at offset i (C++ a.offset(p, i)); returns buffers usable
+        with ``self.offset_policy`` such that access(offset(p,i), 0) == access(p,i)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class BasicAccessor(Accessor):
+    element_type: Any = jnp.float32
+
+    def alloc(self, span_size: int):
+        return jnp.zeros((span_size,), dtype=self.element_type)
+
+    def from_codomain(self, dense):
+        return jnp.asarray(dense, dtype=self.element_type)
+
+    def access(self, buffers, i):
+        return buffers[i]
+
+    def store(self, buffers, i, value):
+        return buffers.at[i].set(jnp.asarray(value, dtype=self.element_type))
+
+    def decay(self, buffers):
+        return buffers
+
+    def offset(self, buffers, i):
+        return buffers[i:]
+
+
+@dataclasses.dataclass(frozen=True)
+class RestrictAccessor(BasicAccessor):
+    """Paper Fig. 1. In XLA there is no aliasing to annotate away (functional IR);
+    this accessor exists to keep the concept surface complete and is the identity."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulateAccessor(Accessor):
+    """Stores ACCUMULATE (scatter-add) instead of overwrite.
+
+    TPU adaptation of the paper's AtomicAccessor: the dominant HPC use of atomics is
+    concurrent accumulation; on TPU that is expressed as a sum-combining scatter
+    (unique or non-unique layouts both well-defined) or a cross-replica psum. The
+    linearity law replaces the atomicity law: storing v1 then v2 at the same offset
+    yields +v1+v2 regardless of order.
+    """
+
+    element_type: Any = jnp.float32
+
+    def alloc(self, span_size: int):
+        return jnp.zeros((span_size,), dtype=self.element_type)
+
+    def from_codomain(self, dense):
+        return jnp.asarray(dense, dtype=self.element_type)
+
+    def access(self, buffers, i):
+        return buffers[i]
+
+    def store(self, buffers, i, value):
+        return buffers.at[i].add(jnp.asarray(value, dtype=self.element_type))
+
+    def decay(self, buffers):
+        return buffers
+
+    def offset(self, buffers, i):
+        return buffers[i:]
+
+
+@dataclasses.dataclass(frozen=True)
+class BitPackedAccessor(Accessor):
+    """bool elements packed 8-per-uint8 (paper: the std::vector<bool> use case)."""
+
+    element_type: Any = jnp.bool_
+
+    def storage_dtype(self):
+        return jnp.uint8
+
+    @staticmethod
+    def packed_size(span_size: int) -> int:
+        return -(-span_size // 8)
+
+    def alloc(self, span_size: int):
+        return jnp.zeros((self.packed_size(span_size),), dtype=jnp.uint8)
+
+    def from_codomain(self, dense):
+        dense = jnp.asarray(dense, dtype=jnp.bool_)
+        pad = (-dense.shape[0]) % 8
+        bits = jnp.concatenate([dense, jnp.zeros((pad,), jnp.bool_)]).reshape(-1, 8)
+        weights = (1 << jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+        return (bits.astype(jnp.uint8) * weights).sum(axis=1).astype(jnp.uint8)
+
+    def access(self, buffers, i):
+        byte = buffers[i // 8]
+        return ((byte >> (jnp.asarray(i) % 8).astype(jnp.uint8)) & 1).astype(jnp.bool_)
+
+    def store(self, buffers, i, value):
+        i = jnp.asarray(i)
+        bit = (jnp.asarray(1, jnp.uint8) << (i % 8).astype(jnp.uint8))
+        byte_idx = i // 8
+        cleared = buffers.at[byte_idx].min(buffers[byte_idx] & (~bit))
+        # set-or-clear functionally: clear the bit, then OR value back in
+        cur = buffers[byte_idx]
+        newbyte = jnp.where(
+            jnp.asarray(value, jnp.bool_), cur | bit, cur & (~bit)
+        ).astype(jnp.uint8)
+        del cleared
+        return buffers.at[byte_idx].set(newbyte)
+
+    def decay(self, buffers):
+        weights = (1 << jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+        bits = (buffers[:, None] & weights[None, :]) != 0
+        return bits.reshape(-1)
+
+    def offset(self, buffers, i):
+        if isinstance(i, int) and i % 8 == 0:
+            return buffers[i // 8:]
+        raise TypeError("BitPackedAccessor.offset requires byte-aligned offsets")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedAccessor(Accessor):
+    """intN storage with per-block scales; dequantize on access.
+
+    buffers = {"q": int8[ceil(span/block)*block or span], "scale": f32[nblocks]}
+    For int4, two nibbles per int8 byte.
+
+    ``store`` re-quantizes with the EXISTING block scale (clipped): scales are data
+    statistics computed at encode time (``from_codomain`` / ``quantize``); a scattered
+    functional write cannot cheaply recompute them. This matches how quantized
+    buffers are used in practice (write-once weights / running optimizer state with
+    periodic rescale via ``requantize``).
+    """
+
+    element_type: Any = jnp.float32
+    bits: int = 8
+    block: int = 64
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError("QuantizedAccessor supports bits in {4, 8}")
+
+    def storage_dtype(self):
+        return jnp.int8
+
+    @property
+    def qmax(self) -> int:
+        return 7 if self.bits == 4 else 127
+
+    def _nblocks(self, span: int) -> int:
+        return -(-span // self.block)
+
+    def alloc(self, span_size: int):
+        nb = self._nblocks(span_size)
+        qlen = span_size if self.bits == 8 else -(-span_size // 2)
+        return {
+            "q": jnp.zeros((qlen,), dtype=jnp.int8),
+            "scale": jnp.ones((nb,), dtype=jnp.float32),
+        }
+
+    def from_codomain(self, dense):
+        dense = jnp.asarray(dense, dtype=jnp.float32)
+        span = dense.shape[0]
+        nb = self._nblocks(span)
+        pad = nb * self.block - span
+        padded = jnp.concatenate([dense, jnp.zeros((pad,), jnp.float32)]).reshape(nb, self.block)
+        absmax = jnp.max(jnp.abs(padded), axis=1)
+        scale = jnp.where(absmax > 0, absmax / self.qmax, 1.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(padded / scale[:, None]), -self.qmax, self.qmax).astype(jnp.int8)
+        q = q.reshape(-1)[:span]
+        if self.bits == 4:
+            qpad = (-span) % 2
+            qq = jnp.concatenate([q, jnp.zeros((qpad,), jnp.int8)]).reshape(-1, 2)
+            lo = (qq[:, 0] & 0x0F).astype(jnp.int8)
+            hi = ((qq[:, 1] & 0x0F) << 4).astype(jnp.int8)
+            q = (lo | hi).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    def _load_q(self, buffers, i):
+        if self.bits == 8:
+            return buffers["q"][i].astype(jnp.int8)
+        byte = buffers["q"][jnp.asarray(i) // 2]
+        nib = jnp.where(jnp.asarray(i) % 2 == 0, byte & 0x0F, (byte >> 4) & 0x0F)
+        # sign-extend 4-bit
+        return jnp.where(nib >= 8, nib - 16, nib).astype(jnp.int8)
+
+    def access(self, buffers, i):
+        q = self._load_q(buffers, i).astype(jnp.float32)
+        s = buffers["scale"][jnp.asarray(i) // self.block]
+        return (q * s).astype(self.element_type)
+
+    def store(self, buffers, i, value):
+        s = buffers["scale"][jnp.asarray(i) // self.block]
+        q = jnp.clip(jnp.round(jnp.asarray(value, jnp.float32) / s), -self.qmax, self.qmax).astype(jnp.int8)
+        if self.bits == 8:
+            return {**buffers, "q": buffers["q"].at[i].set(q)}
+        i = jnp.asarray(i)
+        byte_idx = i // 2
+        old = buffers["q"][byte_idx]
+        qn = (q & 0x0F).astype(jnp.int8)
+        new = jnp.where(
+            i % 2 == 0, (old & ~0x0F) | qn, (old & 0x0F) | (qn << 4)
+        ).astype(jnp.int8)
+        return {**buffers, "q": buffers["q"].at[byte_idx].set(new)}
+
+    def span_of(self, buffers) -> int:
+        n = buffers["q"].shape[0]
+        return n if self.bits == 8 else n * 2
+
+    def decay(self, buffers, span=None):
+        span = self.span_of(buffers) if span is None else span
+        return self.access(buffers, jnp.arange(span))
+
+    def offset(self, buffers, i):
+        if isinstance(i, int) and i % self.block == 0 and (self.bits == 8 or i % 2 == 0):
+            qi = i if self.bits == 8 else i // 2
+            return {
+                "q": buffers["q"][qi:],
+                "scale": buffers["scale"][i // self.block:],
+            }
+        raise TypeError("QuantizedAccessor.offset requires block-aligned offsets")
+
+    def requantize(self, buffers, span=None):
+        """Recompute block scales from current contents (periodic optimizer rescale)."""
+        return self.from_codomain(self.decay(buffers, span))
+
+
+class MemorySpace(enum.Enum):
+    """Strong memory-space types (paper: strong pointer types for heterogeneous
+    memory). ANY/HBM/VMEM/SMEM map to Pallas memory spaces; HOST maps to
+    ``memory_kind='pinned_host'`` shardings (optimizer-state offload)."""
+
+    ANY = "any"
+    HBM = "hbm"
+    VMEM = "vmem"
+    SMEM = "smem"
+    HOST = "host"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySpaceAccessor(BasicAccessor):
+    """BasicAccessor + a strong space tag. Mixing spaces is a trace-time error in
+    algorithms that require same-space operands — the strong-typing safety argument
+    of the paper, enforced by ``require_same_space``."""
+
+    space: MemorySpace = MemorySpace.ANY
+
+    @property
+    def offset_policy(self) -> "Accessor":
+        # Offsetting can break alignment guarantees tied to a space (paper's
+        # over-aligned pointer example): rebased views decay to ANY.
+        if self.space == MemorySpace.VMEM:
+            return MemorySpaceAccessor(self.element_type, MemorySpace.ANY)
+        return self
+
+
+def require_same_space(*accessors: Accessor) -> None:
+    spaces = {
+        a.space for a in accessors if isinstance(a, MemorySpaceAccessor)
+    } - {MemorySpace.ANY}
+    if len(spaces) > 1:
+        raise TypeError(f"operands live in incompatible memory spaces: {spaces}")

@@ -1,0 +1,123 @@
+"""Layout-generic algorithms over MdSpans, with trace-time property gating.
+
+This module reproduces the paper's algorithm-design discussion (§Layout
+abstraction): an algorithm states its layout requirements through the Table I
+property queries and either specializes or rejects **while tracing** — the JAX
+analogue of failing at compile time.
+
+  scale(s, a)   needs every multi-index to alias a distinct offset (is_unique) OR a
+                contiguous codomain it can treat as 1-D (is_contiguous) — the paper's
+                exact example, including why symmetric-packed storage would
+                double-scale off-diagonals under the naive loop.
+  dot(a, b)     needs NO uniqueness (paper's counter-example): reads only.
+  fill / copy / sum / iota — further consumers of the same gates.
+
+Accessor-aware fast paths: scaling a contiguous QuantizedAccessor view multiplies
+only the per-block scales (bytes touched: nblocks, not span) — the abstraction is
+not just zero-overhead but *negative*-overhead where the access path exposes
+structure, which is the paper's deeper argument for accessors as customization
+points.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .accessors import AccumulateAccessor, BasicAccessor, QuantizedAccessor
+from .layouts import LayoutError
+from .mdspan import MdSpan
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise LayoutError(msg)
+
+
+def scale(span: MdSpan, alpha) -> MdSpan:
+    """span *= alpha, layout-generically. Paper §Layout abstraction."""
+    if span.is_contiguous():
+        # Operate on the codomain as a 1-D mdspan (paper's contiguous fast path).
+        acc = span.accessor
+        if isinstance(acc, QuantizedAccessor):
+            # Accessor-aware: scaling commutes with dequantization.
+            bufs = dict(span.buffers)
+            bufs["scale"] = bufs["scale"] * jnp.asarray(alpha, jnp.float32)
+            return span.with_buffers(bufs)
+        if isinstance(acc, (BasicAccessor,)):
+            return span.with_buffers(span.buffers * jnp.asarray(alpha, acc.element_type))
+        # generic contiguous: decay -> scale -> re-encode
+        return span.with_buffers(acc.from_codomain(acc.decay(span.buffers) * alpha))
+    _require(
+        span.is_unique(),
+        "scale() over the index domain requires a unique layout (symmetric-packed "
+        "storage would double-scale off-diagonal entries) or a contiguous codomain",
+    )
+    offs = span.layout.offsets_dense().reshape(-1)
+    vals = span.accessor.access(span.buffers, offs)
+    return span.with_buffers(span.accessor.store(span.buffers, offs, vals * alpha))
+
+
+def fill(span: MdSpan, value) -> MdSpan:
+    if span.is_contiguous():
+        acc = span.accessor
+        codo = jnp.full((span.layout.required_span_size(),), value, acc.element_type)
+        return span.with_buffers(acc.from_codomain(codo))
+    _require(span.is_unique() or True, "")  # fill is idempotent: non-unique is fine
+    offs = span.layout.offsets_dense().reshape(-1)
+    return span.with_buffers(span.accessor.store(span.buffers, offs, value))
+
+
+def copy(dst: MdSpan, src: MdSpan) -> MdSpan:
+    """dst[i...] = src[i...] over the common domain. Needs unique dst."""
+    _require(dst.shape == src.shape, f"shape mismatch {dst.shape} vs {src.shape}")
+    _require(
+        dst.is_unique() or isinstance(dst.accessor, AccumulateAccessor),
+        "copy() into a non-unique layout is ill-defined",
+    )
+    offs = dst.layout.offsets_dense().reshape(-1)
+    vals = src.to_dense().reshape(-1)
+    return dst.with_buffers(dst.accessor.store(dst.buffers, offs, vals))
+
+
+def reduce_sum(span: MdSpan):
+    """Sum over the INDEX DOMAIN (not the codomain): symmetric-packed counts
+    off-diagonals twice, as the math requires. No uniqueness needed (read-only)."""
+    return jnp.sum(span.to_dense())
+
+
+def dot(a: MdSpan, b: MdSpan):
+    """Paper's example of an algorithm with no uniqueness requirement."""
+    _require(a.shape == b.shape, f"shape mismatch {a.shape} vs {b.shape}")
+    return jnp.sum(a.to_dense() * b.to_dense())
+
+
+def matvec(A: MdSpan, x: MdSpan):
+    """y = A @ x, layout-generically (the MatVec benchmark's semantic spec).
+
+    kernels/ops.py overrides this with layout-specialized Pallas kernels; this body
+    is the semantics-only fallback every layout must satisfy.
+    """
+    _require(A.rank == 2 and x.rank == 1, "matvec needs rank-2 A, rank-1 x")
+    _require(A.extent(1) == x.extent(0), "inner extent mismatch")
+    return A.to_dense() @ x.to_dense()
+
+
+def add_into(dst: MdSpan, src: MdSpan) -> MdSpan:
+    """dst += src. For non-unique dst layouts this requires accumulate semantics
+    (the atomic-accessor use case, TPU-adapted)."""
+    _require(dst.shape == src.shape, "shape mismatch")
+    if not dst.is_unique():
+        _require(
+            isinstance(dst.accessor, AccumulateAccessor),
+            "accumulation into a non-unique layout requires AccumulateAccessor "
+            "(the paper's atomic use case)",
+        )
+        # Each codomain slot must receive the sum of ALL domain contributions.
+        offs = dst.layout.offsets_dense().reshape(-1)
+        return dst.with_buffers(
+            dst.accessor.store(dst.buffers, offs, src.to_dense().reshape(-1))
+        )
+    offs = dst.layout.offsets_dense().reshape(-1)
+    cur = dst.accessor.access(dst.buffers, offs)
+    return dst.with_buffers(
+        dst.accessor.store(dst.buffers, offs, cur + src.to_dense().reshape(-1))
+    )

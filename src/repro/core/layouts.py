@@ -1,0 +1,373 @@
+"""LayoutMapping: the paper's Table I concept, traceable in JAX.
+
+A LayoutMapping is a pure function from a multi-index in the extents' domain to a
+scalar offset in the codomain (a flat buffer), carrying queryable algebraic
+properties. Algorithms (core/algorithms.py, kernels/ops.py) interrogate these
+properties **at trace time** and specialize or reject — the JAX analogue of the
+paper's "fail at compile time rather than run time".
+
+Implemented mappings:
+  LayoutRight           row-major (fast-running index right-most)        [paper]
+  LayoutLeft            column-major (fast-running index left-most)      [paper]
+  LayoutStride          arbitrary per-rank strides + base offset (BLAS LD) [paper]
+  LayoutSymmetricPacked upper-triangle packed storage — NON-unique        [paper]
+  LayoutTiledTPU        (8,128)-style hardware tiling with padding — the TPU-native
+                        layout (VREG/MXU aligned); unique, strided per-tile but not
+                        globally strided, non-contiguous when padded     [TPU adaptation]
+
+All ``__call__`` implementations accept Python ints or traced jnp index arrays, so a
+mapping can be used inside jit/pallas kernels and in gather-based generic fallbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .extents import Extents
+
+
+class LayoutError(TypeError):
+    """Raised at trace time when an algorithm cannot support a layout (paper: a
+    failed compile-time constraint)."""
+
+
+class LayoutMapping:
+    """Base class documenting the concept (paper Table I)."""
+
+    extents: Extents
+
+    # -- required observers ---------------------------------------------------
+    def __call__(self, *idx):  # -> offset (int or traced scalar)
+        raise NotImplementedError
+
+    def required_span_size(self) -> int:
+        raise NotImplementedError
+
+    def is_unique(self) -> bool:
+        raise NotImplementedError
+
+    def is_contiguous(self) -> bool:
+        raise NotImplementedError
+
+    def is_strided(self) -> bool:
+        raise NotImplementedError
+
+    def stride(self, r: int) -> int:
+        raise LayoutError(f"{type(self).__name__} is not strided")
+
+    # -- static forms -----------------------------------------------------------
+    @classmethod
+    def is_always_unique(cls) -> bool:
+        return False
+
+    @classmethod
+    def is_always_contiguous(cls) -> bool:
+        return False
+
+    @classmethod
+    def is_always_strided(cls) -> bool:
+        return False
+
+    # -- slicing support (submdspan) ----------------------------------------------
+    def slice_layout(self, starts: Sequence[int], shape_spec) -> "LayoutMapping":
+        """Return the layout of a rectangular sub-view. Default: only defined for
+        strided layouts (LayoutStride result); others must override or reject."""
+        raise LayoutError(
+            f"submdspan of {type(self).__name__} is not defined (not strided)"
+        )
+
+    # -- misc -------------------------------------------------------------------
+    @property
+    def rank(self) -> int:
+        return self.extents.rank
+
+    def offsets_dense(self):
+        """Offsets for the whole domain as an ndarray shaped like the extents.
+
+        Used by generic gather/scatter fallbacks and oracles. O(domain size) —
+        trace-time cheap, runtime is a single gather.
+        """
+        idx = jnp.indices(self.extents.as_shape())
+        if idx.shape[0] == 0:  # rank-0
+            return jnp.zeros((), dtype=jnp.int32)
+        return self(*(idx[r] for r in range(self.extents.rank)))
+
+
+def _row_major_strides(sizes: Tuple[int, ...]) -> Tuple[int, ...]:
+    strides = [1] * len(sizes)
+    for r in range(len(sizes) - 2, -1, -1):
+        strides[r] = strides[r + 1] * sizes[r + 1]
+    return tuple(strides)
+
+
+def _col_major_strides(sizes: Tuple[int, ...]) -> Tuple[int, ...]:
+    strides = [1] * len(sizes)
+    for r in range(1, len(sizes)):
+        strides[r] = strides[r - 1] * sizes[r - 1]
+    return tuple(strides)
+
+
+@dataclasses.dataclass(frozen=True)
+class _StridedBase(LayoutMapping):
+    extents: Extents
+
+    def _strides(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def __call__(self, *idx):
+        strides = self._strides()
+        if len(idx) != len(strides):
+            raise TypeError(f"rank mismatch: {len(idx)} indices for rank {len(strides)}")
+        off = self._base_offset()
+        for i, s in zip(idx, strides):
+            off = off + i * s
+        return off
+
+    def _base_offset(self) -> int:
+        return 0
+
+    def is_unique(self) -> bool:
+        return True
+
+    def is_strided(self) -> bool:
+        return True
+
+    def stride(self, r: int) -> int:
+        return self._strides()[r]
+
+    @classmethod
+    def is_always_unique(cls) -> bool:
+        return True
+
+    @classmethod
+    def is_always_strided(cls) -> bool:
+        return True
+
+    def slice_layout(self, starts, shape_spec):
+        strides = self._strides()
+        base = self._base_offset() + sum(int(s) * int(st) for s, st in zip(starts, strides))
+        kept_strides = tuple(
+            strides[r] for r, keep in enumerate(shape_spec.keep) if keep
+        )
+        return LayoutStride(shape_spec.extents, kept_strides, base)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutRight(_StridedBase):
+    """Row-major; the C++ default and the paper's ``layout_right``."""
+
+    def _strides(self):
+        return _row_major_strides(self.extents.sizes)
+
+    def required_span_size(self) -> int:
+        return self.extents.size()
+
+    def is_contiguous(self) -> bool:
+        return True
+
+    @classmethod
+    def is_always_contiguous(cls) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutLeft(_StridedBase):
+    """Column-major; the paper's ``layout_left`` (Fortran/BLAS default)."""
+
+    def _strides(self):
+        return _col_major_strides(self.extents.sizes)
+
+    def required_span_size(self) -> int:
+        return self.extents.size()
+
+    def is_contiguous(self) -> bool:
+        return True
+
+    @classmethod
+    def is_always_contiguous(cls) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutStride(_StridedBase):
+    """Arbitrary strides + base offset (generalizes BLAS leading-dimension and every
+    rectangular submdspan of a strided layout)."""
+
+    strides: Tuple[int, ...] = ()
+    offset: int = 0
+
+    def __post_init__(self):
+        if len(self.strides) != self.extents.rank:
+            raise TypeError(
+                f"{len(self.strides)} strides for rank-{self.extents.rank} extents"
+            )
+
+    def _strides(self):
+        return self.strides
+
+    def _base_offset(self) -> int:
+        return self.offset
+
+    def required_span_size(self) -> int:
+        if self.extents.size() == 0:
+            return 0
+        last = self.offset
+        for sz, st in zip(self.extents.sizes, self.strides):
+            last += (sz - 1) * st
+        return last + 1
+
+    def is_unique(self) -> bool:
+        # Sufficient check: sorted (|stride|, size) nest like a mixed-radix system.
+        dims = sorted(
+            (abs(st), sz) for st, sz in zip(self.strides, self.extents.sizes) if sz > 1
+        )
+        span = 1
+        for st, sz in dims:
+            if st < span:
+                return False
+            span = st * sz
+        return True
+
+    def is_contiguous(self) -> bool:
+        return self.is_unique() and self.required_span_size() - self.offset == self.extents.size() and self.offset == 0
+
+    @classmethod
+    def is_always_unique(cls) -> bool:
+        return False  # depends on instance strides
+
+    @classmethod
+    def is_always_contiguous(cls) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSymmetricPacked(LayoutMapping):
+    """Upper-triangle packed symmetric layout (paper: xSYMM / UPLO).
+
+    Rank-2 n×n domain stored in n(n+1)/2 slots; (i,j) and (j,i) map to the SAME
+    offset → **is_unique() == False**. Algorithms requiring uniqueness (e.g. `scale`
+    iterating the full domain) must reject this layout at trace time; algorithms
+    generic over contiguous codomains may operate on the packed buffer directly.
+    """
+
+    extents: Extents
+
+    def __post_init__(self):
+        if self.extents.rank != 2 or self.extents.extent(0) != self.extents.extent(1):
+            raise TypeError("LayoutSymmetricPacked requires square rank-2 extents")
+
+    def __call__(self, i, j):
+        lo = jnp.minimum(i, j) if not (isinstance(i, int) and isinstance(j, int)) else min(i, j)
+        hi = jnp.maximum(i, j) if not (isinstance(i, int) and isinstance(j, int)) else max(i, j)
+        # packed upper triangle, row-major over (lo, hi): offset = lo*n - lo(lo-1)/2 + (hi-lo)
+        n = self.extents.extent(0)
+        return lo * n - (lo * (lo - 1)) // 2 + (hi - lo)
+
+    def required_span_size(self) -> int:
+        n = self.extents.extent(0)
+        return n * (n + 1) // 2
+
+    def is_unique(self) -> bool:
+        return self.extents.extent(0) <= 1
+
+    def is_contiguous(self) -> bool:
+        return True  # codomain is exactly [0, n(n+1)/2)
+
+    def is_strided(self) -> bool:
+        return False
+
+    @classmethod
+    def is_always_contiguous(cls) -> bool:
+        return True
+
+
+# Hardware tile shapes per element byte-width (sublane × lane), TPU VREG geometry.
+_TPU_TILE_BY_ITEMSIZE = {4: (8, 128), 2: (16, 128), 1: (32, 128)}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutTiledTPU(LayoutMapping):
+    """TPU-native tiled layout: last two dims blocked into (sublane, lane) tiles.
+
+    This is the adaptation target of the paper's layout abstraction: on TPU the
+    "good" layout is not merely row- vs column-major but *(8,128)-tiled* so that VMEM
+    loads fill vector registers and MXU operands are aligned. Logical (i, j) maps to
+
+        tile = (i // ts) * ceil(J/tl) + (j // tl)
+        offset = tile * ts * tl + (i % ts) * tl + (j % tl)
+
+    Padding tiles at the edges makes the codomain larger than the domain →
+    ``is_contiguous() == False`` unless the extents divide the tile exactly; the map
+    stays unique. It is NOT globally strided (stride between (i,j)->(i,j+1) changes
+    at tile boundaries) → kernels requiring `is_strided` reject it; tile-aware Pallas
+    kernels consume it natively via BlockSpecs.
+
+    Leading dims (rank > 2) are row-major over whole tiled planes.
+    """
+
+    extents: Extents
+    tile: Tuple[int, int] = (8, 128)
+
+    def __post_init__(self):
+        if self.extents.rank < 2:
+            raise TypeError("LayoutTiledTPU requires rank >= 2")
+
+    @staticmethod
+    def for_dtype(extents: Extents, dtype) -> "LayoutTiledTPU":
+        itemsize = jnp.dtype(dtype).itemsize
+        return LayoutTiledTPU(extents, _TPU_TILE_BY_ITEMSIZE.get(itemsize, (8, 128)))
+
+    def _tiles(self):
+        I, J = self.extents.sizes[-2:]
+        ts, tl = self.tile
+        return -(-I // ts), -(-J // tl)  # ceil-div
+
+    def plane_span(self) -> int:
+        ti, tj = self._tiles()
+        return ti * tj * self.tile[0] * self.tile[1]
+
+    def __call__(self, *idx):
+        *lead, i, j = idx
+        ts, tl = self.tile
+        ti, tj = self._tiles()
+        off = (i // ts) * (tj * ts * tl) + (j // tl) * (ts * tl) + (i % ts) * tl + (j % tl)
+        plane = self.plane_span()
+        lead_sizes = self.extents.sizes[:-2]
+        lead_strides = _row_major_strides(lead_sizes) if lead_sizes else ()
+        for l, s in zip(lead, lead_strides):
+            off = off + l * s * plane
+        return off
+
+    def required_span_size(self) -> int:
+        n_planes = 1
+        for s in self.extents.sizes[:-2]:
+            n_planes *= s
+        return n_planes * self.plane_span()
+
+    def is_unique(self) -> bool:
+        return True
+
+    def is_contiguous(self) -> bool:
+        I, J = self.extents.sizes[-2:]
+        return I % self.tile[0] == 0 and J % self.tile[1] == 0
+
+    def is_strided(self) -> bool:
+        # Conservative type-level answer: tile-boundary jumps break global strides
+        # (degenerate single-tile instances are not special-cased).
+        return False
+
+    @classmethod
+    def is_always_unique(cls) -> bool:
+        return True
+
+    def padded_shape(self) -> Tuple[int, ...]:
+        ti, tj = self._tiles()
+        return self.extents.sizes[:-2] + (ti * self.tile[0], tj * self.tile[1])
+
+
+def layout_of_dense(arr_shape: Sequence[int], order: str = "right") -> LayoutMapping:
+    e = Extents.fully_dynamic(*arr_shape)
+    return LayoutRight(e) if order == "right" else LayoutLeft(e)

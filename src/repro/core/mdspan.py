@@ -1,0 +1,232 @@
+"""MdSpan: a non-owning multi-dimensional view = buffers × layout × accessor.
+
+The JAX restatement of ``std::basic_mdspan<T, Extents, Layout, Accessor>``:
+
+  * ``buffers``  — pytree of jax Arrays (the "pointer"; main storage + accessor
+                   auxiliaries such as quantization scales). Non-owning in the JAX
+                   sense: an MdSpan is index arithmetic over buffers whose lifetime
+                   the runtime manages, exactly as C++ mdspan defers ownership.
+  * ``layout``   — LayoutMapping: multi-index → codomain offset (trace-time object).
+  * ``accessor`` — Accessor: (buffers, offset) → value / functional store.
+
+MdSpan is a registered pytree: it passes through jit/grad/vmap/scan transparently,
+with layout+accessor as static aux data — the moral equivalent of them living in the
+C++ *type*. Two MdSpans with different layouts are different "types" to the tracer
+and produce independently-specialized compilations, mirroring template instantiation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .accessors import Accessor, BasicAccessor
+from .extents import Extents
+from .layouts import LayoutMapping, LayoutRight, LayoutError
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MdSpan:
+    buffers: Any
+    layout: LayoutMapping
+    accessor: Accessor
+
+    # -- pytree ------------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.buffers,), (self.layout, self.accessor)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        layout, accessor = aux
+        return cls(children[0], layout, accessor)
+
+    # -- observers ----------------------------------------------------------------
+    @property
+    def extents(self) -> Extents:
+        return self.layout.extents
+
+    @property
+    def rank(self) -> int:
+        return self.extents.rank
+
+    def extent(self, r: int) -> int:
+        return self.extents.extent(r)
+
+    @property
+    def element_type(self):
+        return self.accessor.element_type
+
+    @property
+    def shape(self):
+        return self.extents.as_shape()
+
+    def size(self) -> int:
+        return self.extents.size()
+
+    def is_unique(self) -> bool:
+        return self.layout.is_unique()
+
+    def is_contiguous(self) -> bool:
+        return self.layout.is_contiguous()
+
+    def is_strided(self) -> bool:
+        return self.layout.is_strided()
+
+    def stride(self, r: int) -> int:
+        return self.layout.stride(r)
+
+    # -- element access (the paper's operator()) -----------------------------------
+    def __call__(self, *idx):
+        return self.accessor.access(self.buffers, self.layout(*idx))
+
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return self(*idx)
+
+    def get(self, *idx):
+        return self(*idx)
+
+    def set(self, idx, value) -> "MdSpan":
+        """Functional store: returns a new MdSpan over updated buffers."""
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        new_buffers = self.accessor.store(self.buffers, self.layout(*idx), value)
+        return MdSpan(new_buffers, self.layout, self.accessor)
+
+    # -- whole-view conversion -------------------------------------------------------
+    def to_dense(self):
+        """Materialize the logical array (shape = extents).
+
+        Zero-overhead fast paths (the paper's compile-away requirement): identity
+        layouts become reshapes, column-major becomes a transpose — XLA folds both
+        into layout assignment, so the view costs nothing. Generic layouts fall
+        back to one gather.
+        """
+        from .accessors import BasicAccessor as _BA
+        from .layouts import LayoutLeft as _LL, LayoutRight as _LR, LayoutStride as _LS
+        from .layouts import _row_major_strides
+
+        if isinstance(self.accessor, _BA):
+            if isinstance(self.layout, _LR):
+                return self.buffers.reshape(self.shape)
+            if isinstance(self.layout, _LL):
+                return self.buffers.reshape(self.shape[::-1]).transpose(
+                    tuple(range(self.rank - 1, -1, -1))
+                )
+            if isinstance(self.layout, _LS) and self.layout.strides == _row_major_strides(
+                self.extents.sizes
+            ):
+                # contiguous row-major sub-block (every `all`-suffixed submdspan):
+                # a slice + reshape — no gather, the view costs nothing
+                off = self.layout.offset
+                return jax.lax.slice(
+                    self.buffers, (off,), (off + self.extents.size(),)
+                ).reshape(self.shape)
+        offs = self.layout.offsets_dense()
+        vals = self.accessor.access(self.buffers, offs.reshape(-1))
+        return vals.reshape(self.shape)
+
+    def scatter_from_dense(self, dense) -> "MdSpan":
+        """Functional whole-domain store. Requires a unique layout (trace-time check
+        — the paper's compile-time gating) unless the accessor accumulates."""
+        from .accessors import AccumulateAccessor
+
+        if not self.layout.is_unique() and not isinstance(self.accessor, AccumulateAccessor):
+            raise LayoutError(
+                "whole-domain overwrite of a non-unique layout is ill-defined; "
+                "use an AccumulateAccessor or a unique layout"
+            )
+        offs = self.layout.offsets_dense().reshape(-1)
+        new_buffers = self.accessor.store(
+            self.buffers, offs, jnp.asarray(dense).reshape(-1)
+        )
+        return MdSpan(new_buffers, self.layout, self.accessor)
+
+    def codomain(self):
+        """The flat codomain as a plain array (decayed pointer)."""
+        return self.accessor.decay(self.buffers)
+
+    def with_buffers(self, buffers) -> "MdSpan":
+        return MdSpan(buffers, self.layout, self.accessor)
+
+    # -- constructors --------------------------------------------------------------
+    @staticmethod
+    def from_dense(
+        dense,
+        layout: LayoutMapping | None = None,
+        accessor: Accessor | None = None,
+        static: bool = False,
+    ) -> "MdSpan":
+        """Encode a dense logical array into an MdSpan with the given layout/accessor.
+
+        ``static=True`` marks every extent static (trace-time specializable).
+        """
+        dense = jnp.asarray(dense)
+        ext = (
+            Extents.fully_static(*dense.shape)
+            if static
+            else Extents.fully_dynamic(*dense.shape)
+        )
+        layout = layout if layout is not None else LayoutRight(ext)
+        accessor = accessor if accessor is not None else BasicAccessor(dense.dtype)
+        if layout.extents.as_shape() != dense.shape:
+            raise TypeError(
+                f"layout extents {layout.extents} do not match array shape {dense.shape}"
+            )
+        from .layouts import LayoutLeft as _LL, LayoutRight as _LR
+
+        # zero-overhead encode paths: identity layouts never scatter
+        if isinstance(layout, _LR):
+            codomain = dense.reshape(-1)
+        elif isinstance(layout, _LL):
+            codomain = dense.transpose(tuple(range(dense.ndim - 1, -1, -1))).reshape(-1)
+        else:
+            span = layout.required_span_size()
+            offs = layout.offsets_dense().reshape(-1)
+            codomain = jnp.zeros((span,), dtype=dense.dtype)
+            # Non-unique layouts: later writes win (C++: UB; we pick determinism).
+            codomain = codomain.at[offs].set(dense.reshape(-1).astype(dense.dtype))
+        buffers = accessor.from_codomain(codomain)
+        return MdSpan(buffers, layout, accessor)
+
+    @staticmethod
+    def over(buffer, layout: LayoutMapping, accessor: Accessor | None = None) -> "MdSpan":
+        """View EXISTING storage (the paper's primary use: interpret memory)."""
+        accessor = accessor if accessor is not None else BasicAccessor(
+            buffer.dtype if hasattr(buffer, "dtype") else jnp.float32
+        )
+        return MdSpan(buffer, layout, accessor)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"MdSpan(extents={self.extents}, layout={type(self.layout).__name__}, "
+            f"accessor={type(self.accessor).__name__})"
+        )
+
+
+def mdspan(data, *extent_spec, accessor: Accessor | None = None) -> MdSpan:
+    """The convenience alias mirroring ``std::mdspan<T, E0, E1, ...>(ptr, dyn...)``:
+    interpret a flat buffer as a multi-dimensional entity.
+
+    >>> m = mdspan(buf, 20, dynamic_extent, dyn_sizes=(40,))   # C++ example 1
+    """
+    from .extents import _DynamicExtent
+
+    statics = [e for e in extent_spec if not isinstance(e, _DynamicExtent)]
+    dynamic_needed = sum(isinstance(e, _DynamicExtent) for e in extent_spec)
+    del statics
+    data = jnp.asarray(data)
+    if dynamic_needed:
+        raise TypeError(
+            "pass dynamic sizes by constructing Extents explicitly: "
+            "MdSpan.over(buf, LayoutRight(Extents.of(...)(sizes)))"
+        )
+    ext = Extents.make(extent_spec)
+    if ext.size() > data.size:
+        raise ValueError(f"buffer of {data.size} elements too small for {ext}")
+    acc = accessor if accessor is not None else BasicAccessor(data.dtype)
+    return MdSpan(data.reshape(-1), LayoutRight(ext), acc)

@@ -1,0 +1,89 @@
+"""submdspan — the paper's ``subspan``: arbitrary rectangular slices of an MdSpan.
+
+Slice specifiers (P0009's verbose-but-composable model):
+  * an integer  — fix that rank (rank is dropped from the result)
+  * ``all``     — keep the whole rank (static extent is preserved)
+  * ``(a, b)``  — the half-open range [a, b)  (C++ ``pair{a, b}``; extent becomes
+                  dynamic, matching P0009)
+
+The result SHARES the parent's buffers — a subspan is pure index arithmetic that
+folds into the layout (a ``LayoutStride`` with a base offset). Zero cost: the
+Subspan3D benchmark asserts the optimized HLO of subspan-composed loops is identical
+to direct indexing (paper Figs. 7/8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from .extents import Extents
+from .layouts import LayoutError, LayoutMapping
+from .mdspan import MdSpan
+
+
+class _All:
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):  # pragma: no cover
+        return "all"
+
+
+#: slice-everything sentinel (paper: ``std::full_extent`` / Kokkos ``ALL``)
+all_ = _All()
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceShape:
+    """Resolved slice geometry handed to LayoutMapping.slice_layout."""
+
+    extents: Extents          # extents of the sub-view (kept ranks only)
+    keep: Tuple[bool, ...]    # per-parent-rank: does it survive into the sub-view?
+
+
+def _resolve(spec, parent: Extents):
+    if len(spec) != parent.rank:
+        raise TypeError(f"{len(spec)} slice specifiers for rank-{parent.rank} mdspan")
+    starts, keep, new_statics, new_sizes = [], [], [], []
+    for r, s in enumerate(spec):
+        psize = parent.extent(r)
+        if isinstance(s, _All):
+            starts.append(0)
+            keep.append(True)
+            new_statics.append(parent.static_extent(r))
+            new_sizes.append(psize)
+        elif isinstance(s, tuple) and len(s) == 2:
+            a, b = int(s[0]), int(s[1])
+            if not (0 <= a <= b <= psize):
+                raise IndexError(f"slice ({a},{b}) out of bounds for extent {psize}")
+            starts.append(a)
+            keep.append(True)
+            new_statics.append(None)  # P0009: pair slices yield dynamic extents
+            new_sizes.append(b - a)
+        elif isinstance(s, int):
+            if not (0 <= s < psize) and psize > 0:
+                raise IndexError(f"index {s} out of bounds for extent {psize}")
+            starts.append(int(s))
+            keep.append(False)
+        else:
+            raise TypeError(f"bad slice specifier {s!r}")
+    sub_ext = Extents(tuple(new_statics), tuple(new_sizes))
+    return starts, SliceShape(sub_ext, tuple(keep))
+
+
+def submdspan(span: MdSpan, *spec) -> MdSpan:
+    """Slice an MdSpan. Shares buffers; composes layouts; zero runtime cost."""
+    starts, shape = _resolve(spec, span.extents)
+    try:
+        sub_layout: LayoutMapping = span.layout.slice_layout(starts, shape)
+    except LayoutError:
+        raise
+    # Accessor offset policy (paper Table II): rebasing may change the accessor
+    # type (e.g. alignment-carrying spaces decay). We keep the base offset inside
+    # the layout, so only the *policy* transition applies, not a buffer rebase.
+    accessor = span.accessor.offset_policy
+    return MdSpan(span.buffers, sub_layout, accessor)

@@ -1,0 +1,3 @@
+from .pipeline import BinaryTokenDataset, DataConfig, SyntheticLM, make_pipeline
+
+__all__ = ["BinaryTokenDataset", "DataConfig", "SyntheticLM", "make_pipeline"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers + pure-jnp oracles.
+
+Layout: per-kernel modules (pl.pallas_call + explicit BlockSpec VMEM tiling),
+``ops.py`` as the jit'd dispatching wrapper layer, ``ref.py`` as the oracles.
+Kernels are TPU-targeted and validated in interpret mode on CPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

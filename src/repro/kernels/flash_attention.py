@@ -1,0 +1,268 @@
+"""Flash attention (GQA, causal / local-window / cross) — Pallas TPU kernel.
+
+Layout/accessor integration: q/k/v arrive in the (B, H, T, D) logical domain; the
+kernel's BlockSpecs implement the LayoutTiledTPU schedule (T on sublanes, D on
+lanes, online-softmax streaming over KV blocks so the T×T score matrix never
+exists in memory — the layout-mapping view of flash attention is that the score
+"tensor" has a layout whose codomain is O(T·D), not O(T²)).
+
+Two entry points:
+  flash_attention  — Tq×Tk blocks, causal/window masks, used for prefill.
+  flash_decode     — Tq == 1 (GQA group on sublanes), one-token decode vs a long
+                     KV cache with a traced length/position.
+
+Both validated against ref.attention in interpret mode (tests/test_kernels_attn.py).
+Training uses the differentiable blocked-jnp twin (models/attention.py) — see
+DESIGN.md: dry-run rooflines are computed from the jnp twin so compiled cost
+reflects the algorithm, not the CPU interpreter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import cdiv, pick_block, use_interpret
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    pos_ref,  # (1,) int32: absolute position of q row 0
+    q_ref,    # (1, 1, bq, D)
+    k_ref,    # (1, 1, bk, D)
+    v_ref,    # (1, 1, bk, D)
+    o_ref,    # (1, 1, bq, D)
+    acc_ref,  # scratch (bq, D) f32
+    m_ref,    # scratch (bq, 1) f32
+    l_ref,    # scratch (bq, 1) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bk: int,
+    kv_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = pos_ref[0] + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    live = k_pos < kv_len
+    if causal:
+        live = live & (k_pos <= q_pos)
+    if window is not None:
+        live = live & (k_pos > q_pos - window)
+
+    # Skip fully-masked KV blocks (causal: ki*bk > pos + (qi+1)*bq - 1).
+    run = jnp.asarray(True)
+    if causal:
+        run = (ki * bk) <= (pos_ref[0] + (qi + 1) * bq - 1)
+    if window is not None:
+        run = run & ((ki + 1) * bk - 1 > pos_ref[0] + qi * bq - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D); GQA via Hq % Hkv == 0.
+
+    ``q_offset`` may be a traced scalar (decode/chunked prefill): absolute position
+    of q[..., 0, :] for causal/window masking.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    bq = pick_block(tq, block_q, align=8 if tq >= 8 else 1)
+    bk = pick_block(tk, block_k, align=128 if tk >= 128 else 1)
+    grid = (b, hq, cdiv(tq, bq), cdiv(tk, bk))
+    pos = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (1,))
+
+    kern = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        kv_len=tk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, h, qi, ki: (0,)),
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k, v)
+
+
+def _decode_kernel(
+    pos_ref,  # (1,) int32: current decode position (exclusive cache length - 1)
+    q_ref,    # (1, 1, G, D)
+    k_ref,    # (1, 1, bk, D)
+    v_ref,    # (1, 1, bk, D)
+    o_ref,    # (1, 1, G, D)
+    acc_ref,  # (G, D) f32
+    m_ref,    # (G, 1) f32
+    l_ref,    # (G, 1) f32
+    *,
+    scale: float,
+    bk: int,
+    window: int | None,
+):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    g_sz = q_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (g_sz, bk), 1)
+    live = k_pos <= pos
+    if window is not None:
+        live = live & (k_pos > pos - window)
+
+    run = (ki * bk) <= pos
+    if window is not None:
+        run = run & ((ki + 1) * bk - 1 > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token GQA decode. q: (B, Hq, 1, D); caches: (B, Hkv, S, D); ``pos`` is a
+    traced int32 scalar — the index of the CURRENT token (cache[pos] is valid).
+
+    The GQA group dimension rides the sublanes: q reshaped to (B, Hkv, G, D) so each
+    grid step does a (G × bk) score block per kv head.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, tq, d = q.shape
+    _, hkv, s_len, _ = k_cache.shape
+    assert tq == 1 and hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, d)
+    bk = pick_block(s_len, block_k, align=128 if s_len >= 128 else 1)
+    grid = (b, hkv, cdiv(s_len, bk))
+    pos_arr = jnp.reshape(jnp.asarray(pos, jnp.int32), (1,))
+    kern = functools.partial(_decode_kernel, scale=scale, bk=bk, window=window)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, h, ki: (0,)),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, ki: (bb, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, k_cache, v_cache)
+    return out.reshape(b, hq, 1, d)

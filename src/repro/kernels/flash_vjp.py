@@ -1,0 +1,138 @@
+"""Differentiable blocked flash attention with a hand-written VJP.
+
+jax.grad through an online-softmax scan saves every KV-block's probability matrix
+for the backward pass — O(T²) residuals (measured: ~17 GB/device on the 4k train
+cells). The flash backward identity removes that: save only (q, k, v, out, lse)
+and recompute P per block in the backward:
+
+    P_j   = exp(q·k_jᵀ·s − lse)
+    dV_j  = P_jᵀ·dO
+    dP_j  = dO·v_jᵀ
+    Δ     = rowsum(dO ∘ O)
+    dS_j  = P_j ∘ (dP_j − Δ)
+    dQ   += dS_j·k_j·s ;  dK_j = dS_jᵀ·q·s
+
+Residuals are O(T·D); backward flops ≈ 2.5× forward (the standard flash trade).
+Semantics identical to ref.attention (GQA, causal, local window, q_offset).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _mask_block(tq, bk, ki, block_k, tk, q_offset, causal, window):
+    q_pos = jnp.arange(tq)[:, None] + q_offset
+    k_pos = ki * block_k + jnp.arange(bk)[None, :]
+    live = k_pos < tk
+    if causal:
+        live = live & (k_pos <= q_pos)
+    if window is not None:
+        live = live & (k_pos > q_pos - window)
+    return live
+
+
+def _fwd_impl(q, k, v, q_offset, *, causal, window, scale, block_k):
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    qf = q.astype(jnp.float32) * scale
+    nblk = -(-tk // block_k)
+    pad = nblk * block_k - tk
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kf.reshape(b, hkv, nblk, block_k, d)
+    vb = vf.reshape(b, hkv, nblk, block_k, d)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, ki = blk
+        kj = jnp.repeat(kj, group, axis=1)
+        vj = jnp.repeat(vj, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj)
+        live = _mask_block(tq, block_k, ki, block_k, tk, q_offset, causal, window)
+        s = jnp.where(live[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, tq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, tq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hq, tq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nblk))
+    )
+    l_safe = jnp.where(l == 0, 1.0, l)
+    out = acc / l_safe
+    lse = m[..., 0] + jnp.log(l_safe[..., 0])  # (b, hq, tq)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention_jnp(q, k, v, q_offset, causal=True, window=None, scale=None,
+                        block_k=512):
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    out, _ = _fwd_impl(q, k, v, q_offset, causal=causal, window=window, scale=scale,
+                       block_k=block_k)
+    return out
+
+
+def _fwd(q, k, v, q_offset, causal, window, scale, block_k):
+    scale = scale if scale is not None else 1.0 / np.sqrt(q.shape[-1])
+    out, lse = _fwd_impl(q, k, v, q_offset, causal=causal, window=window, scale=scale,
+                         block_k=block_k)
+    return out, (q, k, v, q_offset, out, lse)
+
+
+def _bwd(causal, window, scale, block_k, res, dout):
+    q, k, v, q_offset, out, lse = res
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    scale_v = scale if scale is not None else 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    of = out.astype(jnp.float32)
+    delta = jnp.sum(do * of, axis=-1, keepdims=True)  # (b,hq,tq,1)
+
+    nblk = -(-tk // block_k)
+    pad = nblk * block_k - tk
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = jnp.moveaxis(kf.reshape(b, hkv, nblk, block_k, d), 2, 0)
+    vb = jnp.moveaxis(vf.reshape(b, hkv, nblk, block_k, d), 2, 0)
+
+    def body(dq, blk):
+        kj, vj, ki = blk  # (b, hkv, bk, d)
+        kjr = jnp.repeat(kj, group, axis=1)
+        vjr = jnp.repeat(vj, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kjr) * scale_v
+        live = _mask_block(tq, block_k, ki, block_k, tk, q_offset, causal, window)
+        # recomputed, not stored; explicit zero where masked (s and lse are both
+        # -1e30 on fully-masked rows, which would otherwise give exp(0) = 1)
+        p = jnp.where(live[None, None], jnp.exp(s - lse[..., None]), 0.0)
+        dv_r = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", do, vjr)
+        ds = p * (dp - delta) * scale_v
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kjr)
+        dk_r = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        # GQA: fold the group axis back onto kv heads
+        dk_j = dk_r.reshape(b, hkv, group, block_k, d).sum(axis=2)
+        dv_j = dv_r.reshape(b, hkv, group, block_k, d).sum(axis=2)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, hq, tq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nblk)))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(b, hkv, nblk * block_k, d)[:, :, :tk]
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(b, hkv, nblk * block_k, d)[:, :, :tk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None
+
+
+flash_attention_jnp.defvjp(_fwd, _bwd)

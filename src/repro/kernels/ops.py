@@ -1,0 +1,284 @@
+"""ops — the jit'd public API over the kernel package, with mdspan-driven dispatch.
+
+This is where the paper's customization points become *dispatch*: the layout and
+accessor of an MdSpan/TensorSpec select the kernel schedule at trace time.
+
+  matmul(x, w)            w may be dense (jnp.dot) or quantized buffers
+                          ({"q","scale"} from quantize_array) → quant_matmul kernel
+                          (or its jnp twin off-TPU).
+  attention(...)          train: differentiable blocked-jnp twin; serve: Pallas
+                          flash kernel on TPU (jnp twin elsewhere so compiled cost
+                          analysis reflects the algorithm, DESIGN.md §2).
+  sum3d/matvec/...        paper-suite entries dispatching on span.layout.
+
+Every kernel has a jnp twin of IDENTICAL semantics; `impl="pallas"|"jnp"|"auto"`
+overrides for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accessors import QuantizedAccessor
+from repro.core.distributed import dequantize_array
+from repro.core.layouts import LayoutLeft, LayoutRight
+
+from . import ref
+from .common import use_interpret
+from .flash_attention import flash_attention as _flash_fwd
+from .flash_attention import flash_decode as _flash_decode
+from .matvec import matvec_left, matvec_right
+from .quant_matmul import quant_matmul as _qmm_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+from .stencil3d import stencil3d_pallas
+from .sum3d import sum3d_mdspan
+from .tinymatsum import tinymatsum_dynamic, tinymatsum_static
+
+
+def _want_pallas(impl: str) -> bool:
+    if impl == "pallas":
+        return True
+    if impl == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------------
+# matmul with accessor dispatch
+# ---------------------------------------------------------------------------------
+def matmul(x: jax.Array, w, accessor: Optional[QuantizedAccessor] = None, *, impl: str = "auto"):
+    """x: (..., K); w: dense (K, N) array OR quantized buffers {"q","scale"}.
+
+    Quantized path: scales are per-(K-block, N) as produced by
+    ``quantize_array(wT_blocked...)`` — see models/layers.py:QuantLinear.
+    """
+    if isinstance(w, dict):  # quantized buffers
+        assert accessor is not None
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if _want_pallas(impl):
+            y = _qmm_pallas(x2, w["q"], w["scale"], bits=accessor.bits)
+        else:
+            y = ref.quant_matmul(x2, w["q"], w["scale"], bits=accessor.bits)
+        return y.reshape(*lead, y.shape[-1])
+    return jnp.matmul(x, w)
+
+
+# ---------------------------------------------------------------------------------
+# attention — blocked-jnp twin (differentiable, remat-friendly) + pallas fast path
+# ---------------------------------------------------------------------------------
+def attention_jnp(
+    q, k, v, *, causal=True, window=None, q_offset=0, scale=None, block_k: int = 512
+):
+    """Blocked online-softmax attention in pure jnp — semantics == ref.attention,
+    memory O(Tq·Tk_block). Differentiable; used for train_step and for dry-runs."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    import numpy as np
+
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    nblk = -(-tk // block_k)
+    pad = nblk * block_k - tk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kf = kf.reshape(b, hkv, nblk, block_k, d)
+    vf = vf.reshape(b, hkv, nblk, block_k, d)
+    q_pos = jnp.arange(tq)[:, None] + q_offset
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, ki = blk
+        kb = jnp.repeat(kb, group, axis=1)  # (b, hq, bk, d)
+        vb = jnp.repeat(vb, group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb)
+        k_pos = ki * block_k + jnp.arange(block_k)[None, :]
+        live = k_pos < tk
+        if causal:
+            live = live & (k_pos <= q_pos)
+        if window is not None:
+            live = live & (k_pos > q_pos - window)
+        s = jnp.where(live[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, tq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, tq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hq, tq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.moveaxis(kf, 2, 0), jnp.moveaxis(vf, 2, 0), jnp.arange(nblk)),
+    )
+    return (acc / jnp.where(l == 0, 1.0, l)).astype(q.dtype)
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, scale=None, impl: str = "auto"
+):
+    if _want_pallas(impl):
+        return _flash_fwd(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        )
+    # differentiable flash twin with the hand-written O(T·D)-residual VJP
+    from .flash_vjp import flash_attention_jnp
+
+    return flash_attention_jnp(
+        q, k, v, jnp.asarray(q_offset, jnp.int32), causal, window, scale
+    )
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None, impl: str = "auto"):
+    """One-token GQA decode against a (B, Hkv, S, D) cache; ``pos`` traced."""
+    if _want_pallas(impl):
+        return _flash_decode(q, k_cache, v_cache, pos, window=window, scale=scale)
+    # jnp twin: mask by absolute position (identical semantics to the kernel)
+    return attention_jnp(
+        q, k_cache, v_cache, causal=True, window=window, q_offset=pos, scale=scale
+    )
+
+
+# ---------------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------------
+def ssd_jnp(
+    x, dt, A, B, C, *, chunk=64, initial_state=None, return_final_state=False
+):
+    """Chunked SSD in pure jnp (differentiable twin of the Pallas kernel; same
+    chunked math, scan over chunks)."""
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert t % chunk == 0
+    nc = t // chunk
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2).reshape(b, nc, chunk, h, n)
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2).reshape(b, nc, chunk, h, n)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(S, blk):
+        xq, dtq, Bq, Cq = blk  # (b, Q, h, p), (b, Q, h), (b, Q, h, n) ×2
+        lam = dtq * Af[None, None, :]
+        s = jnp.cumsum(lam, axis=1)  # (b, Q, h)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Cq, S) * jnp.exp(s)[..., None]
+        cb = jnp.einsum("bqhn,buhn->bhqu", Cq, Bq)
+        seg = s[:, :, None, :] - s[:, None, :, :]  # (b, t, u, h)
+        q_ = xq.shape[1]
+        tri = jnp.tril(jnp.ones((q_, q_), jnp.float32))
+        m = (
+            cb
+            * jnp.exp(jnp.minimum(jnp.moveaxis(seg, 3, 1), 0.0))
+            * jnp.moveaxis(dtq, 2, 1)[:, :, None, :]
+            * tri[None, None]
+        )  # (b, h, t, u)
+        y_intra = jnp.einsum("bhtu,buhp->bthp", m, xq)
+        w = jnp.exp(s[:, -1:, :] - s) * dtq  # (b, Q, h)
+        upd = jnp.einsum("bqhp,bqhn->bhpn", xq * w[..., None], Bq)
+        S = S * jnp.exp(s[:, -1])[:, :, None, None] + upd
+        return S, (y_inter + y_intra).astype(x.dtype)
+
+    S0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    Sf, ys = jax.lax.scan(
+        chunk_step,
+        S0,
+        (
+            jnp.moveaxis(xf, 1, 0),
+            jnp.moveaxis(dtf, 1, 0),
+            jnp.moveaxis(Bf, 1, 0),
+            jnp.moveaxis(Cf, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+    if return_final_state:
+        return y, Sf
+    return y
+
+
+def ssd(
+    x, dt, A, B, C, *, chunk=64, initial_state=None, return_final_state=False,
+    impl: str = "auto",
+):
+    if _want_pallas(impl) and B.shape[2] == 1:
+        return _ssd_pallas(
+            x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+            return_final_state=return_final_state,
+        )
+    return ssd_jnp(
+        x, dt, A, B, C, chunk=chunk, initial_state=initial_state,
+        return_final_state=return_final_state,
+    )
+
+
+def ssd_decode_step(state, xt, dtt, A, Bt, Ct):
+    """Single-token SSM state update (decode). state: (b,h,p,n); xt: (b,h,p);
+    dtt: (b,h); Bt/Ct: (b,g,n)."""
+    b, h, p, n = state.shape
+    g = Bt.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bt, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Ct, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    upd = (dtt.astype(jnp.float32)[..., None] * xt.astype(jnp.float32))[..., None] * Bh[:, :, None, :]
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return state, y.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------------
+# paper-suite dispatchers (layout-generic)
+# ---------------------------------------------------------------------------------
+def sum3d(span, *, impl: str = "auto"):
+    from repro.core.mdspan import MdSpan
+
+    if isinstance(span, MdSpan):
+        if _want_pallas(impl) or impl == "pallas":
+            return sum3d_mdspan(span)
+        return ref.sum3d(span.to_dense())
+    return ref.sum3d(span)
+
+
+def matvec(A_span, x, *, impl: str = "auto"):
+    """Layout dispatch: LayoutRight → lane-contraction kernel; LayoutLeft →
+    sublane-contraction kernel (honest schedules for both, paper Fig. 6)."""
+    from repro.core.mdspan import MdSpan
+
+    if not isinstance(A_span, MdSpan):
+        return ref.matvec(A_span, x)
+    if not _want_pallas(impl):
+        return ref.matvec(A_span.to_dense(), x)
+    codo = A_span.codomain()
+    if isinstance(A_span.layout, LayoutRight):
+        return matvec_right(codo.reshape(A_span.shape), x)
+    if isinstance(A_span.layout, LayoutLeft):
+        return matvec_left(codo.reshape(A_span.shape[::-1]), x)
+    return ref.matvec(A_span.to_dense(), x)
+
+
+def tinymatsum(o, s, *, static_extents: bool = True, impl: str = "auto", **kw):
+    if not _want_pallas(impl):
+        return ref.tinymatsum(o, s)
+    if static_extents:
+        return tinymatsum_static(o, s, **kw)
+    return tinymatsum_dynamic(o, s, **kw)
+
+
+def stencil3d(x, *, impl: str = "auto", **kw):
+    if not _want_pallas(impl):
+        return ref.stencil3d(x)
+    return stencil3d_pallas(x, **kw)

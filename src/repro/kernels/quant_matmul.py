@@ -1,0 +1,98 @@
+"""Quantized matmul — the QuantizedAccessor's compute backend (paper: bit-packing
+accessor, generalized to intN + scales for HPC-scale weights).
+
+y = x @ W^T where W is stored OUTPUT-MAJOR, (N, K), as int8 (or nibble-packed int4)
+with per-(row, K-block) f32 scales — exactly the buffers produced by
+``core.distributed.quantize_array(W_T)`` (which blocks the LAST dim). The layout
+choice is itself the paper's point: (N, K) row-major puts the contraction dim K on
+the 128-wide lane axis for BOTH x and W blocks, so the MXU consumes them without
+transposes; the accessor's dequantize runs at the VMEM boundary so HBM traffic is
+the quantized bytes.
+
+BlockSpec scheme: grid (M/bm, N/bn, K/bk) with bk == the quantization block so one
+scale column covers one k-step; accumulator scratch (bm, bn) f32 persists across
+the sequential K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import cdiv, pick_block, use_interpret
+
+
+def _unpack_int4(qv: jax.Array) -> jax.Array:
+    lo = (qv & 0x0F).astype(jnp.int8)
+    hi = ((qv >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
+    hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
+    return jnp.stack([lo, hi], axis=-1).reshape(qv.shape[0], qv.shape[1] * 2)
+
+
+def _qmm_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, bits: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    qv = q_ref[...]  # (bn, bk) int8  |  int4: (bn, bk//2) packed
+    w = _unpack_int4(qv) if bits == 4 else qv.astype(jnp.float32)  # (bn, bk)
+    w = w * s_ref[...]  # (bn, 1) scale column for this k-block
+    # contract K on lanes for both operands: (bm, bk) x (bn, bk) -> (bm, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_matmul(
+    x: jax.Array,
+    q: jax.Array,
+    scale: jax.Array,
+    *,
+    bits: int = 8,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x: (M, K); q: int8 (N, K) or int4-packed (N, K//2); scale: (N, K//qblock).
+
+    qblock (the quantization block along K) is inferred from scale's shape and
+    becomes the kernel's K-step. Returns (M, N) in x.dtype.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    m, k = x.shape
+    n = q.shape[0]
+    kq = q.shape[1] * 2 if bits == 4 else q.shape[1]
+    assert kq == k, (kq, k)
+    nblocks = scale.shape[1]
+    assert scale.shape == (n, nblocks), (scale.shape, n, nblocks)
+    bk = k // nblocks
+    bm = pick_block(m, block_m, align=8 if m >= 8 else 1)
+    bn = pick_block(n, block_n, align=128 if n >= 128 else 1)
+    assert n % bn == 0 and k % bk == 0, (n, bn, k, bk)
+    bk_q = bk // 2 if bits == 4 else bk
+    grid = (cdiv(m, bm), n // bn, k // bk)
+    kern = functools.partial(_qmm_kernel, bits=bits, nk=k // bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bn, bk_q), lambda mi, ni, ki: (ni, ki)),
+            pl.BlockSpec((bn, 1), lambda mi, ni, ki: (ni, ki)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale)

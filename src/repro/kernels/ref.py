@@ -1,0 +1,197 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(tests/test_kernels_*.py sweep shapes & dtypes with assert_allclose). The oracles
+are deliberately naive — readability over speed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- paper benchmark suite ------------------------------------------------------------
+def sum3d(x: jax.Array) -> jax.Array:
+    """Sum of all entries of a 3-D array (paper: Sum3D)."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def stencil3d(x: jax.Array) -> jax.Array:
+    """27-point box stencil, stencil size d=1 (paper: Stencil3D).
+
+    out[i,j,k] = sum_{di,dj,dk in [-1,1]} x[i+di, j+dj, k+dk]  on the interior;
+    boundary entries are 0.
+    """
+    x = x.astype(jnp.float32)
+    out = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x[1:-1, 1:-1, 1:-1])
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for dk in (-1, 0, 1):
+                acc = acc + x[
+                    1 + di : x.shape[0] - 1 + di,
+                    1 + dj : x.shape[1] - 1 + dj,
+                    1 + dk : x.shape[2] - 1 + dk,
+                ]
+    return out.at[1:-1, 1:-1, 1:-1].set(acc).astype(x.dtype)
+
+
+def tinymatsum(o: jax.Array, s: jax.Array) -> jax.Array:
+    """Batched accumulate o += s over (N, J, K) tiny matrices (paper: TinyMatrixSum)."""
+    return (o.astype(jnp.float32) + s.astype(jnp.float32)).astype(o.dtype)
+
+
+def matvec(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x (paper: MatVec)."""
+    return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- LM kernels ------------------------------------------------------------------------
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Multi-head attention oracle with GQA, causal masking and local windows.
+
+    q: (B, Hq, Tq, D); k/v: (B, Hkv, Tk, D). Hq % Hkv == 0 (GQA group = Hq // Hkv).
+    ``q_offset``: absolute position of q[0] (decode: Tq=1, q_offset=pos).
+    ``window``: if set, token i attends to j in (i - window, i].
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(tq)[:, None] + q_offset
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def quant_matmul(x: jax.Array, q: jax.Array, scale: jax.Array, *, bits: int = 8) -> jax.Array:
+    """x @ dequant(W)^T: x (..., K); W output-major: q int8 (N, K) (int4: (N, K//2)
+    nibble-packed), scale (N, K // block) per-(row, K-block) scales."""
+    if bits == 4:
+        lo = (q & 0x0F).astype(jnp.int8)
+        hi = ((q >> 4) & 0x0F).astype(jnp.int8)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=-1).reshape(q.shape[0], q.shape[1] * 2)
+    n, k = q.shape
+    nb = scale.shape[1]
+    blk = k // nb
+    w = q.astype(jnp.float32).reshape(n, nb, blk) * scale[:, :, None]
+    w = w.reshape(n, k)
+    return (x.astype(jnp.float32) @ w.T).astype(x.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 64,
+    initial_state: jax.Array | None = None,
+    return_final_state: bool = False,
+):
+    """Mamba-2 SSD (state-space dual) oracle — sequential-over-time reference.
+
+    x: (b, t, h, p)   inputs per head
+    dt: (b, t, h)     softplus-activated step sizes (already positive)
+    A: (h,)           negative state decay per head (a_t = exp(dt * A))
+    B: (b, t, g, n)   input projection (g groups broadcast over heads)
+    C: (b, t, g, n)   output projection
+    returns y: (b, t, h, p) [and final state (b, h, p, n)]
+
+    h % g == 0; heads in the same group share B/C.
+    """
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)  # (b,t,h,n)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * Af[None, :])[..., None, None]  # (b,h,1,1)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, :, None, :]  # (b,h,p,n)
+        state = state * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def rglru(
+    x: jax.Array, input_gate: jax.Array, a_gate: jax.Array, a_param: jax.Array,
+    *, initial_state: jax.Array | None = None, return_final_state: bool = False,
+    c: float = 8.0,
+):
+    """RG-LRU oracle (RecurrentGemma eq. 1-4), sequential reference.
+
+    x, input_gate, a_gate: (b, t, w); a_param: (w,) pre-softplus recurrence param.
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(a_param) * sigmoid(a_gate_t)).
+    """
+    xf = x.astype(jnp.float32)
+    it = jax.nn.sigmoid(input_gate.astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(a_param.astype(jnp.float32))[None, None, :] * jax.nn.sigmoid(
+        a_gate.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    gated = it * xf
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+
+    def step(h, inp):
+        at, gt, mt = inp
+        h = at * h + mt * gt
+        return h, h
+
+    h0 = (
+        jnp.zeros_like(xf[:, 0])
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    final, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0), jnp.moveaxis(mult, 1, 0))
+    )
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    if return_final_state:
+        return y, final
+    return y

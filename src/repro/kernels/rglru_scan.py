@@ -1,0 +1,94 @@
+"""RG-LRU gated linear recurrence — Pallas TPU kernel (recurrentgemma's temporal mix).
+
+h_t = a_t ⊙ h_{t-1} + b_t, carried across sequence chunks in VMEM scratch (the
+same sequential-grid state pattern as ssd_scan). Within a chunk the recurrence is
+inherently sequential in t but fully vector-parallel across the width W — a
+`fori_loop` of W-wide VPU FMAs, which is exactly the hardware shape of the op.
+Gate/decay computation (a = exp(-c·softplus(Λ)·σ(gate)), b = √(1-a²)·σ(i)·x)
+happens OUTSIDE the kernel (it is embarrassingly parallel and XLA-fusable); the
+kernel owns only the stateful part.
+
+Validated against ref.rglru / the associative-scan twin in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import use_interpret
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hf_ref, state_ref, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (Q, W)
+    b = b_ref[0].astype(jnp.float32)
+    q = a.shape[0]
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + b[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, q, step, state_ref[...][0])
+    state_ref[...] = h[None]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hf_ref[0] = state_ref[...][0]
+
+
+def rglru_scan(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,
+    return_final_state: bool = False,
+    interpret: bool | None = None,
+):
+    """a, b: (B, T, W) precomputed decay/input terms; returns h: (B, T, W).
+
+    T must divide by ``chunk`` (ops-level padding handles ragged tails).
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    bsz, t, w = a.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    h0 = (
+        jnp.zeros((bsz, w), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    kern = functools.partial(_rglru_kernel, nc=nc)
+    y, hf = pl.pallas_call(
+        kern,
+        grid=(bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, w), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, chunk, w), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, w), lambda bb, ci: (bb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, w), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, w), lambda bb, ci: (bb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(a.shape, a.dtype),
+            jax.ShapeDtypeStruct((bsz, w), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    if return_final_state:
+        return y, hf
+    return y

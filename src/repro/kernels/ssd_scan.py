@@ -1,0 +1,137 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The SSD insight: the SSM recurrence S_t = a_t S_{t-1} + dt_t x_t B_t^T factorizes
+into (i) an intra-chunk part that is a masked-decay attention-like matmul (MXU
+food) and (ii) an inter-chunk part that is a short recurrence over chunk states.
+The kernel runs the chunk grid SEQUENTIALLY per batch element, carrying the
+(H, P, N) state in VMEM scratch — the TPU-native replacement for the paper-adjacent
+GPU implementation's warp-level scan: the systolic MXU does the within-chunk work,
+the sequential grid does the across-chunk work, and nothing O(T^2) ever exists.
+
+Math (per head h; a_t = exp(dt_t * A_h), s_t = cumsum(dt * A)):
+  y_t      = C_t . S_t
+           = exp(s_t) * (C_t . S_0)                       [inter-chunk]
+           + sum_{u<=t} exp(s_t - s_u) dt_u (C_t.B_u) x_u  [intra-chunk, masked matmul]
+  S_chunk  = exp(s_Q) S_0 + sum_u exp(s_Q - s_u) dt_u x_u B_u^T
+
+ngroups == 1 (mamba2-780m's configuration); general G handled by the oracle and
+the jnp twin in models/ssm.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import cdiv, use_interpret
+
+
+def _ssd_kernel(
+    x_ref,      # (1, Q, H, P)
+    dt_ref,     # (1, Q, H)
+    a_ref,      # (H,)
+    b_ref,      # (1, Q, N)
+    c_ref,      # (1, Q, N)
+    s0_ref,     # (1, H, P, N) initial state
+    y_ref,      # out (1, Q, H, P)
+    sf_ref,     # out (1, H, P, N) final state
+    state_ref,  # scratch (H, P, N) f32
+    *,
+    nc: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)      # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (Q, H)
+    A = a_ref[...].astype(jnp.float32)    # (H,)
+    Bm = b_ref[0].astype(jnp.float32)     # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)     # (Q, N)
+    S0 = state_ref[...]                   # (H, P, N)
+
+    q = x.shape[0]
+    lam = dt * A[None, :]                 # (Q, H), negative
+    s = jnp.cumsum(lam, axis=0)           # (Q, H)
+
+    # inter-chunk: y_inter[t, h, p] = exp(s[t,h]) * sum_n C[t,n] S0[h,p,n]
+    y_inter = jnp.einsum("qn,hpn->qhp", Cm, S0) * jnp.exp(s)[:, :, None]
+
+    # intra-chunk: M[h, t, u] = (C_t.B_u) exp(s_t - s_u) dt_u for u <= t
+    cb = jnp.einsum("qn,un->qu", Cm, Bm)  # (Q, Q)
+    seg = s[:, None, :] - s[None, :, :]   # (t, u, H)
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+    m = cb[:, :, None] * jnp.exp(jnp.minimum(seg, 0.0)) * dt[None, :, :] * tri[:, :, None]
+    y_intra = jnp.einsum("tuh,uhp->thp", m, x)
+
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update: S = exp(s_Q) S0 + sum_u exp(s_Q - s_u) dt_u x_u B_u^T
+    decay_all = jnp.exp(s[-1])            # (H,)
+    w = jnp.exp(s[-1][None, :] - s) * dt  # (Q, H)
+    upd = jnp.einsum("qhp,qn->hpn", x * w[:, :, None], Bm)
+    state_ref[...] = S0 * decay_all[:, None, None] + upd
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sf_ref[0] = state_ref[...]
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 64,
+    initial_state: jax.Array | None = None,
+    return_final_state: bool = False,
+    interpret: bool | None = None,
+):
+    """x: (b, t, h, p); dt: (b, t, h); A: (h,); B/C: (b, t, 1, n) (ngroups == 1).
+
+    t must divide by ``chunk`` (ops-level padding handles ragged tails).
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    assert B.shape[2] == 1 and C.shape[2] == 1, "pallas ssd_scan supports ngroups=1"
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    kern = functools.partial(_ssd_kernel, nc=nc)
+    y, sf = pl.pallas_call(
+        kern,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bb, ci: (bb, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, h), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((h,), lambda bb, ci: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bb, ci: (bb, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, h, p), lambda bb, ci: (bb, ci, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda bb, ci: (bb, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B.squeeze(2), C.squeeze(2), s0)
+    if return_final_state:
+        return y, sf
+    return y

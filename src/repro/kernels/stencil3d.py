@@ -1,0 +1,82 @@
+"""Stencil3D — 27-point box stencil (paper: Stencil3D, stencil size d=1).
+
+Halo handling without overlapping BlockSpecs: the row-block arrives three times
+under shifted index_maps (previous / current / next block of rows), and the kernel
+assembles the 3-row window locally. All j/k shifts happen inside the VMEM block.
+Boundary output rows are zeroed (oracle semantics in ref.stencil3d).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pick_block, use_interpret
+
+
+def _shift_sum_jk(plane_3rows: jax.Array) -> jax.Array:
+    """Given rows (3, J, K) f32, return (J, K) = sum over the 27 neighbors for the
+    middle row, with j/k boundaries producing values that the caller masks."""
+    acc = jnp.zeros(plane_3rows.shape[1:], jnp.float32)
+    padded = jnp.pad(plane_3rows, ((0, 0), (1, 1), (1, 1)))
+    j, k = plane_3rows.shape[1:]
+    for di in range(3):
+        for dj in range(3):
+            for dk in range(3):
+                acc = acc + padded[di, dj : dj + j, dk : dk + k]
+    return acc
+
+
+def _stencil_kernel(prev_ref, cur_ref, nxt_ref, o_ref, *, rows_total: int):
+    br = cur_ref.shape[0]
+    g = pl.program_id(0)
+    cur = cur_ref[...].astype(jnp.float32)
+    prev = prev_ref[...].astype(jnp.float32)
+    nxt = nxt_ref[...].astype(jnp.float32)
+    # Window rows: [prev_last, cur..., nxt_first]; for interior blocks prev/nxt are
+    # the physically adjacent blocks (index_map clamps at the ends; the clamped
+    # rows only feed masked-out boundary outputs).
+    win = jnp.concatenate([prev[-1:], cur, nxt[:1]], axis=0)  # (br+2, J, K)
+    j, k = cur.shape[1:]
+    out = jnp.zeros((br, j, k), jnp.float32)
+    for r in range(br):
+        out = out.at[r].set(_shift_sum_jk(win[r : r + 3]))
+    # mask: global row 0 and rows_total-1, plus j/k boundaries
+    grow = g * br + jax.lax.broadcasted_iota(jnp.int32, (br, j, k), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (br, j, k), 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (br, j, k), 2)
+    interior = (
+        (grow > 0)
+        & (grow < rows_total - 1)
+        & (jj > 0)
+        & (jj < j - 1)
+        & (kk > 0)
+        & (kk < k - 1)
+    )
+    o_ref[...] = jnp.where(interior, out, 0.0).astype(o_ref.dtype)
+
+
+def stencil3d_pallas(x: jax.Array, *, block_rows: int = 8, interpret: bool | None = None) -> jax.Array:
+    interpret = use_interpret() if interpret is None else interpret
+    i, j, k = x.shape
+    if i < 3:
+        return jnp.zeros_like(x)
+    br = pick_block(i, block_rows)
+    if i % br != 0:  # keep the index shift logic simple: require divisibility
+        br = next(b for b in range(br, 0, -1) if i % b == 0)
+    grid = (i // br,)
+    import functools
+
+    kern = functools.partial(_stencil_kernel, rows_total=i)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, j, k), lambda g: (jnp.maximum(g - 1, 0), 0, 0)),
+            pl.BlockSpec((br, j, k), lambda g: (g, 0, 0)),
+            pl.BlockSpec((br, j, k), lambda g: (jnp.minimum(g + 1, pl.num_programs(0) - 1), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, j, k), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((i, j, k), x.dtype),
+        interpret=interpret,
+    )(x, x, x)

@@ -1,0 +1,416 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell, record
+memory/cost/collective analyses for the roofline (EXPERIMENTS.md §Dry-run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k
+
+The FIRST two lines below must run before ANY other import (jax locks the device
+count on first init); smoke tests and benches must NOT import this module.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.shapes import SHAPES, cell_is_applicable
+from repro.core.distributed import tree_shape_structs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import rules_for
+from repro.models import ARCH_IDS, build_model, count_params, get_config
+from repro.optim import AdamWConfig
+from repro.serving import make_serve_step
+from repro.train import TrainProfile, make_train_step
+
+# ------------------------------------------------------------------------------------
+# per-arch training profiles (microbatching & 8-bit optimizer state where memory
+# demands it — see DESIGN.md §3 and the roofline notes)
+# ------------------------------------------------------------------------------------
+TRAIN_PROFILES = {
+    "kimi-k2-1t-a32b": dict(
+        opt=AdamWConfig(int8_state=True, state_block=64),
+        profile=TrainProfile(num_microbatches=8, accum_dtype=jnp.bfloat16),
+    ),
+    "llama-3.2-vision-90b": dict(
+        opt=AdamWConfig(), profile=TrainProfile(num_microbatches=8)
+    ),
+    "dbrx-132b": dict(
+        opt=AdamWConfig(int8_state=True, state_block=64),
+        profile=TrainProfile(num_microbatches=4),
+    ),
+    "_default": dict(opt=AdamWConfig(), profile=TrainProfile(num_microbatches=1)),
+}
+
+
+def train_profile_for(arch: str):
+    d = TRAIN_PROFILES.get(arch, TRAIN_PROFILES["_default"])
+    return d["opt"], d["profile"]
+
+
+# ------------------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable, no alloc)
+# ------------------------------------------------------------------------------------
+def input_specs(cfg, shape, mesh, rules):
+    """Model inputs for one cell as sharded ShapeDtypeStructs."""
+    bsh = rules.sharding(("batch", None), (shape.batch, shape.seq), mesh)
+    specs = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((shape.batch, shape.seq + 1), jnp.int32, sharding=bsh)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32, sharding=bsh)
+    else:  # decode
+        tsh = rules.sharding(("batch",), (shape.batch,), mesh)
+        specs["tokens"] = jax.ShapeDtypeStruct((shape.batch,), jnp.int32, sharding=tsh)
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, PartitionSpec()))
+    if cfg.family == "encdec" and shape.kind != "decode":
+        fsh = rules.sharding(("batch", None, None), (shape.batch, cfg.enc_seq, cfg.d_model), mesh)
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (shape.batch, cfg.enc_seq, cfg.d_model), cfg.param_dtype, sharding=fsh
+        )
+    if cfg.family == "vlm" and shape.kind != "decode":
+        ish = rules.sharding(("batch", None, None), (shape.batch, cfg.n_img_tokens, cfg.d_model), mesh)
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (shape.batch, cfg.n_img_tokens, cfg.d_model), cfg.param_dtype, sharding=ish
+        )
+    return specs
+
+
+# ------------------------------------------------------------------------------------
+# collective-bytes extraction from post-SPMD HLO
+# ------------------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RX = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RX = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUPS_RX = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RX = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RX.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RX.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RX.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return world
+
+
+# per-device bytes moved over links, ring-algorithm estimates
+_RING_FACTOR = {
+    "all-gather": lambda n: n - 1,          # operand is the local shard
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1,
+}
+
+
+def collective_stats(hlo_text: str, world: int):
+    """Per-op collective stats + a TPU-corrected total.
+
+    Correction: XLA:CPU legalizes bf16 dots to f32 and places the convert AFTER
+    the collective, so activation all-reduces appear at 2x their TPU volume
+    (verified with a minimal sharded bf16 matmul — EXPERIMENTS.md §Methodology).
+    ``moved_bytes_tpu`` halves the f32 collective volume to model the bf16-native
+    TPU lowering; both raw and corrected totals are recorded.
+    """
+    per_op = {k: {"count": 0, "result_bytes": 0, "moved_bytes": 0.0} for k in _COLL_OPS}
+    f32_moved = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RX.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if f" {op}(" not in line and f" {op}-start(" not in line:
+            # op name also matches -start/-done variants; count starts only
+            if f"{op}-done" in line:
+                continue
+        rb = _shape_bytes(type_str)
+        n = max(_group_size(line, world), 1)
+        if op == "all-gather":
+            # operand bytes = result / n; moved = operand * (n-1) ≈ result*(n-1)/n
+            moved = rb * (n - 1) / n
+        else:
+            moved = rb * _RING_FACTOR[op](n)
+        d = per_op[op]
+        d["count"] += 1
+        d["result_bytes"] += rb
+        d["moved_bytes"] += moved
+        if "f32[" in type_str:
+            f32_moved += moved
+    total_moved = sum(d["moved_bytes"] for d in per_op.values())
+    return {
+        "per_op": per_op,
+        "moved_bytes_per_device": total_moved,
+        "moved_bytes_f32": f32_moved,
+        "moved_bytes_tpu": total_moved - f32_moved / 2,
+    }
+
+
+# ------------------------------------------------------------------------------------
+# depth probes: XLA cost analysis counts while-loop (lax.scan) bodies ONCE, so the
+# full-module numbers undercount layer compute by ~L×. We compile two UNROLLED
+# shallow probes (1 and 2 depth units), fit  metric(L) = a + L·b,  and extrapolate
+# to the true depth. Memory analysis comes from the FULL compile (buffer assignment
+# is exact); flops/bytes/collectives come from the probes.
+# ------------------------------------------------------------------------------------
+def cfg_with_depth_units(cfg, units: int):
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=len(cfg.pattern) * units)
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, n_layers=5 * units)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=units, n_enc_layers=units)
+    return dataclasses.replace(cfg, n_layers=units)
+
+
+def depth_units(cfg) -> float:
+    if cfg.family == "hybrid":
+        return cfg.n_layers / len(cfg.pattern)  # fractional remainder approximated
+    if cfg.family == "vlm":
+        return cfg.n_layers / 5
+    return float(cfg.n_layers)
+
+
+# ------------------------------------------------------------------------------------
+# cell lowering
+# ------------------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, *, seq_shard: bool = False,
+               remat_policy=None, extra_rules=None, cfg_override=None,
+               force_single_microbatch: bool = False, quantized: bool = False):
+    """Returns (jitted_fn, example_args_structs) for one cell."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    quantized = quantized and shape.kind != "train"
+    rules = rules_for(cfg, shape.kind, seq_shard=seq_shard, quantized=quantized)
+    if extra_rules:
+        rules = dataclasses.replace(rules, rules={**rules.rules, **extra_rules})
+    model = build_model(cfg, quantized=quantized)
+
+    if shape.kind == "train":
+        opt, profile = train_profile_for(arch)
+        if remat_policy is not None:
+            profile = dataclasses.replace(profile, remat_policy=remat_policy)
+        if force_single_microbatch:
+            profile = dataclasses.replace(profile, num_microbatches=1)
+        step, pspecs, sspecs = make_train_step(model, opt, profile, mesh=mesh, rules=rules)
+        params = tree_shape_structs(pspecs, mesh, rules)
+        opt_state = tree_shape_structs(sspecs, mesh, rules)
+        batch = input_specs(cfg, shape, mesh, rules)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (params, opt_state, batch)
+
+    if shape.kind == "prefill":
+        from repro.serving import make_prefill
+
+        prefill = make_prefill(model, mesh=mesh, rules=rules, max_len=shape.seq)
+        pspecs = model.param_specs()
+        params = tree_shape_structs(pspecs, mesh, rules)
+        specs = input_specs(cfg, shape, mesh, rules)
+        tokens = specs.pop("tokens")
+        binputs = specs if specs else None
+
+        def fn(params, tokens, binputs=None):
+            return prefill(params, tokens, binputs)
+
+        return jax.jit(fn), (params, tokens, binputs)
+
+    # decode
+    serve = make_serve_step(model, mesh=mesh, rules=rules)
+    pspecs = model.param_specs()
+    params = tree_shape_structs(pspecs, mesh, rules)
+    cache_specs = model.cache_specs(shape.batch, shape.seq)
+    caches = tree_shape_structs(cache_specs, mesh, rules)
+    specs = input_specs(cfg, shape, mesh, rules)
+    fn = jax.jit(serve, donate_argnums=(1,))
+    return fn, (params, caches, specs["tokens"], specs["pos"])
+
+
+def _probe_metrics(arch, shape_name, mesh, world, units, **build_kw):
+    """Compile one UNROLLED shallow variant; return (flops, bytes, coll_moved)."""
+    from repro.models import transformer as tf
+
+    cfg = cfg_with_depth_units(get_config(arch), units)
+    tf.set_scan_unroll(True)
+    try:
+        fn, args = build_cell(
+            arch, shape_name, mesh, cfg_override=cfg,
+            force_single_microbatch=True, **build_kw,
+        )
+        args = [a for a in args if a is not None]
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    finally:
+        tf.set_scan_unroll(False)
+    cost = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text(), world)
+    return (
+        float(cost.get("flops", 0)),
+        float(cost.get("bytes accessed", 0)),
+        float(coll["moved_bytes_tpu"]),
+    )
+
+
+def extrapolated_metrics(arch, shape_name, mesh, world, **build_kw):
+    """Fit metric(L) = a + L·b from unrolled probes at depth units 1 and 2."""
+    f1, b1, c1 = _probe_metrics(arch, shape_name, mesh, world, 1, **build_kw)
+    f2, b2, c2 = _probe_metrics(arch, shape_name, mesh, world, 2, **build_kw)
+    L = depth_units(get_config(arch))
+
+    def fit(m1, m2):
+        slope = m2 - m1
+        return max(m1 - slope, 0.0) + L * slope
+
+    return {
+        "flops_per_device": fit(f1, f2),
+        "bytes_per_device": fit(b1, b2),
+        "collective_moved_bytes_per_device": fit(c1, c2),
+        "probe": {"units": [1, 2], "flops": [f1, f2], "bytes": [b1, b2], "coll": [c1, c2],
+                  "depth_units": L},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             *, save_hlo: bool = False, tag: str = "", probes: bool = True, **build_kw):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{cell_id}.json"
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag, "ok": False}
+    try:
+        cfg = get_config(arch)
+        if not cell_is_applicable(cfg, shape_name):
+            result.update(ok=True, skipped=True, reason="full-attention arch: long_500k inapplicable")
+            out_path.write_text(json.dumps(result, indent=1))
+            print(f"[dryrun] SKIP {cell_id}")
+            return result
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        world = 512 if multi_pod else 256
+        with mesh:
+            fn, args = build_cell(arch, shape_name, mesh, **build_kw)
+            args = [a for a in args if a is not None]
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            }
+        except Exception as e:  # pragma: no cover
+            mem_d = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo, world)
+        result.update(
+            ok=True,
+            world=world,
+            seconds={"lower": round(t_lower, 1), "compile": round(t_compile, 1)},
+            flops=float(cost.get("flops", -1)),
+            bytes_accessed=float(cost.get("bytes accessed", -1)),
+            cost_keys={k: float(v) for k, v in cost.items() if isinstance(v, (int, float)) and len(k) < 40},
+            memory=mem_d,
+            collectives=coll,
+            params_total=count_params(cfg),
+            params_active=count_params(cfg, active_only=True),
+        )
+        if probes:
+            result["extrapolated"] = extrapolated_metrics(
+                arch, shape_name, mesh, world, **build_kw
+            )
+        if save_hlo:
+            (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+    except Exception as e:
+        result.update(error=str(e)[:2000], traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {cell_id}: {e}")
+    out_path.write_text(json.dumps(result, indent=1))
+    if result.get("ok") and not result.get("skipped"):
+        print(
+            f"[dryrun] OK   {cell_id} compile={result['seconds']['compile']}s "
+            f"flops={result['flops']:.3g} coll={coll['moved_bytes_per_device']:.3g}B"
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--remat-policy", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+                if args.skip_existing and (out_dir / f"{cell}.json").exists():
+                    prev = json.loads((out_dir / f"{cell}.json").read_text())
+                    if prev.get("ok"):
+                        print(f"[dryrun] CACHED {cell}")
+                        continue
+                r = run_cell(
+                    arch, shape, mp, out_dir, save_hlo=args.save_hlo, tag=args.tag,
+                    seq_shard=args.seq_shard, remat_policy=args.remat_policy,
+                    quantized=args.quantized,
+                )
+                n_fail += 0 if r.get("ok") else 1
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Inspect the collectives of a depth-1 probe module: shapes, groups, origin.
+
+Usage: PYTHONPATH=src python -m repro.launch.inspect_colls ARCH SHAPE [--units 1]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import re
+import sys
+
+import jax
+
+from repro.launch.dryrun import (
+    _shape_bytes,
+    build_cell,
+    cfg_with_depth_units,
+    collective_stats,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_config
+from repro.models import transformer as tf
+
+_OP_RX = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\("
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--units", type=int, default=1)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cfg = cfg_with_depth_units(get_config(args.arch), args.units)
+    tf.set_scan_unroll(True)
+    with mesh:
+        fn, cell_args = build_cell(
+            args.arch, args.shape, mesh, cfg_override=cfg,
+            force_single_microbatch=True, seq_shard=args.seq_shard,
+        )
+        cell_args = [a for a in cell_args if a is not None]
+        compiled = fn.lower(*cell_args).compile()
+    hlo = compiled.as_text()
+    rows = []
+    for line in hlo.splitlines():
+        m = _OP_RX.search(line)
+        if not m:
+            continue
+        ty, op = m.group(1), m.group(2)
+        b = _shape_bytes(ty)
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-110:]
+        rows.append((b, op, ty[:60], meta))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"{len(rows)} collectives, total result bytes {total/1e9:.2f} GB")
+    for b, op, ty, meta in rows[: args.top]:
+        print(f"{b/1e9:9.3f}GB {op:18s} {ty:62s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

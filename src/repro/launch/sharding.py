@@ -1,0 +1,94 @@
+"""Per-(arch × shape-kind) sharding policies: logical axis name → mesh axes.
+
+One ShardingRules table IS the parallelism configuration (DESIGN.md §3):
+
+  DP    "batch"/"tokens" → ("pod","data")
+  FSDP  "embed" (the non-TP dim of weight matrices) → ("pod","data"); moments and
+        grads inherit it (adamw moment specs copy the param's logical axes)
+  TP    "heads"/"kv_heads"/"ffn"/"vocab"/"lru"/"ssm_*" → "model"
+  EP    "expert" → "model" (token all-to-all at the dispatch boundary)
+  SP    "seq" → "model" (long-context / activation sharding; off by default)
+  cache "kv_seq" → "model" for serving (caches shard the sequence dim so archs
+        whose kv_heads don't divide the model axis still scale; DUS writes stay
+        shard-local under GSPMD)
+
+Divisibility fallbacks happen inside ShardingRules.binding_for (replicate the
+offending dim), so one table serves all 10 architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.distributed import ShardingRules
+
+BATCH = ("pod", "data")  # binding_for drops absent mesh axes automatically
+
+
+def train_rules(cfg, *, fsdp: bool = True, seq_shard: bool = False) -> ShardingRules:
+    rules: Dict[str, object] = {
+        # data / tokens
+        "batch": BATCH,
+        "tokens": BATCH,
+        "seq": "model" if seq_shard else None,
+        # tensor parallel
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "lru": "model",
+        "lru_gate": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_conv": "model",
+        # expert parallel
+        "expert": "model",
+        "expert_ffn": None,
+        # fsdp (ZeRO-3): shard the non-TP weight dim over the batch axes
+        "embed": BATCH if fsdp else None,
+        # caches (unused in training)
+        "kv_seq": None,
+        "layers": None,
+    }
+    return ShardingRules(rules)
+
+
+def serve_rules(cfg, *, fsdp_params: bool = False) -> ShardingRules:
+    rules: Dict[str, object] = {
+        "batch": BATCH,
+        "tokens": BATCH,
+        "seq": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": None,  # caches shard the seq dim instead (uniform across archs)
+        "kv_seq": "model",
+        "ffn": "model",
+        "lru": "model",
+        "lru_gate": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_conv": "model",
+        "expert": "model",
+        "expert_ffn": None,
+        "embed": BATCH if fsdp_params else None,
+        "layers": None,
+    }
+    return ShardingRules(rules)
+
+
+def needs_fsdp_for_serving(cfg, *, quantized: bool = False) -> bool:
+    """Does TP-16 alone leave >8 GB of weights per chip? (kimi-k2: yes; dbrx only
+    in bf16 — int8 QuantizedAccessor weights fit TP-16 and kill the FSDP gathers,
+    §Perf hillclimb #2)."""
+    from repro.models import count_params
+
+    bytes_per_param = 1.07 if quantized else 2.0  # int8 + per-block f32 scales
+    approx_tp_bytes = count_params(cfg) * bytes_per_param / 16
+    # 16 GB HBM - ~3 GB cache - ~2 GB activations/temp -> ~11 GB weight budget
+    return approx_tp_bytes > 11e9
+
+
+def rules_for(cfg, shape_kind: str, *, seq_shard: bool = False,
+              quantized: bool = False) -> ShardingRules:
+    if shape_kind == "train":
+        return train_rules(cfg, seq_shard=seq_shard)
+    return serve_rules(cfg, fsdp_params=needs_fsdp_for_serving(cfg, quantized=quantized))

@@ -1,0 +1,14 @@
+"""Model zoo: 10 assigned architectures on the TensorSpec (mdspan-descriptor) system."""
+from .config import ModelConfig
+from .registry import ARCH_IDS, build_model, count_params, get_config
+from .transformer import Model, block_program
+
+__all__ = [
+    "ModelConfig",
+    "ARCH_IDS",
+    "build_model",
+    "count_params",
+    "get_config",
+    "Model",
+    "block_program",
+]

@@ -1,0 +1,60 @@
+"""Architecture registry: config lookup, model construction, parameter counting."""
+from __future__ import annotations
+
+import importlib
+import math
+from typing import Dict, Optional
+
+import jax
+
+from repro.core.accessors import QuantizedAccessor
+from repro.core.distributed import is_spec, tree_param_count
+
+from .config import ModelConfig
+from .transformer import Model
+
+ARCH_IDS = [
+    "mamba2-780m",
+    "whisper-large-v3",
+    "dbrx-132b",
+    "kimi-k2-1t-a32b",
+    "granite-8b",
+    "qwen2-0.5b",
+    "qwen2.5-3b",
+    "llama3.2-1b",
+    "llama-3.2-vision-90b",
+    "recurrentgemma-2b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def build_model(cfg: ModelConfig, *, quantized: bool = False) -> Model:
+    quant = (
+        QuantizedAccessor(cfg.param_dtype, bits=8, block=128) if quantized else None
+    )
+    return Model(cfg, quant=quant)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact count from the spec tree; MoE active = routed fraction top_k/E."""
+    model = Model(cfg)
+    specs = model.param_specs()
+    if not active_only or cfg.n_experts == 0:
+        return tree_param_count(specs)
+    total = 0
+    expert_total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(specs, is_leaf=is_spec)[0]:
+        n = math.prod(s.shape)
+        if any(ax == "expert" for ax in s.logical_axes):
+            expert_total += n
+        else:
+            total += n
+    return total + expert_total * cfg.top_k // cfg.n_experts

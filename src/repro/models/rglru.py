@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma/Griffin): conv1d + gated linear recurrence.
+
+Train/prefill run the recurrence as an associative scan (log-depth, TPU-friendly —
+the recurrence h_t = a_t h_{t-1} + b_t is exactly the first-order linear form
+jax.lax.associative_scan composes). Decode is an O(1) state update.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import TensorSpec
+
+from .layers import NULL_SHARDER, Sharder
+
+RG_C = 8.0
+
+
+def rglru_specs(cfg, *, quant=None) -> Dict[str, TensorSpec]:
+    d, w = cfg.d_model, cfg.lru_width
+    dt = cfg.param_dtype
+    return {
+        "w_x": TensorSpec((d, w), ("embed", "lru"), dtype=dt),
+        "w_y": TensorSpec((d, w), ("embed", "lru"), dtype=dt),
+        "conv_w": TensorSpec((cfg.conv_kernel, w), (None, "lru"), dtype=dt, init="fan_in"),
+        "conv_b": TensorSpec((w,), ("lru",), dtype=jnp.float32, init="zeros"),
+        "w_input_gate": TensorSpec((w, w), ("lru", "lru_gate"), dtype=dt),
+        "b_input_gate": TensorSpec((w,), ("lru_gate",), dtype=jnp.float32, init="zeros"),
+        "w_a_gate": TensorSpec((w, w), ("lru", "lru_gate"), dtype=dt),
+        "b_a_gate": TensorSpec((w,), ("lru_gate",), dtype=jnp.float32, init="zeros"),
+        "a_param": TensorSpec((w,), ("lru",), dtype=jnp.float32, init="ones"),
+        "w_out": TensorSpec((w, d), ("lru", "embed"), dtype=dt),
+    }
+
+
+def rglru_cache_specs(cfg, batch: int) -> Dict[str, TensorSpec]:
+    w = cfg.lru_width
+    return {
+        "h": TensorSpec((batch, w), ("batch", "lru"), dtype=jnp.float32, init="zeros"),
+        "conv": TensorSpec(
+            (batch, cfg.conv_kernel - 1, w), ("batch", None, "lru"), dtype=cfg.param_dtype, init="zeros"
+        ),
+    }
+
+
+def _causal_conv(xb, w, b):
+    k = w.shape[0]
+    acc = jnp.zeros_like(xb, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(xb, ((0, 0), (shift, 0), (0, 0)))[:, : xb.shape[1], :]
+        acc = acc + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (acc + b).astype(xb.dtype)
+
+
+def _gates(p, xc):
+    ig = jnp.matmul(xc, p["w_input_gate"].astype(xc.dtype)) + p["b_input_gate"].astype(xc.dtype)
+    ag = jnp.matmul(xc, p["w_a_gate"].astype(xc.dtype)) + p["b_a_gate"].astype(xc.dtype)
+    return ig, ag
+
+
+def _log_a(p, ag):
+    return (
+        -RG_C
+        * jax.nn.softplus(p["a_param"].astype(jnp.float32))[None, None, :]
+        * jax.nn.sigmoid(ag.astype(jnp.float32))
+    )
+
+
+def apply_rglru(
+    cfg, p, x: jax.Array, *, shard: Sharder = NULL_SHARDER,
+    initial_state=None, return_state: bool = False,
+):
+    """x: (B, S, D) -> (B, S, D)."""
+    xb = jnp.matmul(x, p["w_x"].astype(x.dtype))
+    yb = jax.nn.gelu(jnp.matmul(x, p["w_y"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    xb_raw = xb
+    xc = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    ig, ag = _gates(p, xc)
+    a = jnp.exp(_log_a(p, ag))
+    gated = jax.nn.sigmoid(ig.astype(jnp.float32)) * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    if initial_state is not None:
+        # fold h0 into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * initial_state.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = shard(h.astype(x.dtype), "batch", "seq", "lru")
+    out = jnp.matmul(h * yb, p["w_out"].astype(x.dtype))
+    if return_state:
+        conv_state = xb_raw[:, -(cfg.conv_kernel - 1) :, :]
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def apply_rglru_decode(cfg, p, x: jax.Array, cache, pos, *, shard: Sharder = NULL_SHARDER):
+    """x: (B, 1, D); cache {"h": (B, W) f32, "conv": (B, K-1, W)}."""
+    xb = jnp.matmul(x[:, 0], p["w_x"].astype(x.dtype))  # (B, W)
+    yb = jax.nn.gelu(jnp.matmul(x[:, 0], p["w_y"].astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    k = cfg.conv_kernel
+    conv = p["conv_b"].astype(jnp.float32) + xb.astype(jnp.float32) * p["conv_w"][k - 1].astype(jnp.float32)
+    for i in range(k - 1):
+        conv = conv + cache["conv"][:, i].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    new_conv = jnp.concatenate([cache["conv"][:, 1:], xb[:, None].astype(cache["conv"].dtype)], axis=1)
+    xc = conv.astype(x.dtype)
+    ig = jnp.matmul(xc, p["w_input_gate"].astype(xc.dtype)) + p["b_input_gate"].astype(xc.dtype)
+    ag = jnp.matmul(xc, p["w_a_gate"].astype(xc.dtype)) + p["b_a_gate"].astype(xc.dtype)
+    log_a = (
+        -RG_C
+        * jax.nn.softplus(p["a_param"].astype(jnp.float32))[None, :]
+        * jax.nn.sigmoid(ag.astype(jnp.float32))
+    )
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(ig.astype(jnp.float32)) * xc.astype(jnp.float32)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    out = jnp.matmul(h.astype(x.dtype) * yb, p["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,143 @@
+"""Mamba-2 block (SSD): fused in-proj → causal conv → SSD scan → gated norm → out-proj.
+
+Train/prefill use the chunked SSD path (Pallas kernel on TPU, jnp twin elsewhere);
+decode is an O(1)-per-token state update — the property that makes the long_500k
+shape feasible for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import TensorSpec
+from repro.kernels import ops
+
+from .layers import NULL_SHARDER, Sharder, apply_rmsnorm
+
+
+def ssm_specs(cfg, *, quant=None) -> Dict[str, TensorSpec]:
+    d = cfg.d_model
+    di = cfg.ssm_dinner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = cfg.ssm_conv_dim
+    dt = cfg.param_dtype
+    d_in_proj = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": TensorSpec((d, d_in_proj), ("embed", "ssm_inner"), dtype=dt),
+        "conv_w": TensorSpec((cfg.conv_kernel, conv_dim), (None, "ssm_conv"), dtype=dt, init="fan_in"),
+        "conv_b": TensorSpec((conv_dim,), ("ssm_conv",), dtype=jnp.float32, init="zeros"),
+        "A_log": TensorSpec((h,), ("ssm_heads",), dtype=jnp.float32, init="zeros"),
+        "D_skip": TensorSpec((h,), ("ssm_heads",), dtype=jnp.float32, init="ones"),
+        "dt_bias": TensorSpec((h,), ("ssm_heads",), dtype=jnp.float32, init="zeros"),
+        "norm": TensorSpec((di,), ("ssm_inner",), dtype=jnp.float32, init="ones"),
+        "out_proj": TensorSpec((di, d), ("ssm_inner", "embed"), dtype=dt),
+    }
+
+
+def ssm_cache_specs(cfg, batch: int) -> Dict[str, TensorSpec]:
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "state": TensorSpec((batch, h, p, n), ("batch", "ssm_heads", None, None), dtype=jnp.float32, init="zeros"),
+        "conv": TensorSpec(
+            (batch, cfg.conv_kernel - 1, cfg.ssm_conv_dim), ("batch", None, "ssm_conv"), dtype=cfg.param_dtype, init="zeros"
+        ),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.ssm_dinner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel K: y_t = b + sum_i w[i] * x_{t-K+1+i}."""
+    k = w.shape[0]
+    acc = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1], :]
+        acc = acc + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (acc + b).astype(xbc.dtype)
+
+
+def apply_ssm(
+    cfg,
+    p,
+    x: jax.Array,
+    *,
+    shard: Sharder = NULL_SHARDER,
+    initial_state=None,
+    return_state: bool = False,
+):
+    """x: (B, S, D) -> y (B, S, D) [+ final ssm state]."""
+    b, s, d = x.shape
+    di, g, n, h, hd = cfg.ssm_dinner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.matmul(x, p["in_proj"].astype(x.dtype))
+    z, xbc, dtp = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    x_in = xbc[..., :di]
+    Bm = xbc[..., di : di + g * n].reshape(b, s, g, n)
+    Cm = xbc[..., di + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xh = x_in.reshape(b, s, h, hd)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    chunk = min(cfg.ssm_chunk, s) if s % min(cfg.ssm_chunk, s) == 0 else s
+    if s % chunk != 0:
+        chunk = s
+    y, state = ops.ssd(
+        xh, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state,
+        return_final_state=True, impl="jnp",
+    )
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    # mamba2 RMSNormGated: normalize the GATED value
+    y = apply_rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    out = jnp.matmul(y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_state = xbc_raw_tail(cfg, x, p, zxbcdt)
+        return out, {"state": state, "conv": conv_state}
+    return out
+
+
+def xbc_raw_tail(cfg, x, p, zxbcdt):
+    """Last (K-1) PRE-conv xBC rows — the conv state carried into decode."""
+    _, xbc_raw, _ = _split_proj(cfg, zxbcdt)
+    k = cfg.conv_kernel
+    return xbc_raw[:, -(k - 1) :, :]
+
+
+def apply_ssm_decode(cfg, p, x: jax.Array, cache, pos, *, shard: Sharder = NULL_SHARDER):
+    """x: (B, 1, D); cache {"state": (B,H,P,N) f32, "conv": (B,K-1,conv_dim)}."""
+    b, _, d = x.shape
+    di, g, n, h, hd = cfg.ssm_dinner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = jnp.matmul(x[:, 0], p["in_proj"].astype(x.dtype))  # (B, ...)
+    z, xbc_new, dtp = _split_proj(cfg, zxbcdt)
+    k = cfg.conv_kernel
+    # conv over [cache, new]: y = b + sum_{i<k-1} w[i]*cache[i] + w[k-1]*new
+    conv = p["conv_b"].astype(jnp.float32) + xbc_new.astype(jnp.float32) * p["conv_w"][k - 1].astype(jnp.float32)
+    for i in range(k - 1):
+        conv = conv + cache["conv"][:, i].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    new_conv_state = jnp.concatenate(
+        [cache["conv"][:, 1:], xbc_new[:, None].astype(cache["conv"].dtype)], axis=1
+    )
+    xbc = jax.nn.silu(conv).astype(x.dtype)
+    x_in = xbc[..., :di]
+    Bm = xbc[..., di : di + g * n].reshape(b, g, n)
+    Cm = xbc[..., di + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = x_in.reshape(b, h, hd)
+    state, y = ops.ssd_decode_step(cache["state"], xh, dt, A, Bm, Cm)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, di)
+    y = apply_rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"])
+    out = jnp.matmul(y, p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"state": state, "conv": new_conv_state}

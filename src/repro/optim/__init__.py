@@ -1,0 +1,11 @@
+from .adamw import AdamWConfig, adamw_init_specs, adamw_update, clip_by_global_norm
+from .schedules import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init_specs",
+    "adamw_update",
+    "clip_by_global_norm",
+    "constant",
+    "warmup_cosine",
+]

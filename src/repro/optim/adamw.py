@@ -1,0 +1,150 @@
+"""AdamW with optional int8 (QuantizedAccessor) moment storage.
+
+The 8-bit optimizer is the paper's accessor concept applied at cluster scale:
+the m/v moments are mdspans whose accessor is ``QuantizedAccessor(int8, block)``;
+the update dequantizes at the compute boundary and re-encodes (fresh per-block
+scales each step — ``quantize_array``'s blockwise absmax). This is what makes the
+kimi-k2 (1T-param) training cell fit 512 × 16 GB chips (DESIGN.md §3).
+
+Moment TensorSpecs inherit each parameter's logical axes, so optimizer state is
+sharded exactly like its parameter (ZeRO-compatible by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accessors import QuantizedAccessor
+from repro.core.distributed import (
+    TensorSpec,
+    dequantize_array,
+    is_spec,
+    quantize_array,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Union[float, Callable[[jax.Array], jax.Array]] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    int8_state: bool = False
+    state_block: int = 64
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+
+def _moment_spec(pspec: TensorSpec, opt: AdamWConfig) -> TensorSpec:
+    """Moment spec mirrors the parameter's shape/axes; int8-quantized when enabled
+    and the trailing dim is block-divisible (tiny tensors stay f32)."""
+    if (
+        opt.int8_state
+        and pspec.shape
+        and pspec.shape[-1] % opt.state_block == 0
+        and not pspec.is_quantized()
+    ):
+        acc = QuantizedAccessor(jnp.float32, bits=8, block=opt.state_block)
+        return TensorSpec(pspec.shape, pspec.logical_axes, dtype=jnp.float32, init="zeros", accessor=acc)
+    return TensorSpec(pspec.shape, pspec.logical_axes, dtype=jnp.float32, init="zeros")
+
+
+def adamw_init_specs(param_specs, opt: AdamWConfig):
+    """Optimizer-state TensorSpec tree: {"m": ..., "v": ..., "step": scalar}."""
+    m = jax.tree.map(lambda s: _moment_spec(s, opt), param_specs, is_leaf=is_spec)
+    v = jax.tree.map(lambda s: _moment_spec(s, opt), param_specs, is_leaf=is_spec)
+    return {
+        "m": m,
+        "v": v,
+        "step": TensorSpec((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+_V_FLOOR = 1e-12
+_V_SHIFT = 27.631021  # -log(_V_FLOOR): a zero-initialized buffer decodes to v == 0
+
+
+def _decode_moment(buf, spec: TensorSpec, *, log_domain: bool = False):
+    if isinstance(buf, dict):  # quantized
+        val = dequantize_array(buf, spec.accessor)
+        if log_domain:
+            return jnp.maximum(jnp.exp(val - _V_SHIFT) - _V_FLOOR, 0.0)
+        return val
+    return buf
+
+
+def _encode_moment(val, spec: TensorSpec, *, log_domain: bool = False):
+    """int8 moments. m is zero-mean → linear symmetric quantization is fine.
+    v spans orders of magnitude within a block (linear quant zeroes the small
+    entries → the Adam denominator collapses and training diverges — observed,
+    tests/test_optim.py). v is therefore stored in LOG domain: a 0.2-step in
+    log space is a bounded ~20% relative error on v and can never produce 0.
+    """
+    if spec.is_quantized():
+        if log_domain:
+            val = jnp.log(val + _V_FLOOR) + _V_SHIFT  # >= 0; zeros stay zeros
+        return quantize_array(val, spec.accessor)
+    return val
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(params, grads, state, param_specs, state_specs, opt: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    params may be bf16 (they act as the master copy when int8_state is on —
+    documented precision trade-off) — update math is f32 throughout.
+    """
+    step = state["step"] + 1
+    grads, gnorm = (
+        clip_by_global_norm(grads, opt.grad_clip) if opt.grad_clip else (grads, jnp.float32(0))
+    )
+    lr = opt.lr_at(step)
+    b1, b2 = opt.b1, opt.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    p_leaves, treedef = jax.tree.flatten(params, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+    ps_leaves = treedef.flatten_up_to(param_specs)
+    ms_leaves = treedef.flatten_up_to(state_specs["m"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, pspec, mspec in zip(
+        p_leaves, g_leaves, m_leaves, v_leaves, ps_leaves, ms_leaves
+    ):
+        gf = g.astype(jnp.float32)
+        mf = _decode_moment(m, mspec)
+        vf = _decode_moment(v, mspec, log_domain=True)
+        mf = b1 * mf + (1 - b1) * gf
+        vf = b2 * vf + (1 - b2) * gf * gf
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + opt.eps)
+        pf = p.astype(jnp.float32)
+        if opt.weight_decay and pf.ndim >= 2:  # no decay on norms/biases/scalars
+            update = update + opt.weight_decay * pf
+        pf = pf - lr * update
+        new_p.append(pf.astype(p.dtype))
+        new_m.append(_encode_moment(mf, mspec))
+        new_v.append(_encode_moment(vf, mspec, log_domain=True))
+
+    params = jax.tree.unflatten(treedef, new_p)
+    state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    return params, state, {"grad_norm": gnorm, "lr": lr}

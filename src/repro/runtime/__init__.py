@@ -1,0 +1,10 @@
+from .loop import RunConfig, TrainerLoop
+from .health import HeartbeatMonitor, StragglerPolicy, simulate_failure
+
+__all__ = [
+    "RunConfig",
+    "TrainerLoop",
+    "HeartbeatMonitor",
+    "StragglerPolicy",
+    "simulate_failure",
+]

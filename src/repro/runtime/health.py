@@ -1,0 +1,85 @@
+"""Fault-tolerance primitives: heartbeats, straggler detection, failure injection.
+
+On a real multi-host cluster these hooks wrap jax.distributed + the coordinator:
+each host heartbeats; the coordinator declares a host dead after
+``timeout_s`` and the runner re-meshes (ELASTIC path in runtime/loop.py). In this
+single-process container the same state machine runs with simulated reports —
+tests/test_runtime.py drives node-loss and straggler scenarios through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks per-host liveness; declares failure after ``timeout_s`` silence."""
+
+    num_hosts: int
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last_seen: Dict[int, float] = {h: now for h in range(self.num_hosts)}
+
+    def beat(self, host: int, at: Optional[float] = None):
+        self.last_seen[host] = self.clock() if at is None else at
+
+    def dead_hosts(self, at: Optional[float] = None) -> List[int]:
+        now = self.clock() if at is None else at
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]
+
+    def all_alive(self) -> bool:
+        return not self.dead_hosts()
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Step-time based straggler mitigation.
+
+    Keeps an EMA of step wall-time; a step slower than ``threshold``× the EMA
+    marks the step 'straggled'. After ``patience`` consecutive straggles the
+    policy recommends action:
+      * "rebalance" — reshard/re-mesh excluding the slow host (elastic path)
+      * at the data level the runner may also skip the laggard's contribution
+        for one step (bounded-staleness gradient, standard straggler trick).
+    """
+
+    threshold: float = 2.0
+    patience: int = 3
+    ema_decay: float = 0.9
+
+    def __post_init__(self):
+        self.ema: Optional[float] = None
+        self.strikes = 0
+
+    def observe(self, step_time_s: float) -> str:
+        if self.ema is None:
+            self.ema = step_time_s
+            return "ok"
+        slow = step_time_s > self.threshold * self.ema
+        # EMA tracks only non-outlier steps so one straggler can't poison it
+        if not slow:
+            self.ema = self.ema_decay * self.ema + (1 - self.ema_decay) * step_time_s
+            self.strikes = 0
+            return "ok"
+        self.strikes += 1
+        if self.strikes >= self.patience:
+            self.strikes = 0
+            return "rebalance"
+        return "straggle"
+
+
+class simulate_failure:
+    """Context helper for tests: raises the given exception at a chosen step."""
+
+    def __init__(self, at_step: int, exc: Exception | None = None):
+        self.at_step = at_step
+        self.exc = exc or RuntimeError("simulated node failure")
+
+    def maybe_fail(self, step: int):
+        if step == self.at_step:
+            raise self.exc

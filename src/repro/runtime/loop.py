@@ -1,0 +1,183 @@
+"""TrainerLoop: the production run loop — checkpoint/restart, auto-resume,
+heartbeat + straggler hooks, and ELASTIC re-meshing after device loss.
+
+Flow per run():
+  mesh → rules → model → jit(train_step) → [restore latest ckpt] →
+  step loop { data, step, health, ckpt } → on failure: shrink mesh, restore, go on.
+
+Elasticity model: the global batch is invariant; device loss rebuilds the mesh
+over the surviving devices (data axis shrinks), re-jits against the new
+shardings, and reshard-on-load restores the last committed checkpoint. This is
+exactly the multi-host story (coordinator re-forms the job) executed over the
+local device pool, and is driven end-to-end by tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.distributed import tree_initialize, tree_shape_structs
+from repro.data import DataConfig, make_pipeline
+from repro.launch.sharding import train_rules
+from repro.models import build_model, get_config
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.train import TrainProfile, make_train_step
+
+from .health import HeartbeatMonitor, StragglerPolicy
+
+
+@dataclasses.dataclass
+class RunConfig:
+    arch: str = "llama3.2-1b"
+    smoke: bool = True
+    steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    peak_lr: float = 1e-3
+    warmup: int = 20
+    ckpt_dir: str = "checkpoints/run"
+    ckpt_every: int = 25
+    log_every: int = 10
+    model_axis: int = 1
+    seed: int = 0
+    num_microbatches: int = 1
+    int8_opt: bool = False
+    resume: bool = True
+
+
+class TrainerLoop:
+    def __init__(self, run: RunConfig, devices: Optional[List] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.run = run
+        self.devices = devices if devices is not None else list(jax.devices())
+        self.failure_hook = failure_hook
+        self.cfg = get_config(run.arch, smoke=run.smoke)
+        self.model = build_model(self.cfg)
+        self.ckpt = CheckpointManager(run.ckpt_dir, keep=3)
+        self.history: List[Dict[str, float]] = []
+        self.straggler = StragglerPolicy()
+        self._build(self.devices)
+
+    # ------------------------------------------------------------------
+    def _build(self, devices: List):
+        """(Re)build mesh + jitted step for the given device set."""
+        n = len(devices)
+        model_axis = self.run.model_axis
+        assert n % model_axis == 0
+        dp = n // model_axis
+        assert self.run.batch % dp == 0, (self.run.batch, dp)
+        dev_grid = np.array(devices).reshape(dp, model_axis)
+        self.mesh = jax.sharding.Mesh(dev_grid, ("data", "model"))
+        self.rules = train_rules(self.cfg)
+        opt = AdamWConfig(
+            lr=warmup_cosine(self.run.peak_lr, self.run.warmup, self.run.steps),
+            int8_state=self.run.int8_opt,
+        )
+        profile = TrainProfile(num_microbatches=self.run.num_microbatches)
+        step_fn, self.param_specs, self.state_specs = make_train_step(
+            self.model, opt, profile, mesh=self.mesh, rules=self.rules
+        )
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.monitor = HeartbeatMonitor(num_hosts=dp, timeout_s=300)
+
+    def _init_state(self):
+        params = tree_initialize(self.param_specs, jax.random.key(self.run.seed))
+        opt_state = tree_initialize(self.state_specs, jax.random.key(self.run.seed + 1))
+        return self._place(params), self._place(opt_state)
+
+    def _place(self, tree):
+        from repro.core.distributed import tree_shardings
+
+        sh = None
+        try:
+            sh = {
+                "params": tree_shardings(self.param_specs, self.mesh, self.rules),
+                "state": tree_shardings(self.state_specs, self.mesh, self.rules),
+            }
+        except Exception:
+            pass
+        return jax.device_put(tree) if sh is None else tree
+
+    def _targets(self):
+        params_t = tree_shape_structs(self.param_specs, self.mesh, self.rules)
+        state_t = tree_shape_structs(self.state_specs, self.mesh, self.rules)
+        return {"params": params_t, "opt": state_t}
+
+    # ------------------------------------------------------------------
+    def run_loop(self) -> Dict[str, Any]:
+        r = self.run
+        data_cfg = DataConfig(batch=r.batch, seq=r.seq, vocab=self.cfg.vocab, seed=r.seed)
+        start = 0
+        params = opt_state = None
+        if r.resume and self.ckpt.latest() is not None:
+            start = self.ckpt.latest()
+            tgt = self._targets()
+            restored = self.ckpt.restore(start, tgt)
+            params, opt_state = restored["params"], restored["opt"]
+            print(f"[loop] resumed from step {start}")
+        if params is None:
+            params, opt_state = self._init_state()
+
+        pipeline = make_pipeline(data_cfg, start_step=start, prefetch=False)
+        step = start
+        for step, batch in pipeline:
+            if step >= r.steps:
+                break
+            t0 = time.monotonic()
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                loss = float(metrics["loss"])
+            except Exception as e:
+                print(f"[loop] step {step} failed ({e}); elastic restart")
+                params, opt_state, start = self._elastic_restart()
+                pipeline = make_pipeline(data_cfg, start_step=start, prefetch=False)
+                continue
+            dt = time.monotonic() - t0
+            for h in range(self.monitor.num_hosts):
+                self.monitor.beat(h)
+            verdict = self.straggler.observe(dt)
+            if verdict == "rebalance":
+                print(f"[loop] persistent straggler at step {step}; would re-mesh")
+            self.history.append({"step": step, "loss": loss, "time_s": dt})
+            if step % r.log_every == 0:
+                print(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+            if step > 0 and step % r.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+        self.ckpt.save(min(step + 1, r.steps), {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return {"history": self.history, "final_step": min(step + 1, r.steps)}
+
+    # ------------------------------------------------------------------
+    def _elastic_restart(self):
+        """Drop the failed device(s), rebuild mesh/step, restore latest ckpt."""
+        self.failure_hook = None  # the failed node is gone, not failing again
+        survivors = self._surviving_devices()
+        print(f"[loop] re-meshing onto {len(survivors)} devices")
+        self._build(survivors)
+        latest = self.ckpt.latest()
+        if latest is None:
+            params, opt_state = self._init_state()
+            return params, opt_state, 0
+        tgt = self._targets()
+        restored = self.ckpt.restore(latest, tgt)
+        return restored["params"], restored["opt"], latest
+
+    def _surviving_devices(self) -> List:
+        n = len(self.devices)
+        # shrink the data axis by one full model-axis row (a "node")
+        keep = n - self.run.model_axis
+        dp_new = keep // self.run.model_axis
+        while dp_new > 0 and self.run.batch % dp_new != 0:
+            keep -= self.run.model_axis
+            dp_new = keep // self.run.model_axis
+        assert keep >= self.run.model_axis, "no viable surviving mesh"
+        self.devices = self.devices[:keep]
+        return self.devices

@@ -1,0 +1,25 @@
+"""serve_step / prefill factories (batched decode against sharded KV caches)."""
+from __future__ import annotations
+
+from repro.models.layers import Sharder
+
+
+def make_serve_step(model, mesh=None, rules=None):
+    shard = Sharder(mesh, rules)
+
+    def serve_step(params, caches, tokens, pos):
+        """tokens: (B,) int32; pos: int32 scalar -> (logits (B, Vp), new caches)."""
+        return model.decode_step(params, caches, tokens, pos, shard=shard)
+
+    return serve_step
+
+
+def make_prefill(model, mesh=None, rules=None, max_len=None):
+    shard = Sharder(mesh, rules)
+
+    def prefill(params, tokens, batch_inputs=None):
+        return model.prefill(
+            params, tokens, batch_inputs=batch_inputs, shard=shard, max_len=max_len
+        )
+
+    return prefill

@@ -1,0 +1,3 @@
+from .step import TrainProfile, make_train_step
+
+__all__ = ["TrainProfile", "make_train_step"]

@@ -1,0 +1,90 @@
+"""train_step factory: fwd+bwd (+microbatch gradient accumulation) + AdamW update.
+
+Distributed-optimization features:
+  * microbatching — grad accumulation over a lax.scan keeps per-chip activation
+    memory ~ 1/k (required for the 90B/1T train cells);
+  * configurable accumulation dtype (bf16 for the 1T cell — grads stay sharded
+    FSDP-style, halving accumulation memory);
+  * per-layer remat with a configurable XLA policy (hillclimb knob: §Perf);
+  * compute/comm overlap falls out of XLA latency-hiding once grads are
+    reduce-scattered by the FSDP sharding — no manual bucketing needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Sharder
+from repro.optim import AdamWConfig, adamw_init_specs, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainProfile:
+    num_microbatches: int = 1
+    accum_dtype: Any = jnp.float32
+    remat: bool = True
+    remat_policy: Optional[str] = None  # None|"dots"|"nothing"
+    aux_weight: float = 0.01
+
+
+def _policy(name):
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    return None
+
+
+def make_train_step(model, opt: AdamWConfig, profile: TrainProfile = TrainProfile(),
+                    mesh=None, rules=None):
+    """Returns (train_step, param_specs, opt_state_specs).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    shard = Sharder(mesh, rules)
+    param_specs = model.param_specs()
+    state_specs = adamw_init_specs(param_specs, opt)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(
+            params, batch, shard=shard, remat=profile.remat,
+            remat_policy=_policy(profile.remat_policy), aux_weight=profile.aux_weight,
+        )
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        k = profile.num_microbatches
+        if k <= 1:
+            (l, aux), grads = grad_fn(params, batch)
+            return l, grads
+
+        def split(x):
+            return x.reshape(k, x.shape[0] // k, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mbatch):
+            g_acc, l_acc = carry
+            (l, aux), g = grad_fn(params, mbatch)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(profile.accum_dtype), g_acc, g
+            )
+            return (g_acc, l_acc + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, profile.accum_dtype), params)
+        (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), mb)
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / k), g_sum)
+        return l_sum / k, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, param_specs, state_specs, opt
+        )
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step, param_specs, state_specs

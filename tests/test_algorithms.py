@@ -1,0 +1,98 @@
+"""Layout-generic algorithms + trace-time property gating (paper's scale/dot)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AccumulateAccessor,
+    Extents,
+    LayoutError,
+    LayoutRight,
+    LayoutStride,
+    LayoutSymmetricPacked,
+    MdSpan,
+    QuantizedAccessor,
+    algorithms as alg,
+)
+
+
+def test_scale_dense():
+    m = MdSpan.from_dense(jnp.arange(6.0).reshape(2, 3))
+    np.testing.assert_allclose(np.array(alg.scale(m, 2.0).to_dense()), 2 * np.arange(6.0).reshape(2, 3))
+
+
+def test_scale_symmetric_via_contiguous_codomain():
+    """The paper's key example: naive domain iteration would double-scale
+    off-diagonals; the contiguous-codomain path scales each packed slot once."""
+    x = jnp.array([[1.0, 2.0, 3.0], [2.0, 5.0, 6.0], [3.0, 6.0, 9.0]])
+    m = MdSpan.from_dense(x, layout=LayoutSymmetricPacked(Extents.fully_dynamic(3, 3)))
+    r = alg.scale(m, 2.0)
+    np.testing.assert_allclose(np.array(r.to_dense()), 2 * np.array(x))
+
+
+def test_scale_non_unique_non_contiguous_rejected():
+    # a deliberately aliasing strided layout with an offset (not contiguous)
+    lay = LayoutStride(Extents.fully_dynamic(2, 2), strides=(1, 1), offset=1)
+    assert not lay.is_unique() and not lay.is_contiguous()
+    m = MdSpan(jnp.zeros(4), lay, __import__("repro.core", fromlist=["BasicAccessor"]).BasicAccessor(jnp.float32))
+    with pytest.raises(LayoutError):
+        alg.scale(m, 2.0)
+
+
+def test_scale_quantized_touches_only_scales():
+    qa = QuantizedAccessor(jnp.float32, bits=8, block=8)
+    m = MdSpan.from_dense(jnp.linspace(-1, 1, 16).reshape(2, 8), accessor=qa)
+    r = alg.scale(m, 3.0)
+    # negative-overhead path: q unchanged, scales scaled
+    np.testing.assert_array_equal(np.array(r.buffers["q"]), np.array(m.buffers["q"]))
+    np.testing.assert_allclose(np.array(r.buffers["scale"]), 3 * np.array(m.buffers["scale"]), rtol=1e-6)
+
+
+def test_dot_no_uniqueness_requirement():
+    """Paper: dot product works on non-unique layouts."""
+    x = jnp.array([[1.0, 2.0], [2.0, 3.0]])
+    sym = LayoutSymmetricPacked(Extents.fully_dynamic(2, 2))
+    a = MdSpan.from_dense(x, layout=sym)
+    b = MdSpan.from_dense(x, layout=sym)
+    assert float(alg.dot(a, b)) == float(jnp.sum(x * x))
+
+
+def test_reduce_sum_counts_domain_not_codomain():
+    x = jnp.array([[1.0, 5.0], [5.0, 2.0]])
+    m = MdSpan.from_dense(x, layout=LayoutSymmetricPacked(Extents.fully_dynamic(2, 2)))
+    assert float(alg.reduce_sum(m)) == 13.0  # off-diagonal counted twice
+
+
+def test_add_into_non_unique_requires_accumulate():
+    sym = LayoutSymmetricPacked(Extents.fully_dynamic(2, 2))
+    x = jnp.array([[1.0, 2.0], [2.0, 3.0]])
+    m = MdSpan.from_dense(x, layout=sym)
+    with pytest.raises(LayoutError):
+        alg.add_into(m, m)
+    macc = MdSpan(
+        AccumulateAccessor(jnp.float32).from_codomain(m.buffers), sym, AccumulateAccessor(jnp.float32)
+    )
+    r = alg.add_into(macc, m)
+    # accumulate semantics: each codomain slot receives ALL domain contributions
+    # diag slots get 1 contribution, off-diag get 2
+    np.testing.assert_allclose(
+        np.array(r.to_dense()), np.array([[2.0, 6.0], [6.0, 6.0]])
+    )
+
+
+def test_matvec_layout_generic():
+    a = jnp.arange(12.0).reshape(3, 4)
+    x = jnp.arange(4.0)
+    from repro.core import LayoutLeft
+
+    for lay in [LayoutRight(Extents.fully_dynamic(3, 4)), LayoutLeft(Extents.fully_dynamic(3, 4))]:
+        m = MdSpan.from_dense(a, layout=lay)
+        np.testing.assert_allclose(np.array(alg.matvec(m, MdSpan.from_dense(x))), np.array(a @ x))
+
+
+def test_fill_and_copy():
+    m = MdSpan.from_dense(jnp.zeros((2, 3)))
+    f = alg.fill(m, 7.0)
+    np.testing.assert_allclose(np.array(f.to_dense()), 7.0)
+    dst = alg.copy(m, f)
+    np.testing.assert_allclose(np.array(dst.to_dense()), 7.0)

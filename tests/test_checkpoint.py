@@ -1,0 +1,78 @@
+"""Checkpoint store: atomicity, resume discovery, reshard-on-load, GC, async."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+
+
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(4)},
+        "opt": {"m": {"q": jnp.zeros((4,), jnp.int8), "scale": jnp.ones(1)}, "step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    save(tmp_path, 5, t)
+    assert latest_step(tmp_path) == 5
+    target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    r = restore(tmp_path, 5, target)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path):
+    t = tree()
+    save(tmp_path, 3, t)
+    # simulate a crash mid-save: step dir without COMMIT
+    broken = tmp_path / "step_00000009"
+    broken.mkdir()
+    (broken / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 3
+    with pytest.raises(FileNotFoundError):
+        restore(tmp_path, 9, tree())
+
+
+def test_manager_gc_keeps_n(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree())
+    steps = sorted(
+        int(d.name.split("_")[1]) for d in Path(tmp_path).iterdir() if d.name.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    mgr.save(11, tree())
+    mgr.wait()
+    assert mgr.latest() == 11
+
+
+def test_reshard_on_load_changes_sharding(tmp_path):
+    """Restore onto a different sharding than saved — the elastic path."""
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save(tmp_path, 1, t)
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]).reshape(1, 1), ("data", "model"))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))
+    target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32, sharding=sh)}
+    r = restore(tmp_path, 1, target)
+    assert r["w"].sharding == sh
+    np.testing.assert_array_equal(np.array(r["w"]), np.array(t["w"]))
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    t = {"w": jnp.ones((2, 2), jnp.float32)}
+    save(tmp_path, 1, t)
+    target = {"w": jax.ShapeDtypeStruct((2, 2), jnp.bfloat16)}
+    r = restore(tmp_path, 1, target)
+    assert r["w"].dtype == jnp.bfloat16

@@ -1,0 +1,50 @@
+"""Data pipeline: determinism, host-sharding disjointness, binary loader, prefetch."""
+import numpy as np
+
+from repro.data import BinaryTokenDataset, DataConfig, SyntheticLM, make_pipeline
+
+
+def test_synthetic_deterministic_in_step_and_seed():
+    cfg = DataConfig(batch=4, seq=32, vocab=128, seed=7)
+    a = SyntheticLM(cfg).batch_at(3)["tokens"]
+    b = SyntheticLM(cfg).batch_at(3)["tokens"]
+    c = SyntheticLM(cfg).batch_at(4)["tokens"]
+    d = SyntheticLM(DataConfig(batch=4, seq=32, vocab=128, seed=8)).batch_at(3)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert not np.array_equal(a, d)
+
+
+def test_synthetic_hosts_draw_disjoint_streams():
+    cfg = DataConfig(batch=8, seq=16, vocab=1000, seed=0)
+    h0 = SyntheticLM(cfg, host_id=0, num_hosts=2).batch_at(0)["tokens"]
+    h1 = SyntheticLM(cfg, host_id=1, num_hosts=2).batch_at(0)["tokens"]
+    assert h0.shape == (4, 17) and h1.shape == (4, 17)
+    assert not np.array_equal(h0, h1)
+
+
+def test_synthetic_has_learnable_structure():
+    cfg = DataConfig(batch=8, seq=256, vocab=512, seed=0)
+    t = SyntheticLM(cfg).batch_at(0)["tokens"]
+    match = (t[:, 3:] == t[:, :-3]).mean()
+    assert match > 0.4  # the copy-grammar injects ~50% shift-3 repeats
+
+
+def test_binary_dataset(tmp_path):
+    tokens = np.arange(10_000, dtype=np.uint16) % 512
+    path = tmp_path / "tokens.bin"
+    tokens.tofile(path)
+    cfg = DataConfig(batch=4, seq=64, vocab=512, source="binary", path=str(path))
+    ds = BinaryTokenDataset(cfg)
+    b = ds.batch_at(0)["tokens"]
+    assert b.shape == (4, 65) and b.dtype == np.int32
+    assert b.max() < 512
+    np.testing.assert_array_equal(b, ds.batch_at(0)["tokens"])  # deterministic
+
+
+def test_prefetcher_yields_in_order():
+    cfg = DataConfig(batch=2, seq=8, vocab=64, seed=1)
+    pipe = make_pipeline(cfg, start_step=5, prefetch=True)
+    steps = [next(pipe)[0] for _ in range(4)]
+    assert steps == [5, 6, 7, 8]
+    pipe.close()

@@ -1,0 +1,47 @@
+"""Extents unit tests (paper: mixing static and dynamic extents)."""
+import pytest
+
+from repro.core import Extents, dynamic_extent
+
+
+def test_static_dynamic_mix():
+    e = Extents.of(20, dynamic_extent)(40)
+    assert e.rank == 2 and e.rank_dynamic == 1
+    assert e.extent(0) == 20 and e.extent(1) == 40
+    assert e.static_extent(0) == 20 and e.static_extent(1) is None
+    assert not e.is_fully_static
+
+
+def test_fully_static_and_dynamic():
+    s = Extents.fully_static(3, 4, 5)
+    d = Extents.fully_dynamic(3, 4, 5)
+    assert s.is_fully_static and not d.is_fully_static
+    assert s.as_shape() == d.as_shape() == (3, 4, 5)
+    assert s.size() == 60
+
+
+def test_wrong_dynamic_count():
+    with pytest.raises(TypeError):
+        Extents.of(20, dynamic_extent)()  # missing
+    with pytest.raises(TypeError):
+        Extents.of(20, dynamic_extent)(40, 50)  # extra
+
+
+def test_negative_extent_rejected():
+    with pytest.raises(ValueError):
+        Extents.fully_static(-1, 2)
+    with pytest.raises(ValueError):
+        Extents.of(dynamic_extent)(-3)
+
+
+def test_contains_and_indices():
+    e = Extents.fully_static(2, 3)
+    assert e.contains((1, 2)) and not e.contains((2, 0)) and not e.contains((0,))
+    assert sorted(e.indices()) == [(i, j) for i in range(2) for j in range(3)]
+
+
+def test_with_extent():
+    e = Extents.of(8, dynamic_extent)(16)
+    e2 = e.with_extent(1, 32, static=True)
+    assert e2.extent(1) == 32 and e2.static_extent(1) == 32
+    assert e2.extent(0) == 8

@@ -1,0 +1,180 @@
+"""LM kernels (flash attention, flash VJP, quant matmul, SSD) — sweeps vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accessors import QuantizedAccessor
+from repro.core.distributed import dequantize_array, quantize_array
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention, flash_decode
+from repro.kernels.flash_vjp import flash_attention_jnp
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 24), (False, None)])
+def test_flash_kernel_sweep(hq, hkv, causal, window):
+    k0 = jax.random.key(0)
+    q = jax.random.normal(k0, (2, hq, 64, 32))
+    k = jax.random.normal(jax.random.key(1), (2, hkv, 64, 32))
+    v = jax.random.normal(jax.random.key(2), (2, hkv, 64, 32))
+    got = flash_attention(q, k, v, causal=causal, window=window, block_q=16, block_k=16)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    q = jax.random.normal(jax.random.key(0), (1, 2, 32, 16), dtype)
+    k = jax.random.normal(jax.random.key(1), (1, 2, 48, 16), dtype)
+    v = jax.random.normal(jax.random.key(2), (1, 2, 48, 16), dtype)
+    got = flash_attention(q, k, v, causal=False, block_q=8, block_k=16)
+    want = ref.attention(q, k, v, causal=False)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(
+        np.array(got, np.float32), np.array(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("pos", [0, 31, 57, 127])
+def test_flash_decode_positions(pos):
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    kc = jax.random.normal(jax.random.key(3), (B, Hkv, S, D))
+    vc = jax.random.normal(jax.random.key(4), (B, Hkv, S, D))
+    q1 = jax.random.normal(jax.random.key(5), (B, Hq, 1, D))
+    got = jax.jit(lambda q, k, v, p: flash_decode(q, k, v, p, block_k=32))(q1, kc, vc, pos)
+    want = ref.attention(q1, kc, vc, causal=True, q_offset=pos)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-5)
+
+
+def test_flash_vjp_grads_match_reference():
+    q = jax.random.normal(jax.random.key(0), (2, 4, 37, 16))
+    k = jax.random.normal(jax.random.key(1), (2, 2, 53, 16))
+    v = jax.random.normal(jax.random.key(2), (2, 2, 53, 16))
+    for kwargs in [dict(causal=True, window=None), dict(causal=True, window=24), dict(causal=False, window=None)]:
+        f1 = lambda q, k, v: (
+            flash_attention_jnp(q, k, v, jnp.int32(0), kwargs["causal"], kwargs["window"], None, 16) ** 2
+        ).sum()
+        f2 = lambda q, k, v: (ref.attention(q, k, v, **kwargs).astype(jnp.float32) ** 2).sum()
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.array(a), np.array(b), rtol=3e-3, atol=3e-4)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("mkn", [(16, 256, 384), (8, 128, 128), (33, 512, 256)])
+def test_quant_matmul_sweep(bits, mkn):
+    m, k, n = mkn
+    x = jax.random.normal(jax.random.key(0), (m, k))
+    w = jax.random.normal(jax.random.key(1), (k, n))
+    qa = QuantizedAccessor(jnp.float32, bits=bits, block=64)
+    bufs = quantize_array(w.T, qa)  # (N, K) output-major
+    got = quant_matmul(x, bufs["q"], bufs["scale"], bits=bits, block_m=8, block_n=128)
+    want = ref.quant_matmul(x, bufs["q"], bufs["scale"], bits=bits)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-3, atol=2e-3)
+    # and the dequantized oracle agrees with dense math within quant error
+    wd = dequantize_array(bufs, qa).T
+    np.testing.assert_allclose(np.array(want), np.array(x @ wd), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("shape", [(2, 128, 4, 16, 32), (1, 64, 8, 8, 16)])
+def test_ssd_scan_sweep(chunk, shape):
+    b, t, h, p, n = shape
+    ks = jax.random.split(jax.random.key(7), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, 1, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, t, 1, n)) * 0.3
+    got, gs = ssd_scan(x, dt, A, B, C, chunk=chunk, return_final_state=True)
+    want, ws = ref.ssd_scan(x, dt, A, B, C, return_final_state=True)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.array(gs), np.array(ws), rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_jnp_groups_and_grad():
+    b, t, h, p, n = 2, 64, 4, 8, 16
+    ks = jax.random.split(jax.random.key(8), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, 2, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, t, 2, n)) * 0.3
+    np.testing.assert_allclose(
+        np.array(ops.ssd_jnp(x, dt, A, B, C, chunk=16)),
+        np.array(ref.ssd_scan(x, dt, A, B, C)),
+        rtol=2e-3, atol=2e-3,
+    )
+    g = jax.grad(lambda x: ops.ssd_jnp(x, dt, A, B, C, chunk=16).sum())(x)
+    assert np.isfinite(np.array(g)).all()
+
+
+def test_ssd_state_chaining_matches_full_run():
+    """chunked-with-carried-state == one long run (the SP/prefill invariant)."""
+    b, t, h, p, n = 1, 64, 2, 8, 16
+    ks = jax.random.split(jax.random.key(9), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, 1, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, t, 1, n)) * 0.3
+    y_full = ref.ssd_scan(x, dt, A, B, C)
+    half = t // 2
+    y1, s1 = ssd_scan(x[:, :half], dt[:, :half], A, B[:, :half], C[:, :half], chunk=16, return_final_state=True)
+    y2 = ssd_scan(x[:, half:], dt[:, half:], A, B[:, half:], C[:, half:], chunk=16, initial_state=s1)
+    np.testing.assert_allclose(np.array(jnp.concatenate([y1, y2], 1)), np.array(y_full), rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_associative_scan_equals_sequential():
+    ks = jax.random.split(jax.random.key(10), 4)
+    x = jax.random.normal(ks[0], (2, 32, 8))
+    ig = jax.random.normal(ks[1], (2, 32, 8))
+    ag = jax.random.normal(ks[2], (2, 32, 8))
+    ap = jax.random.normal(ks[3], (8,))
+    y_seq = ref.rglru(x, ig, ag, ap)
+    # models/rglru.py uses associative_scan; compare through the block-level fn
+    import repro.models.rglru as rg
+
+    log_a = rg._log_a({"a_param": ap}, ag)
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(ig.astype(jnp.float32)) * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * gated
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    np.testing.assert_allclose(np.array(h.astype(x.dtype)), np.array(y_seq), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+@pytest.mark.parametrize("shape", [(2, 32, 16), (1, 64, 128)])
+def test_rglru_pallas_kernel(chunk, shape):
+    """Pallas RG-LRU recurrence kernel vs the sequential oracle."""
+    from repro.kernels.rglru_scan import rglru_scan
+
+    b_, t, w = shape
+    ks = jax.random.split(jax.random.key(11), 4)
+    x = jax.random.normal(ks[0], (b_, t, w))
+    ig = jax.random.normal(ks[1], (b_, t, w))
+    ag = jax.random.normal(ks[2], (b_, t, w))
+    ap = jax.random.normal(ks[3], (w,))
+    want = ref.rglru(x, ig, ag, ap)
+    # precompute decay/input terms exactly as models/rglru.py does
+    a = jnp.exp(
+        -8.0 * jax.nn.softplus(ap)[None, None, :] * jax.nn.sigmoid(ag)
+    )
+    bterm = jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (jax.nn.sigmoid(ig) * x)
+    got, hf = rglru_scan(a, bterm, chunk=chunk, return_final_state=True)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-5)
+    # state chaining: two halves == one run
+    half = t // 2
+    y1, h1 = rglru_scan(a[:, :half], bterm[:, :half], chunk=chunk, return_final_state=True)
+    y2 = rglru_scan(a[:, half:], bterm[:, half:], chunk=chunk, initial_state=h1)
+    np.testing.assert_allclose(
+        np.array(jnp.concatenate([y1, y2], 1)), np.array(want), rtol=2e-4, atol=2e-5
+    )

@@ -1,0 +1,70 @@
+"""Paper benchmark-suite kernels: shape/dtype sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Extents, LayoutLeft, LayoutRight, MdSpan
+from repro.kernels import ref
+from repro.kernels.matvec import matvec_left, matvec_right
+from repro.kernels.stencil3d import stencil3d_pallas
+from repro.kernels.sum3d import sum3d_mdspan, sum3d_pallas
+from repro.kernels.tinymatsum import tinymatsum_dynamic, tinymatsum_static
+
+SHAPES_3D = [(4, 4, 8), (8, 16, 128), (16, 24, 136), (5, 7, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sum3d_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        float(sum3d_pallas(x)), float(ref.sum3d(x)), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("order", ["right", "left"])
+def test_sum3d_layout_dispatch(order):
+    x = jax.random.normal(jax.random.key(1), (6, 10, 132))
+    lay = (LayoutRight if order == "right" else LayoutLeft)(Extents.fully_dynamic(*x.shape))
+    m = MdSpan.from_dense(x, layout=lay)
+    np.testing.assert_allclose(float(sum3d_mdspan(m)), float(ref.sum3d(x)), rtol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(6, 8, 16), (12, 10, 132), (4, 4, 4)])
+@pytest.mark.parametrize("br", [1, 2, 4])
+def test_stencil3d_sweep(shape, br):
+    x = jax.random.normal(jax.random.key(2), shape)
+    got = stencil3d_pallas(x, block_rows=br)
+    np.testing.assert_allclose(np.array(got), np.array(ref.stencil3d(x)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [10, 100, 513])
+@pytest.mark.parametrize("jk", [(3, 3), (5, 7), (8, 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_tinymatsum_static_vs_dynamic(n, jk, dtype):
+    j, k = jk
+    o = jax.random.normal(jax.random.key(3), (n, j, k), dtype)
+    s = jax.random.normal(jax.random.key(4), (n, j, k), dtype)
+    want = ref.tinymatsum(o, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(
+        np.array(tinymatsum_static(o, s)).astype(np.float32), np.array(want).astype(np.float32), rtol=tol, atol=tol
+    )
+    np.testing.assert_allclose(
+        np.array(tinymatsum_dynamic(o, s, jmax=8, kmax=8)).astype(np.float32),
+        np.array(want).astype(np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("ij", [(8, 128), (200, 384), (256, 256)])
+def test_matvec_both_layouts(ij):
+    i, j = ij
+    a = jax.random.normal(jax.random.key(5), (i, j))
+    x = jax.random.normal(jax.random.key(6), (j,))
+    want = np.array(ref.matvec(a, x))
+    np.testing.assert_allclose(np.array(matvec_right(a, x)), want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(matvec_left(a.T, x)), want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,140 @@
+"""Hypothesis property tests for LayoutMapping — the paper's Table I laws.
+
+For every layout instance we check, over its whole (test-sized) domain:
+  LAW 1 (codomain):    0 <= m(i) < required_span_size()
+  LAW 2 (uniqueness):  is_unique()  ⇔  |{m(i)}| == |domain|
+  LAW 3 (contiguity):  is_contiguous()  ⇔  {m(i)} == [0, required_span_size())
+  LAW 4 (strides):     is_strided() ⇒ m(i + e_r) - m(i) == stride(r)  ∀ i, r
+  LAW 5 (always-*):    is_always_X() ⇒ is_X() for every generated instance
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Extents,
+    LayoutLeft,
+    LayoutRight,
+    LayoutStride,
+    LayoutSymmetricPacked,
+    LayoutTiledTPU,
+)
+from repro.core.distributed import DistributedLayout
+
+sizes = st.lists(st.integers(1, 6), min_size=1, max_size=3)
+
+
+def domain_offsets(layout):
+    return np.array(layout.offsets_dense()).reshape(-1)
+
+
+def check_laws(layout):
+    offs = domain_offsets(layout)
+    n = layout.extents.size()
+    span = layout.required_span_size()
+    assert offs.min() >= 0 and offs.max() < span, "LAW 1"
+    unique = len(np.unique(offs)) == n
+    # Table I law is one-directional: is_unique() true ONLY IF no aliasing
+    # (a conservative False is allowed — LayoutStride's divisibility check).
+    if layout.is_unique():
+        assert unique, ("LAW 2 (claimed unique but aliases)", layout)
+    contiguous = set(offs.tolist()) == set(range(span))
+    if layout.is_contiguous():
+        assert contiguous, ("LAW 3", layout)
+    if layout.is_strided():
+        ext = layout.extents
+        strides = [layout.stride(r) for r in range(ext.rank)]
+        for idx in ext.indices():
+            base = layout(*idx)
+            for r in range(ext.rank):
+                nxt = list(idx)
+                nxt[r] += 1
+                if nxt[r] < ext.extent(r):
+                    assert layout(*nxt) - base == strides[r], ("LAW 4", layout, idx, r)
+    if type(layout).is_always_unique():
+        assert layout.is_unique(), ("LAW 5 unique", layout)
+    if type(layout).is_always_contiguous():
+        assert layout.is_contiguous(), ("LAW 5 contiguous", layout)
+    if type(layout).is_always_strided():
+        assert layout.is_strided(), ("LAW 5 strided", layout)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes)
+def test_layout_right_laws(sz):
+    check_laws(LayoutRight(Extents.fully_dynamic(*sz)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(sizes)
+def test_layout_left_laws(sz):
+    check_laws(LayoutLeft(Extents.fully_dynamic(*sz)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8))
+def test_symmetric_packed_laws(n):
+    lay = LayoutSymmetricPacked(Extents.fully_dynamic(n, n))
+    check_laws(lay)
+    # aliasing is exactly (i,j)~(j,i)
+    for i in range(n):
+        for j in range(n):
+            assert lay(i, j) == lay(j, i)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(1, 5), min_size=2, max_size=2),
+    st.sampled_from([(2, 4), (3, 5), (8, 128)]),
+)
+def test_tiled_laws(sz, tile):
+    lay = LayoutTiledTPU(Extents.fully_dynamic(*sz), tile=tile)
+    check_laws(lay)
+    # padded iff extents don't divide the tile
+    assert lay.is_contiguous() == (sz[0] % tile[0] == 0 and sz[1] % tile[1] == 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    sizes,
+    st.integers(0, 3),
+    st.data(),
+)
+def test_layout_stride_laws(sz, offset, data):
+    # random strides that keep the mapping affine (may or may not alias)
+    strides = tuple(
+        data.draw(st.integers(1, 40), label=f"stride{r}") for r in range(len(sz))
+    )
+    lay = LayoutStride(Extents.fully_dynamic(*sz), strides, offset)
+    check_laws(lay)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(1, 8), min_size=1, max_size=3),
+    st.data(),
+)
+def test_distributed_layout_laws(sz, data):
+    axes = {"data": 2, "model": 3}
+    binding = tuple(
+        data.draw(st.sampled_from([None, "data", "model"]), label=f"dim{r}")
+        for r in range(len(sz))
+    )
+    # each axis used at most once
+    used = [b for b in binding if b]
+    if len(used) != len(set(used)):
+        return
+    lay = DistributedLayout(Extents.fully_dynamic(*sz), binding, axes)
+    check_laws(lay)
+    # GSPMD law: block sharding never aliases and each index lands on exactly one
+    # (device, local offset) pair
+    offs = domain_offsets(lay)
+    assert len(np.unique(offs)) == lay.extents.size()
+
+
+def test_non_strided_layouts_refuse_stride():
+    from repro.core import LayoutError
+
+    sp = LayoutSymmetricPacked(Extents.fully_dynamic(3, 3))
+    with pytest.raises(LayoutError):
+        sp.stride(0)

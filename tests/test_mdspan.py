@@ -1,0 +1,118 @@
+"""MdSpan + submdspan behaviour, including the paper's own code examples."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BasicAccessor,
+    Extents,
+    LayoutLeft,
+    LayoutRight,
+    LayoutSymmetricPacked,
+    LayoutTiledTPU,
+    MdSpan,
+    QuantizedAccessor,
+    all_,
+    mdspan,
+    submdspan,
+)
+
+
+def test_paper_example_matrix_interpretation():
+    """'interpret memory starting at data as a 20 x 40 matrix'."""
+    data = jnp.arange(20 * 40, dtype=jnp.float32)
+    m = mdspan(data, 20, 40)
+    assert m.extent(0) == 20 and m.extent(1) == 40
+    assert float(m(10, 5)) == 10 * 40 + 5
+    # operator() compound assignment restated functionally
+    m2 = m.set((10, 5), m(10, 5) + 3.14)
+    assert abs(float(m2(10, 5)) - (10 * 40 + 5 + 3.14)) < 1e-4
+    assert float(m2(0, 38)) == 38.0
+
+
+def test_paper_example_subspan():
+    """paper: subspan(my_tens, 2, all, pair{2,4}, 0) of a 3x4x5x20 tensor."""
+    t = mdspan(jnp.arange(3 * 4 * 5 * 20, dtype=jnp.float32), 3, 4, 5, 20)
+    sub = submdspan(t, 2, all_, (2, 4), 0)
+    assert sub.shape == (4, 2)
+    for i in range(4):
+        for j in range(2):
+            assert float(sub(i, j)) == float(t(2, i, j + 2, 0))
+
+
+def test_subspan_static_extent_propagation():
+    """all -> static extent preserved; pair -> dynamic (P0009)."""
+    t = MdSpan.from_dense(jnp.zeros((4, 6)), static=True)
+    sub = submdspan(t, all_, (1, 4))
+    assert sub.extents.static_extent(0) == 4
+    assert sub.extents.static_extent(1) is None
+
+
+def test_subspan_shares_buffers_zero_copy():
+    t = mdspan(jnp.arange(24, dtype=jnp.float32), 4, 6)
+    sub = submdspan(t, (1, 3), all_)
+    assert sub.buffers is t.buffers  # same array object: a view, not a copy
+
+
+def test_subspan_of_subspan_composes():
+    t = mdspan(jnp.arange(3 * 4 * 5, dtype=jnp.float32), 3, 4, 5)
+    s1 = submdspan(t, 1, all_, all_)
+    s2 = submdspan(s1, (1, 3), 2)
+    assert s2.shape == (2,)
+    for i in range(2):
+        assert float(s2(i,)) == float(t(1, i + 1, 2))
+
+
+def test_out_of_bounds_slices_rejected():
+    t = mdspan(jnp.zeros(12), 3, 4)
+    with pytest.raises(IndexError):
+        submdspan(t, (0, 5), all_)
+    with pytest.raises(IndexError):
+        submdspan(t, 3, all_)
+
+
+def test_from_dense_roundtrip_layouts():
+    x = jnp.arange(30, dtype=jnp.float32).reshape(5, 6)
+    for layout in [
+        LayoutRight(Extents.fully_dynamic(5, 6)),
+        LayoutLeft(Extents.fully_dynamic(5, 6)),
+        LayoutTiledTPU(Extents.fully_dynamic(5, 6), tile=(2, 4)),
+    ]:
+        m = MdSpan.from_dense(x, layout=layout)
+        np.testing.assert_array_equal(np.array(m.to_dense()), np.array(x))
+
+
+def test_symmetric_from_dense_uses_one_triangle():
+    x = jnp.array([[1.0, 2.0], [2.0, 5.0]])
+    m = MdSpan.from_dense(x, layout=LayoutSymmetricPacked(Extents.fully_dynamic(2, 2)))
+    assert m.buffers.shape == (3,)  # packed triangle
+    np.testing.assert_array_equal(np.array(m.to_dense()), np.array(x))
+
+
+def test_mdspan_is_pytree_through_jit_grad():
+    m = MdSpan.from_dense(jnp.arange(8.0).reshape(2, 4))
+
+    @jax.jit
+    def f(span):
+        return jnp.sum(span.to_dense() ** 2)
+
+    g = jax.grad(lambda s: f(s))(m)
+    assert isinstance(g, MdSpan)
+    np.testing.assert_allclose(np.array(g.buffers), 2 * np.arange(8.0))
+
+
+def test_quantized_mdspan_view():
+    qa = QuantizedAccessor(jnp.float32, bits=8, block=8)
+    x = jnp.linspace(-2, 2, 32).reshape(4, 8)
+    m = MdSpan.from_dense(x, accessor=qa)
+    assert np.max(np.abs(np.array(m.to_dense()) - np.array(x))) < 2 / 127 + 1e-6
+
+
+def test_scatter_from_dense_gated_on_non_unique():
+    from repro.core import LayoutError
+
+    sym = LayoutSymmetricPacked(Extents.fully_dynamic(3, 3))
+    m = MdSpan.from_dense(jnp.eye(3), layout=sym)
+    with pytest.raises(LayoutError):
+        m.scatter_from_dense(jnp.ones((3, 3)))
