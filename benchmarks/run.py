@@ -1,9 +1,10 @@
 """Benchmark harness entrypoint: one function per paper table/figure + the
 roofline reader. Prints ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run              # paper suite + roofline
+  PYTHONPATH=src python -m benchmarks.run              # paper + roofline + serving
   PYTHONPATH=src python -m benchmarks.run --only paper
   PYTHONPATH=src python -m benchmarks.run --only roofline
+  PYTHONPATH=src python -m benchmarks.run --only serving   # writes BENCH_serving.json
 """
 import argparse
 import sys
@@ -14,7 +15,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="all", choices=["all", "paper", "roofline"])
+    ap.add_argument(
+        "--only", default="all", choices=["all", "paper", "roofline", "serving"]
+    )
     args = ap.parse_args()
     if args.only in ("all", "paper"):
         from benchmarks import paper_suite
@@ -27,6 +30,10 @@ def main() -> None:
             print("roofline,0,skipped (run repro.launch.dryrun first)")
         else:
             roofline.run()
+    if args.only in ("all", "serving"):
+        from benchmarks import serving_suite
+
+        serving_suite.run()
 
 
 if __name__ == "__main__":

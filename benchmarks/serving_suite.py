@@ -1,0 +1,98 @@
+"""Serving benchmark: the continuous-batching engine under Poisson arrivals.
+
+Sweeps (max_batch, page_size) points on a tiny dense model, replaying the same
+seeded request trace (prompt lengths from fixed buckets so prefill compiles a
+bounded set of shapes; exponential inter-arrival gaps) and reports engine
+throughput (tokens/sec) and request latency (p50/p99 end-to-end, p50/p99
+time-to-first-token). Each point warms the jit cache with a short rehearsal run
+so the measured pass times compiled code, then writes every point to
+``BENCH_serving.json`` so the perf trajectory accumulates across PRs.
+
+  PYTHONPATH=src python -m benchmarks.run --only serving
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.models import ModelConfig, Model
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+
+OUT_PATH = Path("BENCH_serving.json")
+
+POINTS = [  # (max_batch, page_size)
+    (2, 8),
+    (4, 8),
+    (4, 16),
+]
+
+PROMPT_BUCKETS = (8, 16, 24)
+N_REQUESTS = 10
+MAX_NEW_TOKENS = 8
+MEAN_ARRIVAL_GAP_S = 0.02
+
+
+def bench_config() -> ModelConfig:
+    return ModelConfig(
+        name="bench-tiny-dense", family="dense", n_layers=2, d_model=64,
+        vocab=512, n_heads=4, n_kv_heads=2, d_ff=128, dtype="float32",
+    )
+
+
+def make_requests(rng: np.random.Generator, vocab: int, n: int) -> list:
+    gaps = rng.exponential(scale=MEAN_ARRIVAL_GAP_S, size=n)
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n):
+        length = int(rng.choice(PROMPT_BUCKETS))
+        prompt = rng.integers(0, vocab, size=length).tolist()
+        reqs.append(
+            Request(rid=i, prompt=prompt, max_new_tokens=MAX_NEW_TOKENS,
+                    arrival_time=float(arrivals[i]))
+        )
+    return reqs
+
+
+def engine_for(model, params, max_batch: int, page_size: int) -> ServeEngine:
+    max_len = max(PROMPT_BUCKETS) + MAX_NEW_TOKENS + 1
+    return ServeEngine(
+        model, params,
+        EngineConfig.sized_for(max_len, page_size=page_size, max_batch=max_batch),
+    )
+
+
+def run(out_path: Path = OUT_PATH) -> dict:
+    cfg = bench_config()
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    report = {"model": cfg.name, "points": []}
+    for max_batch, page_size in POINTS:
+        # rehearsal on the same engine: compile every prefill bucket + the decode
+        # step for these shapes (jit caches are per-engine), then reset and measure
+        eng = engine_for(model, params, max_batch, page_size)
+        eng.run([
+            Request(rid=i, prompt=list(range(1, L + 1)), max_new_tokens=2)
+            for i, L in enumerate(PROMPT_BUCKETS)
+        ])
+        eng.reset_metrics()
+        rng = np.random.default_rng(0)
+        eng.run(make_requests(rng, cfg.vocab, N_REQUESTS))
+        m = eng.metrics()
+        point = {"max_batch": max_batch, "page_size": page_size, **m}
+        report["points"].append(point)
+        print(
+            f"serving/b{max_batch}_ps{page_size},{m['step_ms_p50']*1e3:.2f},"
+            f"tokens_per_s={m['tokens_per_s']:.1f} p50={m['latency_s_p50']*1e3:.0f}ms "
+            f"p99={m['latency_s_p99']*1e3:.0f}ms ttft_p99={m['ttft_s_p99']*1e3:.0f}ms "
+            f"preempt={m['preemptions']}"
+        )
+    out_path.write_text(json.dumps(report, indent=2))
+    print(f"serving suite written to {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

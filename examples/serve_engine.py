@@ -1,0 +1,88 @@
+"""Quickstart: continuous-batching serving with a paged KV cache.
+
+The engine serves many concurrent generation requests from one fixed-size page
+pool. Each sequence's KV cache is a set of fixed-size pages scattered anywhere
+in the pool; a per-sequence block table (core.layouts.LayoutPaged — the paper's
+layout-mapping customization point on a layout the C++ committee never shipped)
+maps logical token positions to (page, slot) storage, and the paged-attention
+kernel consumes the table directly. Requests are admitted as pages free up,
+batched together mid-flight, and preempted/recomputed under memory pressure —
+outputs are bit-identical to running each request alone.
+
+    # serve 6 requests with Poisson arrivals on a small model
+    PYTHONPATH=src python examples/serve_engine.py --requests 6 --tokens 8
+
+    # engine in five lines:
+    from repro.serving.engine import EngineConfig, Request, ServeEngine
+    engine = ServeEngine(model, params, EngineConfig(num_pages=64, page_size=16))
+    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
+    results = engine.run()            # rid -> state; tokens in state.generated
+    print(engine.metrics())           # tokens/sec, p50/p99 latency, preemptions
+
+Knobs: ``num_pages`` (pool memory budget), ``page_size`` (tokens per page),
+``max_batch`` (decode batch width), ``attn_impl`` ("pallas" routes decode
+through the paged flash kernel; "auto" picks by backend).
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.models import build_model, get_config
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrivals per second")
+    ap.add_argument("--attn-impl", default="auto", choices=["auto", "pallas", "jnp"],
+                    help="paged-attention path (pallas = the kernel, interpreted off-TPU)")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch, smoke=True), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    requests = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=int(rng.choice([6, 10, 14]))).tolist(),
+            max_new_tokens=args.tokens,
+            arrival_time=float(arrivals[i]),
+        )
+        for i in range(args.requests)
+    ]
+
+    engine = ServeEngine(
+        model, params,
+        EngineConfig.sized_for(
+            14 + args.tokens + 1,
+            page_size=args.page_size,
+            max_batch=args.max_batch,
+            attn_impl=args.attn_impl,
+        ),
+    )
+    results = engine.run(requests)
+
+    for rid in sorted(results):
+        s = results[rid]
+        print(f"req {rid}: prompt[{len(s.request.prompt)}] -> {s.generated}")
+    m = engine.metrics()
+    print(
+        f"\n{m['requests']} requests, {m['generated_tokens']} tokens in {m['wall_s']:.2f}s "
+        f"({m['tokens_per_s']:.1f} tok/s, CPU demo incl. compiles) | "
+        f"latency p50 {m['latency_s_p50']*1e3:.0f}ms p99 {m['latency_s_p99']*1e3:.0f}ms | "
+        f"preemptions {m['preemptions']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ from .layouts import (
     LayoutError,
     LayoutLeft,
     LayoutMapping,
+    LayoutPaged,
     LayoutRight,
     LayoutStride,
     LayoutSymmetricPacked,
@@ -34,6 +35,7 @@ __all__ = [
     "LayoutError",
     "LayoutLeft",
     "LayoutMapping",
+    "LayoutPaged",
     "LayoutRight",
     "LayoutStride",
     "LayoutSymmetricPacked",

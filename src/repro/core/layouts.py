@@ -14,6 +14,10 @@ Implemented mappings:
   LayoutTiledTPU        (8,128)-style hardware tiling with padding — the TPU-native
                         layout (VREG/MXU aligned); unique, strided per-tile but not
                         globally strided, non-contiguous when padded     [TPU adaptation]
+  LayoutPaged           block-table indirection for paged KV caches: logical
+                        (seq, head, pos, d) → physical (page, slot) through a
+                        per-sequence page table; unique (when the table doesn't
+                        alias), non-contiguous, non-strided               [extension]
 
 All ``__call__`` implementations accept Python ints or traced jnp index arrays, so a
 mapping can be used inside jit/pallas kernels and in gather-based generic fallbacks.
@@ -366,6 +370,113 @@ class LayoutTiledTPU(LayoutMapping):
     def padded_shape(self) -> Tuple[int, ...]:
         ti, tj = self._tiles()
         return self.extents.sizes[:-2] + (ti * self.tile[0], tj * self.tile[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutPaged(LayoutMapping):
+    """Paged KV-cache layout: logical positions reach physical storage through a
+    block table (vLLM-style PagedAttention, restated as a layout mapping).
+
+    The domain is rank-4 ``(seq, head, pos, d)``. Physical storage is a pool of
+    ``num_pages`` fixed-size pages, each holding ``page_size`` positions for all
+    heads — pool shape ``(num_pages, n_heads, page_size, d)`` flattened row-major
+    (page_size on sublanes, d on lanes: the LayoutTiledTPU-friendly orientation).
+
+        page   = block_table[seq][pos // page_size]
+        slot   = pos %  page_size
+        offset = ((page * n_heads + head) * page_size + slot) * d + d_idx
+
+    This is the layout the C++ committee never shipped: the indirection through
+    ``block_table`` makes the map non-affine, so it is NOT strided and (because
+    the pool is over-provisioned) NOT contiguous, yet it IS unique whenever the
+    table doesn't alias pages — exactly the Table I observer combination that
+    distinguishes it from every standard layout. Consumers that interrogate
+    ``is_strided()`` (BLAS-style kernels) reject it at trace time; the paged
+    flash-decode kernel (kernels/paged_attention.py) consumes the block table
+    natively via scalar-prefetch BlockSpecs.
+
+    ``block_table`` is a tuple-of-tuples (hashable, trace-time constant); rows are
+    logical pages in order. Entries must be in ``[0, num_pages)`` — use a reserved
+    null page for unallocated tail entries and keep those positions masked.
+    """
+
+    extents: Extents
+    block_table: Tuple[Tuple[int, ...], ...] = ()
+    page_size: int = 16
+    num_pages: int = 0
+
+    def __post_init__(self):
+        if self.extents.rank != 4:
+            raise TypeError("LayoutPaged requires rank-4 (seq, head, pos, d) extents")
+        n_seq, _, max_pos, _ = self.extents.sizes
+        if self.page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if max_pos % self.page_size != 0:
+            raise TypeError(
+                f"pos extent {max_pos} not a multiple of page_size {self.page_size}"
+            )
+        table = tuple(tuple(int(p) for p in row) for row in self.block_table)
+        object.__setattr__(self, "block_table", table)
+        if len(table) != n_seq:
+            raise TypeError(f"{len(table)} block-table rows for {n_seq} sequences")
+        pages_per_seq = max_pos // self.page_size
+        for row in table:
+            if len(row) != pages_per_seq:
+                raise TypeError(
+                    f"block-table row of {len(row)} entries; need {pages_per_seq}"
+                )
+            for p in row:
+                if not (0 <= p < self.num_pages):
+                    raise ValueError(f"page id {p} outside pool [0, {self.num_pages})")
+
+    @staticmethod
+    def dense(n_seq: int, n_heads: int, max_pos: int, d: int, page_size: int) -> "LayoutPaged":
+        """Identity block table covering the domain exactly (the LayoutRight
+        cross-check instance: no over-provisioning, pages in logical order)."""
+        pages_per_seq = max_pos // page_size
+        table = tuple(
+            tuple(s * pages_per_seq + j for j in range(pages_per_seq))
+            for s in range(n_seq)
+        )
+        return LayoutPaged(
+            Extents.fully_dynamic(n_seq, n_heads, max_pos, d),
+            table, page_size, n_seq * pages_per_seq,
+        )
+
+    # -- mapping ------------------------------------------------------------------
+    def _table_array(self):
+        return jnp.asarray(self.block_table, dtype=jnp.int32)
+
+    def __call__(self, s, h, p, d):
+        _, n_heads, _, d_sz = self.extents.sizes
+        ps = self.page_size
+        if all(isinstance(i, int) for i in (s, h, p, d)):
+            page = self.block_table[s][p // ps]
+        else:
+            page = self._table_array()[s, p // ps]
+        slot = p % ps
+        return ((page * n_heads + h) * ps + slot) * d_sz + d
+
+    def pool_shape(self) -> Tuple[int, int, int, int]:
+        """The codomain factored as an ndarray: (num_pages, n_heads, page_size, d)."""
+        return (self.num_pages, self.extents.extent(1), self.page_size, self.extents.extent(3))
+
+    # -- observers ----------------------------------------------------------------
+    def required_span_size(self) -> int:
+        return self.num_pages * self.extents.extent(1) * self.page_size * self.extents.extent(3)
+
+    def is_unique(self) -> bool:
+        entries = [p for row in self.block_table for p in row]
+        return len(entries) == len(set(entries))
+
+    def is_contiguous(self) -> bool:
+        entries = sorted(p for row in self.block_table for p in row)
+        return entries == list(range(self.num_pages))
+
+    def is_strided(self) -> bool:
+        # Type-level answer: the table indirection breaks affine strides
+        # (identity-table instances are not special-cased).
+        return False
 
 
 def layout_of_dense(arr_shape: Sequence[int], order: str = "right") -> LayoutMapping:

@@ -30,6 +30,8 @@ from . import ref
 from .common import use_interpret
 from .flash_attention import flash_attention as _flash_fwd
 from .flash_attention import flash_decode as _flash_decode
+from .paged_attention import paged_decode_attention_jnp as _paged_decode_jnp
+from .paged_attention import paged_flash_decode as _paged_flash_decode
 from .matvec import matvec_left, matvec_right
 from .quant_matmul import quant_matmul as _qmm_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
@@ -147,6 +149,18 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None, impl:
     return attention_jnp(
         q, k_cache, v_cache, causal=True, window=window, q_offset=pos, scale=scale
     )
+
+
+def paged_decode_attention(
+    q, k_pool, v_pool, block_tables, context_lens, *, scale=None, impl: str = "auto"
+):
+    """One-token GQA decode against a LayoutPaged pool (num_pages, Hkv, ps, D);
+    block_tables (B, max_pages) int32; context_lens (B,) int32 per-sequence."""
+    if _want_pallas(impl):
+        return _paged_flash_decode(
+            q, k_pool, v_pool, block_tables, context_lens, scale=scale
+        )
+    return _paged_decode_jnp(q, k_pool, v_pool, block_tables, context_lens, scale=scale)
 
 
 # ---------------------------------------------------------------------------------

@@ -1,0 +1,180 @@
+"""Paged-attention decode — Pallas TPU kernel over a LayoutPaged KV pool.
+
+The KV cache is a pool of fixed-size pages, (num_pages, Hkv, page_size, D), and
+each sequence owns a row of a block table mapping logical page j -> physical
+page id. This is core.layouts.LayoutPaged made executable: the kernel's k/v
+BlockSpec index maps read the block table through scalar prefetch
+(PrefetchScalarGridSpec), so the layout's index->offset indirection runs on the
+scalar core while pages DMA into VMEM — no dense (B, Hkv, S, D) cache ever
+materializes and pages of different sequences can live anywhere in the pool.
+
+Per-sequence lengths (continuous batching: every row of the batch is at a
+different position) ride in through the second prefetch operand and drive both
+the online-softmax masking and the page skip predicate.
+
+``paged_decode_attention_jnp`` is the identical-semantics twin (gather pages by
+table, mask by length) used off-TPU and as the differentiable/cheap fallback;
+both are validated against ref.attention on densified pools in
+tests/test_serving_engine.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import use_interpret
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    bt_ref,    # scalar prefetch: (B, max_pages) int32 block table
+    len_ref,   # scalar prefetch: (B,) int32 live token counts
+    q_ref,     # (1, 1, G, D)
+    k_ref,     # (1, page_size, D) — physical page picked by the index map
+    v_ref,     # (1, page_size, D)
+    o_ref,     # (1, 1, G, D)
+    acc_ref,   # (G, D) f32
+    m_ref,     # (G, 1) f32
+    l_ref,     # (G, 1) f32
+    *,
+    scale: float,
+    page_size: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g_sz = q_ref.shape[2]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = len_ref[b]
+    # absolute position of slot i in logical page j is j*page_size + i
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (g_sz, page_size), 1)
+    live = k_pos < seq_len
+
+    @pl.when(j * page_size < seq_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        k = k_ref[0].astype(jnp.float32)     # (page_size, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, page_size)
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def paged_flash_decode(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token GQA decode against a paged KV pool.
+
+    q: (B, Hq, 1, D); k_pool/v_pool: (num_pages, Hkv, page_size, D) — the
+    LayoutPaged codomain factored as an ndarray (layout.pool_shape());
+    block_tables: (B, max_pages) int32, row b = physical page of logical page j
+    (entries past the sequence's allocation must still be valid pool indices —
+    point them at a reserved null page); context_lens: (B,) int32, positions
+    < context_lens[b] attend (the current token's K/V must already be written).
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, tq, d = q.shape
+    num_pages, hkv, page_size, _ = k_pool.shape
+    assert tq == 1 and hq % hkv == 0
+    group = hq // hkv
+    max_pages = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, d)
+
+    kern = functools.partial(_paged_decode_kernel, scale=scale, page_size=page_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+            # the LayoutPaged indirection: logical page j of sequence bb DMAs
+            # physical page block_tables[bb, j]
+            pl.BlockSpec((1, None, page_size, d), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)),
+            pl.BlockSpec((1, None, page_size, d), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(b, hq, 1, d)
+
+
+def paged_decode_attention_jnp(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """jnp twin: gather each sequence's pages by table, mask by length.
+
+    Identical semantics to paged_flash_decode; O(B·max_pages·page_size) gather.
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, page_size, _ = k_pool.shape
+    assert tq == 1 and hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    # (B, max_pages, Hkv, ps, D) -> (B, Hkv, max_pages*ps, D)
+    k = jnp.moveaxis(k_pool[block_tables], 2, 1)
+    v = jnp.moveaxis(v_pool[block_tables], 2, 1)
+    s_len = k.shape[2] * page_size
+    k = k.reshape(b, hkv, s_len, d).astype(jnp.float32)
+    v = v.reshape(b, hkv, s_len, d).astype(jnp.float32)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k) * scale
+    live = jnp.arange(s_len)[None, :] < context_lens[:, None]  # (B, S)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    # kernel-parity normalization: fully-masked rows (context_lens == 0) output
+    # exact zeros, matching the Pallas safe_l path — not a softmax mean of garbage
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * live[:, None, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v) / jnp.where(l == 0.0, 1.0, l)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

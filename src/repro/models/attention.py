@@ -60,6 +60,38 @@ def cache_specs(cfg, batch: int, seq: int) -> Dict[str, TensorSpec]:
     }
 
 
+def paged_cache_specs(cfg, num_pages: int, page_size: int) -> Dict[str, TensorSpec]:
+    """Per-layer paged KV pool — the LayoutPaged codomain (pool_shape()) as a
+    TensorSpec. Page-major with (page_size, head_dim) innermost keeps each page a
+    LayoutTiledTPU-friendly (sublane, lane) tile."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    return {
+        "k": TensorSpec((num_pages, hkv, page_size, dh), (None, "kv_heads", None, None), dtype=dt, init="zeros"),
+        "v": TensorSpec((num_pages, hkv, page_size, dh), (None, "kv_heads", None, None), dtype=dt, init="zeros"),
+    }
+
+
+def pack_kv_pages(pool: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
+                  pages: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter freshly-prefilled K/V into pool pages (the prefill->paged adapter).
+
+    pool k/v: (L, num_pages, Hkv, ps, Dh); k/v: (L, 1, Hkv, S, Dh) with S a
+    multiple of ps (pack_kv_cache pads); pages: (n,) physical ids of the
+    sequence's logical pages 0..n-1, n == S // ps.
+    """
+    l, _, hkv, s, dh = k.shape
+    ps = pool["k"].shape[3]
+    n = s // ps
+    # (L, Hkv, n, ps, Dh) -> (L, n, Hkv, ps, Dh)
+    kp = jnp.swapaxes(k[:, 0].reshape(l, hkv, n, ps, dh), 1, 2)
+    vp = jnp.swapaxes(v[:, 0].reshape(l, hkv, n, ps, dh), 1, 2)
+    return {
+        "k": pool["k"].at[:, pages].set(kp.astype(pool["k"].dtype)),
+        "v": pool["v"].at[:, pages].set(vp.astype(pool["v"].dtype)),
+    }
+
+
 def pack_kv_cache(cfg, k: jax.Array, v: jax.Array, *, max_len: Optional[int],
                   window: Optional[int]) -> Dict[str, jax.Array]:
     """Lay freshly-prefilled K/V (B, Hkv, S, Dh) into the decode cache layout.
@@ -255,6 +287,45 @@ def self_attention_decode(
         sL = jnp.where(live[None, None, None, :], sL, -1e30)
         pr = jax.nn.softmax(sL, axis=-1)
         out = jnp.einsum("bhqk,bhkd->bhqd", pr, vf).astype(x.dtype)
+    y = _out_proj(p, out, x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
+def self_attention_decode_paged(
+    cfg,
+    p,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    shard: Sharder = NULL_SHARDER,
+    impl: str = "auto",
+):
+    """One-token decode against a paged KV pool (the LayoutPaged cache adapter).
+
+    x: (B, 1, D); cache k/v: (num_pages, Hkv, ps, Dh) — one layer's page pool;
+    block_tables: (B, max_pages) int32 (rows shared by all layers);
+    context_lens: (B,) int32 tokens already cached per sequence — the new token
+    is written at position context_lens[b], i.e. page block_tables[b, len//ps]
+    slot len % ps, exactly LayoutPaged's index->offset map. Unlike the dense
+    decode path, every batch row has its OWN position (continuous batching).
+
+    Single-host path: ``shard`` is accepted for API symmetry with
+    self_attention_decode but no mesh-aware variant exists yet — on a mesh the
+    page pool replicates (multi-host paging is a ROADMAP open item).
+    """
+    b, _, d = x.shape
+    ps = cache["k"].shape[2]
+    q, k, v = _project_qkv(cfg, p, x)
+    pos = jnp.asarray(context_lens, jnp.int32)  # (B,)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    page = block_tables[jnp.arange(b), pos // ps]  # (B,)
+    slot = pos % ps
+    ck = cache["k"].at[page, :, slot, :].set(k[:, :, 0, :].astype(cache["k"].dtype))
+    cv = cache["v"].at[page, :, slot, :].set(v[:, :, 0, :].astype(cache["v"].dtype))
+    out = ops.paged_decode_attention(q, ck, cv, block_tables, pos + 1, impl=impl)
     y = _out_proj(p, out, x.dtype)
     return y, {"k": ck, "v": cv}
 

@@ -134,6 +134,22 @@ class DenseBlock:
         x = x + apply_mlp(cfg, p["mlp"], h, shard)
         return x, cache
 
+    def paged_cache_specs(self, cfg, num_pages: int, page_size: int):
+        if self._window(cfg) is not None:
+            raise NotImplementedError("paged KV caching does not support local windows")
+        return attn.paged_cache_specs(cfg, num_pages, page_size)
+
+    def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
+                     impl: str = "auto"):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_decode_paged(
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard, impl=impl
+        )
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_mlp"])
+        x = x + apply_mlp(cfg, p["mlp"], h, shard)
+        return x, cache
+
 
 class MoEBlock(DenseBlock):
     def specs(self, cfg, quant=None):
@@ -162,6 +178,17 @@ class MoEBlock(DenseBlock):
     def decode(self, cfg, p, x, cache, pos, shard, ctx=None):
         h = apply_norm(cfg, x, p["ln_attn"])
         y, cache = attn.self_attention_decode(cfg, p["attn"], h, cache, pos, shard=shard)
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_moe"])
+        y, _ = moe_mod.apply_moe_dispatch(cfg, p["moe"], h, shard)
+        return x + y, cache
+
+    def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
+                     impl: str = "auto"):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_decode_paged(
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard, impl=impl
+        )
         x = x + y
         h = apply_norm(cfg, x, p["ln_moe"])
         y, _ = moe_mod.apply_moe_dispatch(cfg, p["moe"], h, shard)
@@ -556,6 +583,51 @@ class Model:
         logits = apply_lm_head(cfg, params["embed"], x[:, -1:])
         logits = shard(logits, "batch", "seq", "vocab")
         return logits, caches
+
+    # ---- paged serving (continuous batching) -------------------------------------
+    def paged_cache_specs(self, num_pages: int, page_size: int):
+        cfg = self.cfg
+        for kind, _ in block_program(cfg):
+            if not hasattr(KINDS[kind], "paged_cache_specs"):
+                raise NotImplementedError(
+                    f"paged KV caching supports dense-attention blocks; got {kind!r}"
+                )
+        return [
+            stack_specs(KINDS[k].paged_cache_specs(cfg, num_pages, page_size), n)
+            for k, n in block_program(cfg)
+        ]
+
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        return tree_initialize(
+            self.paged_cache_specs(num_pages, page_size), jax.random.key(0)
+        )
+
+    def decode_step_paged(self, params, caches, tokens: jax.Array,
+                          block_tables: jax.Array, context_lens: jax.Array, *,
+                          shard: Sharder = NULL_SHARDER, attn_impl: str = "auto"):
+        """Continuous-batching decode: tokens (B,) ids; block_tables (B, max_pages)
+        int32; context_lens (B,) int32 per-sequence positions. caches are per-layer
+        page pools (L, num_pages, Hkv, ps, Dh) addressed through the shared block
+        table — the LayoutPaged serving path."""
+        cfg = self.cfg
+        x = apply_embed(params["embed"], tokens[:, None])
+        if cfg.family == "hybrid":
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+        new_caches = []
+        for (kind, n), p, cache in zip(block_program(cfg), params["blocks"], caches):
+            blk = KINDS[kind]
+
+            def body(xc, pc, _blk=blk):
+                pl, cl = pc
+                return _blk.decode_paged(
+                    cfg, pl, xc, cl, block_tables, context_lens, shard, impl=attn_impl
+                )
+
+            x, cache = stack_scan(body, x, (p, cache))
+            new_caches.append(cache)
+        x = apply_norm(cfg, x, params["final_norm"])
+        logits = apply_lm_head(cfg, params["embed"], x)
+        return logits[:, 0], new_caches
 
     def decode_step(self, params, caches, tokens: jax.Array, pos, *,
                     shard: Sharder = NULL_SHARDER):

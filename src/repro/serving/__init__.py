@@ -1,3 +1,3 @@
-from .step import make_prefill, make_serve_step
+from .step import make_paged_serve_step, make_prefill, make_serve_step
 
-__all__ = ["make_prefill", "make_serve_step"]
+__all__ = ["make_paged_serve_step", "make_prefill", "make_serve_step"]

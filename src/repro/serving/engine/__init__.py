@@ -1,0 +1,22 @@
+"""Continuous-batching serving engine over a paged (LayoutPaged) KV cache.
+
+    engine = ServeEngine(model, params, EngineConfig(num_pages=64, page_size=16))
+    engine.submit(Request(rid=0, prompt=[...], max_new_tokens=32))
+    results = engine.run()          # rid -> RequestState (tokens in .generated)
+    print(engine.metrics())         # tokens/sec, p50/p99 latency, preemptions
+"""
+from .cache import PagedKVCache
+from .engine import EngineConfig, ServeEngine
+from .request import Request, RequestQueue, RequestState
+from .scheduler import Scheduler, SchedulerConfig
+
+__all__ = [
+    "EngineConfig",
+    "PagedKVCache",
+    "Request",
+    "RequestQueue",
+    "RequestState",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServeEngine",
+]

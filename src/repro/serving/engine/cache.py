@@ -1,0 +1,121 @@
+"""PagedKVCache: device page pools + host page allocator, specified by LayoutPaged.
+
+The device side is one page pool per layer stack, (L, num_pages, Hkv, ps, Dh) —
+the LayoutPaged codomain (layout.pool_shape()) with a leading layer dim; every
+layer shares the SAME block table, so one host-side allocation covers the whole
+model. The host side is a free-list allocator over physical page ids plus the
+block-table rows the Pallas kernel prefetches.
+
+Page 0 is the reserved NULL page: inactive batch slots and unallocated table
+entries point at it, so out-of-range DMA picks and masked scatter writes always
+land somewhere harmless.
+
+``layout_for(slot)`` materializes the formal mdspan view of one sequence's cache
+— the LayoutPaged instance whose offsets address the flat pool. ``dense_view``
+gathers through exactly those offsets; tests use it to cross-check that the
+engine's scatter writes and the layout's index->offset algebra agree.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Extents, LayoutPaged
+from repro.models.attention import pack_kv_pages
+
+_pack_kv_pages = jax.jit(pack_kv_pages, donate_argnums=(0,))
+
+
+class PagedKVCache:
+    def __init__(self, model, *, num_pages: int, page_size: int, max_batch: int,
+                 max_pages_per_seq: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
+        self.cfg = model.cfg
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_batch = max_batch
+        self.max_pages_per_seq = max_pages_per_seq
+        self.pools = model.init_paged_cache(num_pages, page_size)
+        self._free: deque = deque(range(1, num_pages))
+        # block-table rows + live lengths, indexed by batch slot (null-page filled)
+        self.tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
+        self.lens = np.zeros((max_batch,), np.int32)
+        self.pages_of: Dict[int, List[int]] = {}
+
+    # -- allocator ---------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def allocate(self, slot: int, n_pages: int) -> List[int]:
+        if n_pages > len(self._free):
+            raise RuntimeError(f"pool exhausted: want {n_pages}, free {len(self._free)}")
+        if n_pages > self.max_pages_per_seq:
+            raise RuntimeError(
+                f"sequence needs {n_pages} pages > max_pages_per_seq {self.max_pages_per_seq}"
+            )
+        pages = [self._free.popleft() for _ in range(n_pages)]
+        self.pages_of[slot] = pages
+        self.tables[slot, :] = 0
+        self.tables[slot, : len(pages)] = pages
+        return pages
+
+    def append_page(self, slot: int) -> bool:
+        """Grow a running sequence by one page; False when the pool is exhausted
+        (caller preempts a victim and retries)."""
+        pages = self.pages_of[slot]
+        if len(pages) >= self.max_pages_per_seq:
+            raise RuntimeError(f"slot {slot} hit max_pages_per_seq {self.max_pages_per_seq}")
+        if not self._free:
+            return False
+        p = self._free.popleft()
+        pages.append(p)
+        self.tables[slot, len(pages) - 1] = p
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        for p in self.pages_of.pop(slot, []):
+            self._free.append(p)
+        self.tables[slot, :] = 0
+        self.lens[slot] = 0
+
+    # -- device writes -----------------------------------------------------------
+    def write_prefill(self, slot: int, caches) -> None:
+        """Scatter a single-sequence prefill's packed KV (list of per-entry
+        {"k": (L, 1, Hkv, S, Dh), ...}, S == n_pages * ps) into this slot's pages."""
+        n = caches[0]["k"].shape[3] // self.page_size
+        pages = jnp.asarray(self.pages_of[slot][:n], jnp.int32)
+        self.pools = [
+            _pack_kv_pages(pool, c["k"], c["v"], pages)
+            for pool, c in zip(self.pools, caches)
+        ]
+
+    # -- mdspan view -------------------------------------------------------------
+    def layout_for(self, slot: int) -> LayoutPaged:
+        """The LayoutPaged mapping of one sequence's cache over the flat pool."""
+        pages = self.pages_of[slot]
+        hkv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
+        return LayoutPaged(
+            Extents.fully_dynamic(1, hkv, len(pages) * self.page_size, dh),
+            (tuple(pages),),
+            self.page_size,
+            self.num_pages,
+        )
+
+    def dense_view(self, slot: int, entry: int = 0, layer: int = 0):
+        """(k, v) of shape (Hkv, len, Dh) gathered through layout_for(slot)'s
+        offsets — the generic-fallback read path of the paged layout."""
+        layout = self.layout_for(slot)
+        offs = layout.offsets_dense()[0]  # (Hkv, n_pages*ps, Dh)
+        length = int(self.lens[slot])
+        k = jnp.take(self.pools[entry]["k"][layer].reshape(-1), offs)[:, :length, :]
+        v = jnp.take(self.pools[entry]["v"][layer].reshape(-1), offs)[:, :length, :]
+        return k, v

@@ -1,0 +1,227 @@
+"""ServeEngine: continuous-batching generation over a paged KV cache.
+
+One engine step = (admit + prefill newcomers) then (one batched decode step for
+every running sequence). Sequences enter and leave the batch at arbitrary steps
+(continuous batching): a fixed-size slot vector keeps the decode computation at
+one compiled shape, and per-slot positions (context_lens) + block-table rows
+carry each sequence's own state into decode_step_paged — the LayoutPaged path.
+
+Invariants the step loop maintains per running slot:
+  - cache.lens[slot] == len(state.context) - 1: every context token EXCEPT the
+    newest generated one has its KV in the pool;
+  - the decode input is state.generated[-1]; its KV is written at position
+    lens[slot] during the step (LayoutPaged: page table[lens//ps], slot lens%ps);
+  - the slot owns a page covering position lens[slot] (scheduler guarantee,
+    preempting later arrivals when the pool runs dry).
+
+Prefill of a newly admitted request runs at batch 1 on the sequence's true
+length (the KV pool is padded to whole pages, the logits are read at the true
+last position), then the packed KV pages are scattered into the pool.
+Preemption is recompute-style: pages are dropped and the full context
+(prompt + generated so far) is re-prefilled on re-admission, which under greedy
+decoding reproduces the identical continuation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.step import make_paged_serve_step, make_prefill
+
+from .cache import PagedKVCache
+from .request import Request, RequestQueue, RequestState
+from .scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_pages: int = 64
+    page_size: int = 16
+    max_batch: int = 8
+    max_pages_per_seq: int = 16
+    watermark_pages: int = 1
+    attn_impl: str = "auto"  # "pallas" | "jnp" | "auto" — ops.paged_decode_attention
+
+    @classmethod
+    def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
+                  **kw) -> "EngineConfig":
+        """Pool sized so max_batch sequences of ``max_len`` tokens (prompt + new)
+        can run with no contention: per-seq pages cover max_len plus the one-page
+        decode headroom, and the pool adds the reserved null page 0."""
+        pages_per_seq = -(-max_len // page_size) + 1
+        return cls(
+            num_pages=max_batch * pages_per_seq + 1,
+            page_size=page_size,
+            max_batch=max_batch,
+            max_pages_per_seq=pages_per_seq,
+            **kw,
+        )
+
+
+class ServeEngine:
+    def __init__(self, model, params, config: EngineConfig = EngineConfig(),
+                 mesh=None, rules=None):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.cache = PagedKVCache(
+            model,
+            num_pages=config.num_pages,
+            page_size=config.page_size,
+            max_batch=config.max_batch,
+            max_pages_per_seq=config.max_pages_per_seq,
+        )
+        self.scheduler = Scheduler(
+            self.cache, SchedulerConfig(config.max_batch, config.watermark_pages)
+        )
+        self.queue = RequestQueue()
+        self._pending: List[RequestState] = []  # submitted, not yet arrived
+        self._mesh, self._rules = mesh, rules
+        self._step = jax.jit(
+            make_paged_serve_step(model, mesh, rules, attn_impl=config.attn_impl),
+            donate_argnums=(1,),
+        )
+        self._prefill_fns: Dict[int, object] = {}  # padded_len -> jitted prefill
+        self.results: Dict[int, RequestState] = {}
+        self.step_times: List[float] = []
+        self._n_decode_steps = 0
+
+    # -- submission -------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        need = self.cache.pages_for(len(request.prompt) + request.max_new_tokens)
+        if need > self.config.max_pages_per_seq:
+            raise ValueError(
+                f"request {request.rid} will need {need} pages "
+                f"(prompt {len(request.prompt)} + up to {request.max_new_tokens} new) "
+                f"> max_pages_per_seq {self.config.max_pages_per_seq}"
+            )
+        self._pending.append(RequestState(request))
+
+    def submit_all(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    # -- prefill path -----------------------------------------------------------
+    def _prefill_fn(self, padded_len: int):
+        fn = self._prefill_fns.get(padded_len)
+        if fn is None:
+            fn = jax.jit(
+                make_prefill(self.model, self._mesh, self._rules, max_len=padded_len)
+            )
+            self._prefill_fns[padded_len] = fn
+        return fn
+
+    def _admit_and_prefill(self, now: float) -> None:
+        for slot, state in self.scheduler.admit(self.queue, now):
+            ctx = state.context
+            padded = self.cache.pages_for(len(ctx)) * self.cache.page_size
+            tokens = jnp.asarray([ctx], jnp.int32)
+            logits, caches = self._prefill_fn(padded)(self.params, tokens)
+            self.cache.write_prefill(slot, caches)
+            self.cache.lens[slot] = len(ctx)
+            tok = int(jnp.argmax(logits[0, 0, : self.model.cfg.vocab]))
+            state.generated.append(tok)
+            if state.first_token_time is None:
+                state.first_token_time = time.perf_counter() - self._t0
+
+    # -- decode path ------------------------------------------------------------
+    def _decode_once(self, now: float) -> None:
+        running = self.scheduler.running
+        b = self.config.max_batch
+        tokens = np.zeros((b,), np.int32)
+        for slot, state in running.items():
+            tokens[slot] = state.generated[-1]
+        t0 = time.perf_counter()
+        logits, pools = self._step(
+            self.params,
+            self.cache.pools,
+            jnp.asarray(tokens),
+            jnp.asarray(self.cache.tables),
+            jnp.asarray(self.cache.lens),
+        )
+        self.cache.pools = pools
+        logits = np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
+        self.step_times.append(time.perf_counter() - t0)
+        self._n_decode_steps += 1
+        for slot, state in running.items():
+            state.generated.append(int(np.argmax(logits[slot])))
+            self.cache.lens[slot] += 1
+
+    def _sweep_finished(self) -> None:
+        for slot in list(self.scheduler.running):
+            state = self.scheduler.running[slot]
+            if state.done:
+                state.finish_time = time.perf_counter() - self._t0
+                self.scheduler.finish(slot)
+                self.results[state.request.rid] = state
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, requests: Optional[Sequence[Request]] = None) -> Dict[int, RequestState]:
+        """Serve until every submitted request completes; returns rid -> state."""
+        if requests is not None:
+            self.submit_all(requests)
+        self._pending.sort(key=lambda s: s.request.arrival_time)
+        self._t0 = time.perf_counter()
+        while self._pending or self.queue or self.scheduler.running:
+            now = time.perf_counter() - self._t0
+            while self._pending and self._pending[0].request.arrival_time <= now:
+                self.queue.push(self._pending.pop(0))
+            self._admit_and_prefill(now)
+            self._sweep_finished()  # a request can complete at prefill time
+            if self.scheduler.running:
+                for slot in sorted(self.scheduler.running):
+                    if slot in self.scheduler.running:
+                        self.scheduler.ensure_decode_page(slot, self.queue)
+                self._decode_once(now)
+                self._sweep_finished()
+            elif self._pending and not self.queue:
+                time.sleep(
+                    min(max(self._pending[0].request.arrival_time - now, 0.0), 0.01)
+                )
+            elif self.queue:
+                # nothing running, nothing arriving, head request not admitted:
+                # the whole (free) pool cannot hold it — this can never resolve
+                head = self.queue.peek()
+                raise RuntimeError(
+                    f"request {head.request.rid} needs "
+                    f"{self.cache.pages_for(len(head.context) + 1)} pages but only "
+                    f"{self.cache.num_free} exist — raise num_pages"
+                )
+        return self.results
+
+    def reset_metrics(self) -> None:
+        """Drop finished-request records and timing state (benchmarks rehearse a
+        warmup trace on the same engine so jit caches stay hot, then reset)."""
+        self.results = {}
+        self.step_times = []
+        self._n_decode_steps = 0
+
+    # -- metrics ------------------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        states = list(self.results.values())
+        if not states:
+            return {}
+        wall = max(s.finish_time for s in states)
+        e2e = np.array([s.finish_time - s.request.arrival_time for s in states])
+        ttft = np.array(
+            [s.first_token_time - s.request.arrival_time for s in states]
+        )
+        n_tok = sum(len(s.generated) for s in states)
+        return {
+            "requests": len(states),
+            "generated_tokens": n_tok,
+            "wall_s": float(wall),
+            "tokens_per_s": float(n_tok / wall) if wall > 0 else float("inf"),
+            "decode_steps": self._n_decode_steps,
+            "step_ms_p50": float(np.percentile(self.step_times, 50) * 1e3) if self.step_times else 0.0,
+            "latency_s_p50": float(np.percentile(e2e, 50)),
+            "latency_s_p99": float(np.percentile(e2e, 99)),
+            "ttft_s_p50": float(np.percentile(ttft, 50)),
+            "ttft_s_p99": float(np.percentile(ttft, 99)),
+            "preemptions": sum(s.n_preemptions for s in states),
+        }

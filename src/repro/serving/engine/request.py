@@ -1,0 +1,75 @@
+"""Requests and the FIFO admission queue for the continuous-batching engine."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request as submitted by a client."""
+
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = [int(t) for t in self.prompt]
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-side lifecycle of a request (survives preemption)."""
+
+    request: Request
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None  # batch slot while running, None while queued
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    n_preemptions: int = 0
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens that must be in the KV cache: prompt + everything generated.
+        After preemption this whole sequence is re-prefilled (recompute policy)."""
+        return self.request.prompt + self.generated
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return eos is not None and bool(self.generated) and self.generated[-1] == eos
+
+
+class RequestQueue:
+    """FIFO with front-requeue for preempted requests."""
+
+    def __init__(self):
+        self._q: Deque[RequestState] = deque()
+
+    def push(self, state: RequestState) -> None:
+        self._q.append(state)
+
+    def requeue_front(self, state: RequestState) -> None:
+        self._q.appendleft(state)
+
+    def peek(self) -> Optional[RequestState]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> RequestState:
+        return self._q.popleft()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

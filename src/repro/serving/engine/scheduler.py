@@ -1,0 +1,101 @@
+"""Step-level admission/eviction policy for the continuous-batching engine.
+
+Each engine step the scheduler:
+  1. admits queued requests FIFO while a batch slot is free AND the pool can
+     hold the whole context plus a one-page decode headroom (watermark) — never
+     admitting a request it would immediately have to preempt;
+  2. guarantees every running sequence a page for its next token, preempting
+     the MOST RECENTLY admitted other sequence when the pool runs dry
+     (LIFO victim choice keeps the oldest requests making progress, so total
+     recompute work is bounded); preempted sequences release all pages and
+     requeue at the FRONT with their generated tokens kept — on re-admission
+     the full context is re-prefilled (recompute, not swap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .cache import PagedKVCache
+from .request import RequestQueue, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int
+    watermark_pages: int = 1  # free pages kept back at admission for decode growth
+
+
+class Scheduler:
+    def __init__(self, cache: PagedKVCache, config: SchedulerConfig):
+        self.cache = cache
+        self.config = config
+        # slot -> state, in admission order (dict preserves insertion order)
+        self.running: Dict[int, RequestState] = {}
+
+    # -- admission -----------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.config.max_batch) if s not in self.running]
+
+    def fits(self, state: RequestState) -> bool:
+        # ServeEngine.submit() already rejected any request whose EVENTUAL
+        # footprint (pages_for(prompt + max_new_tokens), invariant under
+        # preemption/requeue) exceeds max_pages_per_seq, so only page
+        # availability is decided here
+        need = self.cache.pages_for(len(state.context) + 1)
+        # no watermark when the batch is empty: an unadmittable head request with
+        # nothing running would deadlock, and with no co-tenants there is nothing
+        # for decode growth to collide with
+        watermark = self.config.watermark_pages if self.running else 0
+        return need + watermark <= self.cache.num_free
+
+    def admit(self, queue: RequestQueue, now: float) -> List[Tuple[int, RequestState]]:
+        """Pop admissible requests, allocate their prompt pages (+1 headroom page
+        so the first decode token always has a slot), bind batch slots."""
+        admitted = []
+        slots = self.free_slots()
+        while queue and slots:
+            state = queue.peek()
+            if state.request.arrival_time > now or not self.fits(state):
+                break
+            queue.pop()
+            slot = slots.pop(0)
+            n_ctx = len(state.context)
+            self.cache.allocate(slot, self.cache.pages_for(n_ctx + 1))
+            state.slot = slot
+            state.admit_time = now
+            self.running[slot] = state
+            admitted.append((slot, state))
+        return admitted
+
+    # -- decode-page guarantee -------------------------------------------------------
+    def _preempt_one(self, queue: RequestQueue, keep_slot: int) -> Optional[RequestState]:
+        victims = [s for s in self.running if s != keep_slot]
+        if not victims:
+            return None
+        slot = victims[-1]  # most recently admitted
+        state = self.running.pop(slot)
+        self.cache.free_slot(slot)
+        state.slot = None
+        state.n_preemptions += 1
+        queue.requeue_front(state)
+        return state
+
+    def ensure_decode_page(self, slot: int, queue: RequestQueue) -> None:
+        """Make sure ``slot`` owns a page covering position lens[slot] (where the
+        next token's KV lands), preempting later arrivals if needed."""
+        pos = int(self.cache.lens[slot])
+        while pos >= len(self.cache.pages_of[slot]) * self.cache.page_size:
+            if self.cache.append_page(slot):
+                continue
+            if self._preempt_one(queue, keep_slot=slot) is None:
+                raise RuntimeError(
+                    "KV pool exhausted with a single running sequence — "
+                    "num_pages is too small for this request"
+                )
+
+    def finish(self, slot: int) -> RequestState:
+        state = self.running.pop(slot)
+        self.cache.free_slot(slot)
+        state.slot = None
+        return state

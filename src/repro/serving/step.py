@@ -14,6 +14,20 @@ def make_serve_step(model, mesh=None, rules=None):
     return serve_step
 
 
+def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto"):
+    shard = Sharder(mesh, rules)
+
+    def paged_serve_step(params, caches, tokens, block_tables, context_lens):
+        """tokens: (B,) int32; block_tables: (B, max_pages) int32; context_lens:
+        (B,) int32 per-sequence positions -> (logits (B, Vp), new page pools)."""
+        return model.decode_step_paged(
+            params, caches, tokens, block_tables, context_lens,
+            shard=shard, attn_impl=attn_impl,
+        )
+
+    return paged_serve_step
+
+
 def make_prefill(model, mesh=None, rules=None, max_len=None):
     shard = Sharder(mesh, rules)
 

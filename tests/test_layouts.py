@@ -9,6 +9,8 @@ For every layout instance we check, over its whole (test-sized) domain:
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
