@@ -23,9 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    Extents,
-    LayoutLeft,
-    LayoutRight,
     MdSpan,
     QuantizedAccessor,
     all_,

@@ -16,7 +16,6 @@ fwd+bwd; decode/prefill: 2·N·D per token forward).
 """
 from __future__ import annotations
 
-import glob
 import json
 from pathlib import Path
 

@@ -18,6 +18,10 @@ def main() -> None:
     ap.add_argument(
         "--only", default="all", choices=["all", "paper", "roofline", "serving"]
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized serving run: one sweep point, tiny model, few requests",
+    )
     args = ap.parse_args()
     if args.only in ("all", "paper"):
         from benchmarks import paper_suite
@@ -33,7 +37,7 @@ def main() -> None:
     if args.only in ("all", "serving"):
         from benchmarks import serving_suite
 
-        serving_suite.run()
+        serving_suite.run(smoke=args.smoke)
 
 
 if __name__ == "__main__":

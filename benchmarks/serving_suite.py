@@ -8,10 +8,18 @@ time-to-first-token). Each point warms the jit cache with a short rehearsal run
 so the measured pass times compiled code, then writes every point to
 ``BENCH_serving.json`` so the perf trajectory accumulates across PRs.
 
+A second section replays a shared-prefix trace (every prompt opens with the
+same system-prompt-style block) twice — prefix sharing on vs. off — and records
+the peak pages-in-use of each plus the token-exactness of the shared run: the
+copy-on-write paged cache should serve the burst from far fewer physical pages
+(capacity O(unique tokens), not O(total tokens)).
+
   PYTHONPATH=src python -m benchmarks.run --only serving
+  PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 
@@ -22,6 +30,8 @@ from repro.models import ModelConfig, Model
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 
 OUT_PATH = Path("BENCH_serving.json")
+SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # untracked: CI-sized numbers
+# must never clobber the tracked cross-PR trajectory in BENCH_serving.json
 
 POINTS = [  # (max_batch, page_size)
     (2, 8),
@@ -34,8 +44,23 @@ N_REQUESTS = 10
 MAX_NEW_TOKENS = 8
 MEAN_ARRIVAL_GAP_S = 0.02
 
+# shared-prefix section: a common block + short unique tails, arriving in a
+# burst. The prefix is NOT page-aligned and the 0 tail bucket repeats it
+# verbatim, so some requests share even the partial last page and the first
+# decode append exercises copy-on-write.
+SHARED_PREFIX_LEN = 34
+SHARED_TAIL_BUCKETS = (0, 4, 8)
+SHARED_N_REQUESTS = 8
+SHARED_MAX_BATCH = 4
+SHARED_PAGE_SIZE = 8
 
-def bench_config() -> ModelConfig:
+
+def bench_config(smoke: bool = False) -> ModelConfig:
+    if smoke:
+        return ModelConfig(
+            name="bench-tiny-dense-smoke", family="dense", n_layers=1, d_model=32,
+            vocab=256, n_heads=2, n_kv_heads=2, d_ff=64, dtype="float32",
+        )
     return ModelConfig(
         name="bench-tiny-dense", family="dense", n_layers=2, d_model=64,
         vocab=512, n_heads=4, n_kv_heads=2, d_ff=128, dtype="float32",
@@ -56,30 +81,105 @@ def make_requests(rng: np.random.Generator, vocab: int, n: int) -> list:
     return reqs
 
 
-def engine_for(model, params, max_batch: int, page_size: int) -> ServeEngine:
-    max_len = max(PROMPT_BUCKETS) + MAX_NEW_TOKENS + 1
+def make_shared_prefix_requests(rng: np.random.Generator, vocab: int, n: int,
+                                max_new: int) -> list:
+    prefix = rng.integers(0, vocab, size=SHARED_PREFIX_LEN).tolist()
+    # round-robin tail lengths so every bucket appears: the 0-tail requests are
+    # verbatim prompt repeats (maximal sharing + forced CoW), the rest diverge
+    tails = [SHARED_TAIL_BUCKETS[i % len(SHARED_TAIL_BUCKETS)] for i in range(n)]
+    return [
+        Request(
+            rid=i,
+            prompt=prefix + rng.integers(0, vocab, size=tails[i]).tolist(),
+            max_new_tokens=max_new,
+            arrival_time=0.0,  # burst: the whole batch contends for pages at once
+        )
+        for i in range(n)
+    ]
+
+
+def engine_for(model, params, max_batch: int, page_size: int,
+               max_new: int, **kw) -> ServeEngine:
+    max_len = max(PROMPT_BUCKETS) + max_new + 1
     return ServeEngine(
         model, params,
-        EngineConfig.sized_for(max_len, page_size=page_size, max_batch=max_batch),
+        EngineConfig.sized_for(max_len, page_size=page_size, max_batch=max_batch, **kw),
     )
 
 
-def run(out_path: Path = OUT_PATH) -> dict:
-    cfg = bench_config()
+def run_shared_prefix(model, params, vocab: int, n_requests: int,
+                      max_new: int) -> dict:
+    """The same burst through a sharing and a non-sharing engine; returns peak
+    pages-in-use for both, the savings, and whether outputs were token-exact."""
+    max_len = SHARED_PREFIX_LEN + max(SHARED_TAIL_BUCKETS) + max_new + 1
+    conf = EngineConfig.sized_for(
+        max_len, page_size=SHARED_PAGE_SIZE, max_batch=SHARED_MAX_BATCH,
+    )
+    outputs = {}
+    stats = {}
+    for mode, sharing in (("sharing_on", True), ("sharing_off", False)):
+        eng = ServeEngine(
+            model, params, dataclasses.replace(conf, prefix_sharing=sharing)
+        )
+        # rehearsal (same trace) compiles every prefill bucket + the decode
+        # step, then reset: measured throughput times compiled code, and the
+        # rehearsal's pages all freed so the index/peak start clean
+        eng.run(make_shared_prefix_requests(np.random.default_rng(7), vocab,
+                                            n_requests, max_new))
+        eng.reset_metrics()
+        rng = np.random.default_rng(7)
+        results = eng.run(make_shared_prefix_requests(rng, vocab, n_requests, max_new))
+        outputs[mode] = {rid: s.generated for rid, s in results.items()}
+        m = eng.metrics()
+        stats[mode] = m
+    on, off = stats["sharing_on"], stats["sharing_off"]
+    savings = 1.0 - on["peak_pages_in_use"] / max(off["peak_pages_in_use"], 1)
+    return {
+        "n_requests": n_requests,
+        "prefix_len": SHARED_PREFIX_LEN,
+        "page_size": SHARED_PAGE_SIZE,
+        "max_batch": SHARED_MAX_BATCH,
+        "peak_pages_sharing_on": on["peak_pages_in_use"],
+        "peak_pages_sharing_off": off["peak_pages_in_use"],
+        "peak_pages_saved_pct": round(100.0 * savings, 1),
+        "pages_shared": on["pages_shared"],
+        "cow_copies": on["cow_copies"],
+        "tokens_per_s_sharing_on": on["tokens_per_s"],
+        "tokens_per_s_sharing_off": off["tokens_per_s"],
+        "tokens_exact": outputs["sharing_on"] == outputs["sharing_off"],
+    }
+
+
+def run(out_path: Path = None, smoke: bool = False) -> dict:
+    if out_path is None:
+        out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
+    cfg = bench_config(smoke)
     model = Model(cfg)
     params = model.init_params(jax.random.key(0))
-    report = {"model": cfg.name, "points": []}
-    for max_batch, page_size in POINTS:
+    points = POINTS[:1] if smoke else POINTS
+    n_requests = 4 if smoke else N_REQUESTS
+    max_new = 4 if smoke else MAX_NEW_TOKENS
+    shared_n = 4 if smoke else SHARED_N_REQUESTS
+    report = {"model": cfg.name, "smoke": smoke, "points": []}
+    for max_batch, page_size in points:
         # rehearsal on the same engine: compile every prefill bucket + the decode
-        # step for these shapes (jit caches are per-engine), then reset and measure
-        eng = engine_for(model, params, max_batch, page_size)
+        # step for these shapes (jit caches are per-engine), then reset and
+        # measure. Rehearsal prompts use DISJOINT token ranges: page-aligned
+        # prefixes of each other would hit the prefix index and compile only the
+        # sliced (shared-tail) pack shapes, leaving the full-write shapes of the
+        # measured no-share trace to compile inside the timed region
+        eng = engine_for(model, params, max_batch, page_size, max_new)
         eng.run([
-            Request(rid=i, prompt=list(range(1, L + 1)), max_new_tokens=2)
+            Request(rid=i, prompt=list(range(1 + 100 * i, 1 + 100 * i + L)),
+                    max_new_tokens=2)
             for i, L in enumerate(PROMPT_BUCKETS)
         ])
         eng.reset_metrics()
         rng = np.random.default_rng(0)
-        eng.run(make_requests(rng, cfg.vocab, N_REQUESTS))
+        reqs = make_requests(rng, cfg.vocab, n_requests)
+        for r in reqs:
+            r.max_new_tokens = max_new
+        eng.run(reqs)
         m = eng.metrics()
         point = {"max_batch": max_batch, "page_size": page_size, **m}
         report["points"].append(point)
@@ -89,6 +189,14 @@ def run(out_path: Path = OUT_PATH) -> dict:
             f"p99={m['latency_s_p99']*1e3:.0f}ms ttft_p99={m['ttft_s_p99']*1e3:.0f}ms "
             f"preempt={m['preemptions']}"
         )
+    sp = run_shared_prefix(model, params, cfg.vocab, shared_n, max_new)
+    report["shared_prefix"] = sp
+    print(
+        f"serving/shared_prefix,peak_pages {sp['peak_pages_sharing_on']} vs "
+        f"{sp['peak_pages_sharing_off']} (-{sp['peak_pages_saved_pct']}%), "
+        f"shared={sp['pages_shared']} cow={sp['cow_copies']} "
+        f"exact={sp['tokens_exact']}"
+    )
     out_path.write_text(json.dumps(report, indent=2))
     print(f"serving suite written to {out_path}")
     return report

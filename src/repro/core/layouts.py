@@ -398,12 +398,22 @@ class LayoutPaged(LayoutMapping):
     ``block_table`` is a tuple-of-tuples (hashable, trace-time constant); rows are
     logical pages in order. Entries must be in ``[0, num_pages)`` — use a reserved
     null page for unallocated tail entries and keep those positions masked.
+
+    ``shared_pages`` names physical pages referenced by block tables OUTSIDE this
+    instance (prefix sharing: the allocator's refcount for them exceeds this
+    layout's own references). The map stays injective on its domain, but the
+    one-writer-per-offset property mdspan uniqueness promises is gone — so
+    ``is_unique()`` reports False exactly when the table references a shared page
+    (or aliases a page internally). ``fork()`` builds the aliased regime
+    explicitly; ``cow_slice()`` is the copy-on-write swap that re-privatizes one
+    logical page.
     """
 
     extents: Extents
     block_table: Tuple[Tuple[int, ...], ...] = ()
     page_size: int = 16
     num_pages: int = 0
+    shared_pages: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if self.extents.rank != 4:
@@ -428,6 +438,11 @@ class LayoutPaged(LayoutMapping):
             for p in row:
                 if not (0 <= p < self.num_pages):
                     raise ValueError(f"page id {p} outside pool [0, {self.num_pages})")
+        shared = tuple(sorted({int(p) for p in self.shared_pages}))
+        object.__setattr__(self, "shared_pages", shared)
+        for p in shared:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"shared page id {p} outside pool [0, {self.num_pages})")
 
     @staticmethod
     def dense(n_seq: int, n_heads: int, max_pos: int, d: int, page_size: int) -> "LayoutPaged":
@@ -467,7 +482,10 @@ class LayoutPaged(LayoutMapping):
 
     def is_unique(self) -> bool:
         entries = [p for row in self.block_table for p in row]
-        return len(entries) == len(set(entries))
+        if len(entries) != len(set(entries)):
+            return False  # two logical positions alias one (page, slot) internally
+        shared = set(self.shared_pages)
+        return not any(p in shared for p in entries)
 
     def is_contiguous(self) -> bool:
         entries = sorted(p for row in self.block_table for p in row)
@@ -477,6 +495,54 @@ class LayoutPaged(LayoutMapping):
         # Type-level answer: the table indirection breaks affine strides
         # (identity-table instances are not special-cased).
         return False
+
+    # -- prefix sharing / copy-on-write -------------------------------------------
+    def fork(self, seq: int, fresh_pages: Sequence[int] = ()) -> "LayoutPaged":
+        """A new layout with one more sequence row that shares row ``seq``'s
+        leading pages (prefix sharing). The forked row reuses row ``seq``'s first
+        ``pages_per_seq - len(fresh_pages)`` entries and takes ``fresh_pages``
+        (private storage for where the fork diverges) as its tail. The shared
+        entries now appear in two rows — aliasing INTERNAL to the table — so
+        ``is_unique()`` goes False until copy-on-write (``cow_slice``) resolves
+        every doubly-referenced page. ``shared_pages`` (external refcounts) is
+        carried through unchanged."""
+        rows = list(self.block_table)
+        if not (0 <= seq < len(rows)):
+            raise ValueError(f"no sequence {seq} to fork (have {len(rows)} rows)")
+        row = rows[seq]
+        fresh = tuple(int(p) for p in fresh_pages)
+        if len(fresh) > len(row):
+            raise ValueError(f"{len(fresh)} fresh pages for a {len(row)}-page row")
+        upto = len(row) - len(fresh)
+        rows.append(row[:upto] + fresh)
+        sizes = self.extents.sizes
+        return LayoutPaged(
+            Extents.fully_dynamic(sizes[0] + 1, *sizes[1:]),
+            tuple(rows),
+            self.page_size,
+            self.num_pages,
+            self.shared_pages,
+        )
+
+    def cow_slice(self, seq: int, logical_page: int, new_page: int) -> "LayoutPaged":
+        """The layout after a copy-on-write: row ``seq``'s ``logical_page`` entry
+        is swapped for the freshly copied ``new_page`` (private, so not shared).
+        The donor page leaves ``shared_pages`` once no row references it."""
+        rows = [list(r) for r in self.block_table]
+        if not (0 <= seq < len(rows)):
+            raise ValueError(f"no sequence {seq} to cow (have {len(rows)} rows)")
+        if not (0 <= logical_page < len(rows[seq])):
+            raise ValueError(
+                f"no logical page {logical_page} in a {len(rows[seq])}-page row"
+            )
+        old = rows[seq][logical_page]
+        rows[seq][logical_page] = int(new_page)
+        table = tuple(tuple(r) for r in rows)
+        still_referenced = {p for row in table for p in row}
+        shared = tuple(
+            p for p in self.shared_pages if p != old or p in still_referenced
+        )
+        return LayoutPaged(self.extents, table, self.page_size, self.num_pages, shared)
 
 
 def layout_of_dense(arr_shape: Sequence[int], order: str = "right") -> LayoutMapping:

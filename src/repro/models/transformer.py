@@ -562,7 +562,14 @@ class Model:
 
     # ---- serving -----------------------------------------------------------------
     def prefill(self, params, tokens: jax.Array, *, ctx=None, batch_inputs=None,
-                shard: Sharder = NULL_SHARDER, max_len: Optional[int] = None):
+                shard: Sharder = NULL_SHARDER, max_len: Optional[int] = None,
+                last_index=None):
+        """``last_index`` (traced int32 scalar) reads the logits at that position
+        instead of the static last column — the paged engine right-pads prompts
+        to whole-page lengths so ONE compile serves every prompt in a page
+        bucket, and the pad tail (causal: it attends backward only) never leaks
+        into real positions' KV. Leave None for recurrent/hybrid families: their
+        caches carry a final state that padding would pollute."""
         cfg = self.cfg
         if ctx is None and batch_inputs is not None:
             ctx = self.encode_ctx(params, batch_inputs, shard)
@@ -580,7 +587,11 @@ class Model:
             x, cache = stack_scan(body, x, p)
             caches.append(cache)
         x = apply_norm(cfg, x, params["final_norm"])
-        logits = apply_lm_head(cfg, params["embed"], x[:, -1:])
+        if last_index is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+        logits = apply_lm_head(cfg, params["embed"], x_last)
         logits = shard(logits, "batch", "seq", "vocab")
         return logits, caches
 

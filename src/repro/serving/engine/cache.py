@@ -10,6 +10,17 @@ Page 0 is the reserved NULL page: inactive batch slots and unallocated table
 entries point at it, so out-of-range DMA picks and masked scatter writes always
 land somewhere harmless.
 
+Prefix sharing: every physical page carries a refcount, and pages written by
+prefill are registered in an index keyed by the page-granular hash chain of the
+tokens they hold (request.page_hash_chain). ``allocate`` maps a new request's
+leading chain entries onto existing live pages (incref, no free-list pop), so
+the pool's capacity scales with UNIQUE tokens, not total tokens. Freeing
+decrements refcounts; a page returns to the free list — and leaves the index —
+only at refcount zero. A shared page is read-only: the first scatter into one
+(the decode append) must copy-on-write first (``needs_cow``/``cow_page``), and
+``layout_for`` reports the aliasing formally — LayoutPaged.is_unique() is False
+exactly while the slot's table references a refcount>1 page.
+
 ``layout_for(slot)`` materializes the formal mdspan view of one sequence's cache
 — the LayoutPaged instance whose offsets address the flat pool. ``dense_view``
 gathers through exactly those offsets; tests use it to cross-check that the
@@ -18,7 +29,7 @@ engine's scatter writes and the layout's index->offset algebra agree.
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,12 +38,25 @@ import numpy as np
 from repro.core import Extents, LayoutPaged
 from repro.models.attention import pack_kv_pages
 
+from .request import page_hash_chain
+
 _pack_kv_pages = jax.jit(pack_kv_pages, donate_argnums=(0,))
+
+
+def _copy_page(pool: Dict[str, jax.Array], src, dst) -> Dict[str, jax.Array]:
+    """Duplicate one physical page across all layers (the CoW device op)."""
+    return {
+        "k": pool["k"].at[:, dst].set(pool["k"][:, src]),
+        "v": pool["v"].at[:, dst].set(pool["v"][:, src]),
+    }
+
+
+_copy_page = jax.jit(_copy_page, donate_argnums=(0,))
 
 
 class PagedKVCache:
     def __init__(self, model, *, num_pages: int, page_size: int, max_batch: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, prefix_sharing: bool = True):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
         self.cfg = model.cfg
@@ -40,30 +64,102 @@ class PagedKVCache:
         self.num_pages = num_pages
         self.max_batch = max_batch
         self.max_pages_per_seq = max_pages_per_seq
+        self.prefix_sharing = prefix_sharing
         self.pools = model.init_paged_cache(num_pages, page_size)
         self._free: deque = deque(range(1, num_pages))
         # block-table rows + live lengths, indexed by batch slot (null-page filled)
         self.tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_batch,), np.int32)
         self.pages_of: Dict[int, List[int]] = {}
+        # per-page refcounts (ref[0] stays 0: the null page is never allocated)
+        self.ref = np.zeros((num_pages,), np.int32)
+        # prefix index: hash-chain key -> physical page holding that content,
+        # plus the reverse map so a dying page evicts its own entry
+        self._index: Dict[tuple, int] = {}
+        self._key_of: Dict[int, tuple] = {}
+        # pages of a just-allocated slot already holding its prefix (skip their
+        # prefill scatter); consumed by write_prefill
+        self._shared_upto: Dict[int, int] = {}
+        # stats (benchmarks read these through ServeEngine.metrics)
+        self.pages_shared_total = 0
+        self.cow_copies = 0
+        self.peak_pages_in_use = 0
 
     # -- allocator ---------------------------------------------------------------
     @property
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
-    def allocate(self, slot: int, n_pages: int) -> List[int]:
-        if n_pages > len(self._free):
-            raise RuntimeError(f"pool exhausted: want {n_pages}, free {len(self._free)}")
+    def _take_free(self) -> int:
+        p = self._free.popleft()
+        self.ref[p] = 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return p
+
+    def _chain(self, tokens) -> List[tuple]:
+        """Prefix keys for a context — empty when sharing is off (the index is
+        never read then, so no admission should pay the hashing either)."""
+        if not self.prefix_sharing or tokens is None:
+            return []
+        return page_hash_chain(tokens, self.page_size)
+
+    def _match_prefix(self, chain) -> List[int]:
+        """Leading run of live pages already holding this context's pages.
+        Chained keys make a hit at entry i imply the full token prefix through
+        page i matches, so the run can be adopted wholesale."""
+        matched = []
+        for key in chain:
+            page = self._index.get(key)
+            if page is None:
+                break
+            matched.append(page)
+        return matched
+
+    def new_pages_needed(self, tokens, chain=None) -> int:
+        """Free-list pages a request with this context must pop to run one more
+        token — its admission cost. Shared-prefix pages are free. ``chain``
+        (RequestState.hash_chain) skips re-hashing the context."""
+        if chain is None or not self.prefix_sharing:
+            chain = self._chain(tokens)
+        return self.pages_for(len(tokens) + 1) - len(self._match_prefix(chain))
+
+    def allocate(self, slot: int, n_pages: int, tokens=None, chain=None) -> List[int]:
+        """Bind ``n_pages`` logical pages to ``slot``: the leading run found in
+        the prefix index is adopted by reference (incref), the rest pops from the
+        free list. Fresh pages that prefill will fill are registered under the
+        context's chain keys so later arrivals can share them in turn."""
         if n_pages > self.max_pages_per_seq:
             raise RuntimeError(
                 f"sequence needs {n_pages} pages > max_pages_per_seq {self.max_pages_per_seq}"
             )
-        pages = [self._free.popleft() for _ in range(n_pages)]
+        if chain is None or not self.prefix_sharing:
+            chain = self._chain(tokens)
+        shared = self._match_prefix(chain)[:n_pages]
+        n_new = n_pages - len(shared)
+        if n_new > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: want {n_new} new pages "
+                f"({n_pages} total, {len(shared)} shared), free {len(self._free)}"
+            )
+        for p in shared:
+            self.ref[p] += 1
+        self.pages_shared_total += len(shared)
+        pages = shared + [self._take_free() for _ in range(n_new)]
+        # register the fresh content-bearing pages (chain covers exactly the
+        # pages prefill fills; the +1 decode-headroom tail has no content yet)
+        for i in range(len(shared), min(len(chain), n_pages)):
+            if chain[i] not in self._index:
+                self._index[chain[i]] = pages[i]
+                self._key_of[pages[i]] = chain[i]
         self.pages_of[slot] = pages
+        self._shared_upto[slot] = len(shared)
         self.tables[slot, :] = 0
         self.tables[slot, : len(pages)] = pages
         return pages
@@ -76,31 +172,86 @@ class PagedKVCache:
             raise RuntimeError(f"slot {slot} hit max_pages_per_seq {self.max_pages_per_seq}")
         if not self._free:
             return False
-        p = self._free.popleft()
+        p = self._take_free()
         pages.append(p)
         self.tables[slot, len(pages) - 1] = p
         return True
 
-    def free_slot(self, slot: int) -> None:
-        for p in self.pages_of.pop(slot, []):
+    def _release_page(self, p: int) -> None:
+        self.ref[p] -= 1
+        assert self.ref[p] >= 0, f"page {p} refcount went negative"
+        if self.ref[p] == 0:
+            key = self._key_of.pop(p, None)
+            if key is not None:
+                self._index.pop(key, None)
             self._free.append(p)
+
+    def free_slot(self, slot: int) -> None:
+        """Release the slot's pages (idempotent). Shared pages survive with the
+        other holders; only refcount-zero pages rejoin the free list."""
+        for p in self.pages_of.pop(slot, []):
+            self._release_page(p)
+        self._shared_upto.pop(slot, None)
         self.tables[slot, :] = 0
         self.lens[slot] = 0
+
+    # -- copy-on-write -----------------------------------------------------------
+    def needs_cow(self, slot: int) -> bool:
+        """True when the page the next decode token scatters into is shared —
+        writing it in place would corrupt every other holder's sequence."""
+        pos = int(self.lens[slot])
+        pages = self.pages_of[slot]
+        pi = pos // self.page_size
+        return pi < len(pages) and self.ref[pages[pi]] > 1
+
+    def cow_page(self, slot: int) -> bool:
+        """Privatize the page covering position lens[slot]: copy it to a fresh
+        page, swap the block-table entry, drop the donor's refcount. False when
+        no free page exists (caller preempts a victim and retries)."""
+        if not self._free:
+            return False
+        pos = int(self.lens[slot])
+        pi = pos // self.page_size
+        pages = self.pages_of[slot]
+        old = pages[pi]
+        new = self._take_free()
+        self.pools = [_copy_page(pool, old, new) for pool in self.pools]
+        pages[pi] = new
+        self.tables[slot, pi] = new
+        self.ref[old] -= 1
+        self.cow_copies += 1
+        return True
 
     # -- device writes -----------------------------------------------------------
     def write_prefill(self, slot: int, caches) -> None:
         """Scatter a single-sequence prefill's packed KV (list of per-entry
-        {"k": (L, 1, Hkv, S, Dh), ...}, S == n_pages * ps) into this slot's pages."""
-        n = caches[0]["k"].shape[3] // self.page_size
-        pages = jnp.asarray(self.pages_of[slot][:n], jnp.int32)
+        {"k": (L, 1, Hkv, S, Dh), ...}, S == n_pages * ps) into this slot's pages.
+        Pages adopted from the prefix index already hold exactly these values
+        (KV is a pure per-token function of token id and absolute position), so
+        only the fresh tail is written."""
+        ps = self.page_size
+        n = caches[0]["k"].shape[3] // ps
+        start = min(self._shared_upto.pop(slot, 0), n)
+        if start >= n:
+            return
+        pages = jnp.asarray(self.pages_of[slot][start:n], jnp.int32)
         self.pools = [
-            _pack_kv_pages(pool, c["k"], c["v"], pages)
+            _pack_kv_pages(
+                pool, c["k"][:, :, :, start * ps :], c["v"][:, :, :, start * ps :], pages
+            )
             for pool, c in zip(self.pools, caches)
         ]
 
     # -- mdspan view -------------------------------------------------------------
+    def shared_pages_of(self, slot: int) -> Tuple[int, ...]:
+        """The slot's pages other holders also reference (refcount > 1)."""
+        return tuple(p for p in self.pages_of[slot] if self.ref[p] > 1)
+
     def layout_for(self, slot: int) -> LayoutPaged:
-        """The LayoutPaged mapping of one sequence's cache over the flat pool."""
+        """The LayoutPaged mapping of one sequence's cache over the flat pool.
+        Pages co-owned with other sequences surface as ``shared_pages``, so
+        ``is_unique()`` is False exactly while the table references a
+        refcount>1 page — the formal statement of the CoW obligation."""
         pages = self.pages_of[slot]
         hkv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
         return LayoutPaged(
@@ -108,6 +259,7 @@ class PagedKVCache:
             (tuple(pages),),
             self.page_size,
             self.num_pages,
+            self.shared_pages_of(slot),
         )
 
     def dense_view(self, slot: int, entry: int = 0, layer: int = 0):
@@ -119,3 +271,16 @@ class PagedKVCache:
         k = jnp.take(self.pools[entry]["k"][layer].reshape(-1), offs)[:, :length, :]
         v = jnp.take(self.pools[entry]["v"][layer].reshape(-1), offs)[:, :length, :]
         return k, v
+
+    # -- stats -------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "pages_shared": self.pages_shared_total,
+            "cow_copies": self.cow_copies,
+        }
+
+    def reset_stats(self) -> None:
+        self.pages_shared_total = 0
+        self.cow_copies = 0
+        self.peak_pages_in_use = self.pages_in_use

@@ -11,8 +11,11 @@ Invariants the step loop maintains per running slot:
     newest generated one has its KV in the pool;
   - the decode input is state.generated[-1]; its KV is written at position
     lens[slot] during the step (LayoutPaged: page table[lens//ps], slot lens%ps);
-  - the slot owns a page covering position lens[slot] (scheduler guarantee,
-    preempting later arrivals when the pool runs dry).
+  - the slot owns a WRITABLE page covering position lens[slot]: the scheduler
+    appends a page at page boundaries and copy-on-write-privatizes it when
+    prefix sharing left it refcount>1 (preempting later arrivals when the pool
+    runs dry), so the decode scatter never lands in a page another sequence
+    still reads.
 
 Prefill of a newly admitted request runs at batch 1 on the sequence's true
 length (the KV pool is padded to whole pages, the logits are read at the true
@@ -46,6 +49,7 @@ class EngineConfig:
     max_pages_per_seq: int = 16
     watermark_pages: int = 1
     attn_impl: str = "auto"  # "pallas" | "jnp" | "auto" — ops.paged_decode_attention
+    prefix_sharing: bool = True  # dedupe common prompt prefixes onto shared pages
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
@@ -75,6 +79,7 @@ class ServeEngine:
             page_size=config.page_size,
             max_batch=config.max_batch,
             max_pages_per_seq=config.max_pages_per_seq,
+            prefix_sharing=config.prefix_sharing,
         )
         self.scheduler = Scheduler(
             self.cache, SchedulerConfig(config.max_batch, config.watermark_pages)
@@ -120,8 +125,14 @@ class ServeEngine:
         for slot, state in self.scheduler.admit(self.queue, now):
             ctx = state.context
             padded = self.cache.pages_for(len(ctx)) * self.cache.page_size
-            tokens = jnp.asarray([ctx], jnp.int32)
-            logits, caches = self._prefill_fn(padded)(self.params, tokens)
+            # right-pad to the page bucket so ONE compile serves every context
+            # length that rounds to it (preempted re-admissions arrive with
+            # arbitrary lengths); logits read at the true last position, the
+            # pad tail's KV lands in page slack that is masked or overwritten
+            tokens = jnp.asarray([list(ctx) + [0] * (padded - len(ctx))], jnp.int32)
+            logits, caches = self._prefill_fn(padded)(
+                self.params, tokens, last_index=jnp.int32(len(ctx) - 1)
+            )
             self.cache.write_prefill(slot, caches)
             self.cache.lens[slot] = len(ctx)
             tok = int(jnp.argmax(logits[0, 0, : self.model.cfg.vocab]))
@@ -185,11 +196,13 @@ class ServeEngine:
                 )
             elif self.queue:
                 # nothing running, nothing arriving, head request not admitted:
-                # the whole (free) pool cannot hold it — this can never resolve
+                # the whole (free) pool cannot hold its unshared pages — this
+                # can never resolve (with nothing running, no donor pages will
+                # ever join the prefix index)
                 head = self.queue.peek()
                 raise RuntimeError(
                     f"request {head.request.rid} needs "
-                    f"{self.cache.pages_for(len(head.context) + 1)} pages but only "
+                    f"{self.cache.new_pages_needed(head.context)} new pages but only "
                     f"{self.cache.num_free} exist — raise num_pages"
                 )
         return self.results
@@ -200,6 +213,7 @@ class ServeEngine:
         self.results = {}
         self.step_times = []
         self._n_decode_steps = 0
+        self.cache.reset_stats()
 
     # -- metrics ------------------------------------------------------------------
     def metrics(self) -> Dict[str, float]:
@@ -224,4 +238,5 @@ class ServeEngine:
             "ttft_s_p50": float(np.percentile(ttft, 50)),
             "ttft_s_p99": float(np.percentile(ttft, 99)),
             "preemptions": sum(s.n_preemptions for s in states),
+            **self.cache.stats(),
         }

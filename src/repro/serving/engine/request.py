@@ -3,7 +3,31 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, List, Optional, Sequence, Tuple
+
+
+def page_hash_chain(tokens: Sequence[int], page_size: int) -> List[Tuple]:
+    """Chain hashes of page-granular token chunks — the prefix-sharing keys.
+
+    Entry ``i`` identifies the CONTENT of logical page ``i`` given everything
+    before it: chaining makes equal keys imply equal full token prefixes, so two
+    requests whose chains agree on a leading run can alias those physical pages.
+    Full pages hash their page_size chunk; a trailing partial chunk (if any)
+    gets a final entry keyed by its exact tokens — two identical prompts share
+    even their last, partially filled page (copy-on-write resolves the first
+    divergent append). Keys are tuples (not raw ints) so accidental collision
+    with user data is impossible; the index lives in-process only.
+    """
+    chain: List[Tuple] = []
+    h: Tuple = ("kv-prefix", page_size)
+    n_full = len(tokens) // page_size
+    for i in range(n_full):
+        h = (hash(h), tuple(int(t) for t in tokens[i * page_size : (i + 1) * page_size]))
+        chain.append(h)
+    rem = tokens[n_full * page_size :]
+    if rem:
+        chain.append((hash(h), tuple(int(t) for t in rem), "partial"))
+    return chain
 
 
 @dataclasses.dataclass
@@ -35,6 +59,25 @@ class RequestState:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_preemptions: int = 0
+    # memoized prefix-sharing keys: (page_size, len(context)) -> chain. The
+    # context is append-only per request, so its length identifies its content
+    # and a queued request re-checked every engine step hashes only once.
+    _chain_key: Optional[Tuple[int, int]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _chain: List[Tuple] = dataclasses.field(
+        default_factory=list, repr=False, compare=False
+    )
+
+    def hash_chain(self, page_size: int) -> List[Tuple]:
+        """Prefix-sharing keys for the context as it would be (re-)prefilled
+        now; recomputed only when the context has grown (admission retries while
+        queued are O(1))."""
+        key = (page_size, len(self.context))
+        if self._chain_key != key:
+            self._chain_key = key
+            self._chain = page_hash_chain(self.context, page_size)
+        return self._chain
 
     @property
     def context(self) -> List[int]:

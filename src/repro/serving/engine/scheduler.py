@@ -3,13 +3,21 @@
 Each engine step the scheduler:
   1. admits queued requests FIFO while a batch slot is free AND the pool can
      hold the whole context plus a one-page decode headroom (watermark) — never
-     admitting a request it would immediately have to preempt;
-  2. guarantees every running sequence a page for its next token, preempting
-     the MOST RECENTLY admitted other sequence when the pool runs dry
-     (LIFO victim choice keeps the oldest requests making progress, so total
-     recompute work is bounded); preempted sequences release all pages and
+     admitting a request it would immediately have to preempt. Admission cost
+     counts only the NEW pages the request must pop from the free list: pages
+     its prompt prefix can adopt from the cache's prefix index are free, so
+     bursts of shared-prefix requests admit far deeper batches than the pool's
+     raw size suggests;
+  2. guarantees every running sequence a page it may WRITE for its next token:
+     appending a page when the sequence crosses a page boundary, and
+     copy-on-write-privatizing the target page when prefix sharing left it
+     refcount>1 — in both cases preempting the MOST RECENTLY admitted other
+     sequence when the pool runs dry (LIFO victim choice keeps the oldest
+     requests making progress, so total recompute work is bounded); preempted
+     sequences release all pages (shared ones survive with their co-owners) and
      requeue at the FRONT with their generated tokens kept — on re-admission
-     the full context is re-prefilled (recompute, not swap).
+     the full context is re-prefilled (recompute, not swap) and may re-share
+     any of its prefix pages that stayed alive.
 """
 from __future__ import annotations
 
@@ -34,6 +42,13 @@ class Scheduler:
         self.running: Dict[int, RequestState] = {}
 
     # -- admission -----------------------------------------------------------------
+    def _chain_of(self, state: RequestState):
+        """The state's memoized prefix keys — None when sharing is off, so the
+        non-sharing configuration pays no hashing at all."""
+        if not self.cache.prefix_sharing:
+            return None
+        return state.hash_chain(self.cache.page_size)
+
     def free_slots(self) -> List[int]:
         return [s for s in range(self.config.max_batch) if s not in self.running]
 
@@ -41,8 +56,10 @@ class Scheduler:
         # ServeEngine.submit() already rejected any request whose EVENTUAL
         # footprint (pages_for(prompt + max_new_tokens), invariant under
         # preemption/requeue) exceeds max_pages_per_seq, so only page
-        # availability is decided here
-        need = self.cache.pages_for(len(state.context) + 1)
+        # availability is decided here. Only pages the request cannot adopt
+        # from the prefix index count against the free list (the state memoizes
+        # its hash chain, so a queued request re-checked every step hashes once).
+        need = self.cache.new_pages_needed(state.context, chain=self._chain_of(state))
         # no watermark when the batch is empty: an unadmittable head request with
         # nothing running would deadlock, and with no co-tenants there is nothing
         # for decode growth to collide with
@@ -60,8 +77,11 @@ class Scheduler:
                 break
             queue.pop()
             slot = slots.pop(0)
-            n_ctx = len(state.context)
-            self.cache.allocate(slot, self.cache.pages_for(n_ctx + 1))
+            ctx = state.context
+            self.cache.allocate(
+                slot, self.cache.pages_for(len(ctx) + 1), tokens=ctx,
+                chain=self._chain_of(state),
+            )
             state.slot = slot
             state.admit_time = now
             self.running[slot] = state
@@ -82,8 +102,10 @@ class Scheduler:
         return state
 
     def ensure_decode_page(self, slot: int, queue: RequestQueue) -> None:
-        """Make sure ``slot`` owns a page covering position lens[slot] (where the
-        next token's KV lands), preempting later arrivals if needed."""
+        """Make sure ``slot`` owns a WRITABLE page covering position lens[slot]
+        (where the next token's KV lands): append a page at page boundaries, and
+        copy-on-write the target page if prefix sharing left it refcount>1 —
+        preempting later arrivals if either needs a page the pool cannot give."""
         pos = int(self.cache.lens[slot])
         while pos >= len(self.cache.pages_of[slot]) * self.cache.page_size:
             if self.cache.append_page(slot):
@@ -91,6 +113,15 @@ class Scheduler:
             if self._preempt_one(queue, keep_slot=slot) is None:
                 raise RuntimeError(
                     "KV pool exhausted with a single running sequence — "
+                    "num_pages is too small for this request"
+                )
+        while self.cache.needs_cow(slot):
+            if self.cache.cow_page(slot):
+                continue
+            # a shared page always has >= 2 holders, so a victim must exist
+            if self._preempt_one(queue, keep_slot=slot) is None:
+                raise RuntimeError(
+                    "KV pool exhausted while copy-on-write needed a page — "
                     "num_pages is too small for this request"
                 )
 

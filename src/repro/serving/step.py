@@ -19,7 +19,14 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto"):
 
     def paged_serve_step(params, caches, tokens, block_tables, context_lens):
         """tokens: (B,) int32; block_tables: (B, max_pages) int32; context_lens:
-        (B,) int32 per-sequence positions -> (logits (B, Vp), new page pools)."""
+        (B,) int32 per-sequence positions -> (logits (B, Vp), new page pools).
+
+        Each row scatters its token's KV at page block_tables[b, lens[b]//ps],
+        slot lens[b] % ps. The caller (Scheduler.ensure_decode_page) must have
+        made every targeted page private (refcount 1) first: under prefix
+        sharing a block-table entry may alias a page other sequences read, and
+        this step writes unconditionally — copy-on-write happens on the host
+        BEFORE the tables are handed to the device step."""
         return model.decode_step_paged(
             params, caches, tokens, block_tables, context_lens,
             shard=shard, attn_impl=attn_impl,
@@ -31,9 +38,10 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto"):
 def make_prefill(model, mesh=None, rules=None, max_len=None):
     shard = Sharder(mesh, rules)
 
-    def prefill(params, tokens, batch_inputs=None):
+    def prefill(params, tokens, batch_inputs=None, last_index=None):
         return model.prefill(
-            params, tokens, batch_inputs=batch_inputs, shard=shard, max_len=max_len
+            params, tokens, batch_inputs=batch_inputs, shard=shard,
+            max_len=max_len, last_index=last_index,
         )
 
     return prefill

@@ -6,7 +6,6 @@
   OFFSET       A::offset_policy(a).access(offset(p, i), 0) == access(p, i)
   ACCUMULATE   store-twice linearity (the TPU atomic analogue)
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,4 @@
 """Checkpoint store: atomicity, resume discovery, reshard-on-load, GC, async."""
-import json
-import shutil
 from pathlib import Path
 
 import jax

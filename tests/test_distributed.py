@@ -13,7 +13,6 @@ from repro.core.distributed import (
     tree_initialize,
     tree_param_bytes,
     tree_param_count,
-    tree_shape_structs,
 )
 
 

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    BasicAccessor,
     Extents,
     LayoutLeft,
     LayoutRight,

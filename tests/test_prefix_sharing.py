@@ -1,0 +1,251 @@
+"""Prefix-sharing copy-on-write: LayoutPaged aliased-regime laws and the
+PagedKVCache allocator edges (refcounts, prefix index, CoW, exhaustion).
+
+Engine-level exactness under sharing lives in test_serving_engine.py (it needs
+the real model); everything here runs on a fake model so the allocator and
+layout algebra are exercised in milliseconds.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Extents, LayoutPaged
+from repro.serving.engine.cache import PagedKVCache
+from repro.serving.engine.request import page_hash_chain
+
+
+# =====================================================================================
+# LayoutPaged — shared-page-aware observers, fork(), cow_slice()
+# =====================================================================================
+def _layout(table, num_pages=8, shared=()):
+    rows = len(table)
+    pages_per = len(table[0])
+    return LayoutPaged(
+        Extents.fully_dynamic(rows, 2, pages_per * 4, 4), table, 4, num_pages, shared
+    )
+
+
+def test_shared_pages_break_uniqueness_exactly_when_referenced():
+    base = _layout(((1, 2), (3, 4)))
+    assert base.is_unique()
+    # a shared page the table references -> not unique
+    assert not _layout(((1, 2), (3, 4)), shared=(2,)).is_unique()
+    # a shared page the table does NOT reference leaves the view unique
+    assert _layout(((1, 2), (3, 4)), shared=(7,)).is_unique()
+
+
+def test_shared_pages_normalized_and_validated():
+    lp = _layout(((1, 2),), shared=(2, 1, 2))
+    assert lp.shared_pages == (1, 2)
+    with pytest.raises(ValueError):
+        _layout(((1, 2),), shared=(9,))  # outside the pool
+
+
+def test_fork_aliases_prefix_and_cow_slice_restores_uniqueness():
+    base = _layout(((1, 2, 3),))
+    forked = base.fork(0, fresh_pages=(4,))
+    assert forked.extents.extent(0) == 2
+    assert forked.block_table == ((1, 2, 3), (1, 2, 4))
+    assert not forked.is_unique()  # pages 1, 2 appear in both rows
+    # the two rows agree on every offset of the shared prefix (true aliasing)
+    for h in range(2):
+        for p in range(8):  # first two logical pages are shared
+            for d in range(4):
+                assert forked(0, h, p, d) == forked(1, h, p, d)
+    # and diverge on the private tail
+    assert forked(0, 0, 8, 0) != forked(1, 0, 8, 0)
+    # CoW each shared logical page of the forked row -> unique again
+    cow1 = forked.cow_slice(1, 0, 5)
+    assert not cow1.is_unique()  # page 2 still aliased
+    cow2 = cow1.cow_slice(1, 1, 6)
+    assert cow2.block_table == ((1, 2, 3), (5, 6, 4))
+    assert cow2.shared_pages == ()
+    assert cow2.is_unique()
+
+
+def test_cow_slice_keeps_externally_shared_page_marked():
+    # external sharing (refcount>1 in the allocator) survives a cow of a
+    # DIFFERENT logical page; the swapped-out page leaves shared_pages only
+    # once no row references it
+    lp = _layout(((1, 2),), shared=(1, 2))
+    cow = lp.cow_slice(0, 0, 5)
+    assert cow.block_table == ((5, 2),)
+    assert cow.shared_pages == (2,)
+    assert not cow.is_unique()
+    cow2 = cow.cow_slice(0, 1, 6)
+    assert cow2.shared_pages == ()
+    assert cow2.is_unique()
+
+
+def test_fork_validation():
+    base = _layout(((1, 2),))
+    with pytest.raises(ValueError):
+        base.fork(3)
+    with pytest.raises(ValueError):
+        base.fork(0, fresh_pages=(3, 4, 5))  # more fresh pages than the row holds
+
+
+# =====================================================================================
+# page_hash_chain — the prefix keys
+# =====================================================================================
+def test_hash_chain_prefix_property():
+    a = page_hash_chain(list(range(10)), 4)  # 2 full + 1 partial
+    b = page_hash_chain(list(range(12)), 4)  # 3 full
+    assert len(a) == 3 and len(b) == 3
+    assert a[:2] == b[:2]  # equal full-page prefixes -> equal keys
+    assert a[2] != b[2]  # partial(8,9) vs full(8..11)
+    c = page_hash_chain([99] + list(range(1, 10)), 4)
+    assert c[0] != a[0] and c[1] != a[1]  # chained: early divergence poisons all
+    assert page_hash_chain([1, 2], 4)[0][-1] == "partial"
+
+
+# =====================================================================================
+# PagedKVCache allocator edges (fake model: L=1, Hkv=2, Dh=4)
+# =====================================================================================
+@dataclasses.dataclass
+class FakeCfg:
+    n_kv_heads: int = 2
+    head_dim: int = 4
+
+
+class FakeModel:
+    cfg = FakeCfg()
+
+    def init_paged_cache(self, num_pages, page_size):
+        shape = (1, num_pages, self.cfg.n_kv_heads, page_size, self.cfg.head_dim)
+        return [{"k": jnp.zeros(shape), "v": jnp.zeros(shape)}]
+
+
+def make_cache(num_pages=10, page_size=4, prefix_sharing=True, max_pages_per_seq=8):
+    return PagedKVCache(
+        FakeModel(), num_pages=num_pages, page_size=page_size, max_batch=4,
+        max_pages_per_seq=max_pages_per_seq, prefix_sharing=prefix_sharing,
+    )
+
+
+def test_free_list_exhaustion_mid_append_page():
+    c = make_cache(num_pages=4)  # 3 usable pages
+    c.allocate(0, 3, tokens=list(range(12)))
+    assert c.num_free == 0
+    assert not c.append_page(0)  # exhausted -> False, state intact
+    assert c.pages_of[0] == [1, 2, 3]
+    c.free_slot(0)
+    assert c.num_free == 3
+
+
+def test_allocate_exhaustion_raises_without_corrupting_state():
+    c = make_cache(num_pages=4)
+    c.allocate(0, 2, tokens=list(range(8)))
+    before = c.ref.copy()
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        c.allocate(1, 3, tokens=list(range(100, 112)))
+    np.testing.assert_array_equal(c.ref, before)
+    assert 1 not in c.pages_of
+
+
+def test_double_free_slot_is_idempotent_and_refs_stay_nonnegative():
+    c = make_cache()
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    c.allocate(1, 3, tokens=toks)  # full share
+    free0 = c.num_free
+    c.free_slot(0)
+    c.free_slot(0)  # double free: no-op
+    c.free_slot(0)
+    assert c.num_free == free0  # shared pages survive with slot 1
+    assert int(c.ref.min()) >= 0
+    c.free_slot(1)
+    c.free_slot(1)
+    assert int(c.ref.min()) >= 0 and int(c.ref.max()) == 0
+    assert c.num_free == c.num_pages - 1
+    assert not c._index  # index emptied with the last holder
+
+
+def test_prefix_sharing_counts_and_index_eviction():
+    c = make_cache()
+    donor = list(range(10))  # pages: 2 full + partial
+    c.allocate(0, c.pages_for(11), tokens=donor)
+    assert c.new_pages_needed(donor) == 0  # identical prompt: all 3 adoptable
+    assert c.new_pages_needed(donor[:8] + [77, 78]) == 1  # diverges in partial
+    assert c.new_pages_needed([77] + donor[1:]) == 3  # diverges at once
+    c.allocate(1, c.pages_for(11), tokens=donor)
+    assert c.pages_of[1] == c.pages_of[0]
+    assert c.pages_shared_total == 3
+    # free the donor: pages live on under slot 1, then die with it
+    c.free_slot(0)
+    assert c.new_pages_needed(donor) == 0
+    c.free_slot(1)
+    assert c.new_pages_needed(donor) == 3  # index evicted at refcount zero
+
+
+def test_sharing_disabled_never_matches():
+    c = make_cache(prefix_sharing=False)
+    toks = list(range(8))
+    c.allocate(0, 2, tokens=toks)
+    assert c.new_pages_needed(toks) == c.pages_for(9)
+    c.allocate(1, 2, tokens=toks)
+    assert c.pages_shared_total == 0
+    assert not set(c.pages_of[0]) & set(c.pages_of[1])
+
+
+def test_cow_leaves_donor_pages_byte_identical():
+    c = make_cache()
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    # stamp recognizable content into the donor's pages
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal(c.pools[0]["k"].shape), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(c.pools[0]["v"].shape), jnp.float32)
+    c.pools = [{"k": k, "v": v}]
+    donor_k = np.array(k[:, c.pages_of[0]])
+    c.allocate(1, 3, tokens=toks)
+    c.lens[1] = 10
+    assert c.needs_cow(1)
+    assert c.cow_page(1)
+    new_page = c.pages_of[1][2]
+    assert new_page != c.pages_of[0][2]
+    # the copy carries the donor's bytes; the sharer now scribbles over it
+    np.testing.assert_array_equal(
+        np.array(c.pools[0]["k"][:, new_page]), donor_k[:, 2]
+    )
+    c.pools = [
+        {"k": c.pools[0]["k"].at[:, new_page].set(-1.0),
+         "v": c.pools[0]["v"].at[:, new_page].set(-1.0)}
+    ]
+    # ... and the donor's pages are byte-identical to before the fork
+    np.testing.assert_array_equal(np.array(c.pools[0]["k"][:, c.pages_of[0]]), donor_k)
+    assert not c.needs_cow(1)
+    assert c.cow_copies == 1
+    assert int(c.ref.min()) >= 0
+
+
+def test_cow_page_reports_pool_exhaustion():
+    c = make_cache(num_pages=4)  # 3 usable
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    c.allocate(1, 3, tokens=toks)  # full share, free list empty
+    c.lens[1] = 10
+    assert c.needs_cow(1)
+    assert not c.cow_page(1)  # no free page -> caller must preempt
+    c.free_slot(0)
+    assert not c.needs_cow(1)  # donor gone: page is private again
+
+
+def test_layout_for_reports_aliasing_until_cow():
+    c = make_cache()
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    assert c.layout_for(0).is_unique()
+    c.allocate(1, 3, tokens=toks)
+    assert not c.layout_for(0).is_unique()
+    assert not c.layout_for(1).is_unique()
+    assert c.layout_for(1).shared_pages == tuple(c.pages_of[0])
+    c.lens[1] = 10
+    assert c.cow_page(1)
+    # slot 1 still shares the two full pages; only the partial page went private
+    assert not c.layout_for(1).is_unique()
+    assert c.layout_for(1).shared_pages == tuple(c.pages_of[0][:2])
+    c.free_slot(0)
+    assert c.layout_for(1).is_unique()

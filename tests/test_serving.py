@@ -2,7 +2,6 @@
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -86,7 +85,6 @@ def test_quantized_serving_path():
     """int8-weight model (QuantizedAccessor specs) serves and stays close to the
     bf16 model's logits — the paper's accessor concept end-to-end."""
     cfg = get_config("llama3.2-1b", smoke=True)
-    dense = build_model(cfg)
     quant = build_model(cfg, quantized=True)
     # quantized model has {"q","scale"} leaves for big matmuls
     qs = quant.param_specs()

@@ -170,6 +170,75 @@ def test_engine_preempts_under_page_pressure_and_stays_exact(small_model):
         assert results[i].generated == unbatched_greedy(cfg, model, params, p, n_gen)
 
 
+def test_engine_prefix_sharing_exact_and_saves_pages(small_model):
+    """Shared-prefix burst: outputs are token-exact vs. sharing disabled, and
+    the shared pool peaks far lower (capacity O(unique tokens))."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab, size=16).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab, size=4).tolist() for _ in range(4)]
+    n_gen = 5
+    make_reqs = lambda: [
+        Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)
+    ]
+    econf = EngineConfig(num_pages=48, page_size=4, max_batch=4, max_pages_per_seq=8)
+    eng_on = ServeEngine(model, params, econf)
+    eng_off = ServeEngine(model, params, dataclasses.replace(econf, prefix_sharing=False))
+    res_on = eng_on.run(make_reqs())
+    res_off = eng_off.run(make_reqs())
+    for i in range(len(prompts)):
+        assert res_on[i].generated == res_off[i].generated
+        assert res_on[i].generated == unbatched_greedy(cfg, model, params, prompts[i], n_gen)
+    m_on, m_off = eng_on.metrics(), eng_off.metrics()
+    assert m_on["pages_shared"] > 0 and m_off["pages_shared"] == 0
+    # 4 sequences share 4 prefix pages: 12 of the pool's pages never needed
+    assert m_on["peak_pages_in_use"] <= m_off["peak_pages_in_use"] - 12
+
+
+def test_engine_forced_cow_identical_prompts_exact(small_model):
+    """Identical prompts whose length is NOT page-aligned share even the partial
+    last page; the first decode append of each sequence scatters into it, so
+    copy-on-write MUST fire — and outputs still match the unbatched oracle."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=10).tolist()  # 10 % 4 != 0
+    n_gen = 6
+    reqs = [Request(rid=i, prompt=list(prompt), max_new_tokens=n_gen) for i in range(3)]
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=32, page_size=4, max_batch=3, max_pages_per_seq=8),
+    )
+    results = eng.run(reqs)
+    m = eng.metrics()
+    assert m["cow_copies"] >= 2  # every co-tenant of the partial page but one
+    assert m["pages_shared"] >= 6  # 3 pages adopted by each of requests 1, 2
+    want = unbatched_greedy(cfg, model, params, prompt, n_gen)
+    for i in range(3):
+        assert results[i].generated == want
+
+
+def test_engine_sharing_stays_exact_under_preemption(small_model):
+    """Tiny pool + shared prefixes: preemption frees only refcount-zero pages
+    and re-admission re-shares what survived; greedy outputs stay exact."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab, size=8).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab, size=2).tolist() for _ in range(3)]
+    n_gen = 10
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    # 10 usable pages; the full batch peaks at 2 shared + 3x3 own = 11 -> contention
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=11, page_size=4, max_batch=3, max_pages_per_seq=6),
+    )
+    results = eng.run(reqs)
+    m = eng.metrics()
+    assert m["preemptions"] >= 1
+    assert m["pages_shared"] > 0
+    for i, p in enumerate(prompts):
+        assert results[i].generated == unbatched_greedy(cfg, model, params, p, n_gen)
+
+
 def test_engine_cache_dense_view_matches_layout(small_model):
     """The pool contents read back through LayoutPaged offsets equal the dense
     prefill cache — the scatter writes implement exactly the layout's map."""
