@@ -22,6 +22,11 @@ def main() -> None:
         "--smoke", action="store_true",
         help="CI-sized serving run: one sweep point, tiny model, few requests",
     )
+    ap.add_argument(
+        "--kv-dtype", default="all", choices=["all", "f32", "int8", "int4"],
+        help="KV page representations to compare in the serving suite's "
+             "quantized section (f32 always runs as the baseline)",
+    )
     args = ap.parse_args()
     if args.only in ("all", "paper"):
         from benchmarks import paper_suite
@@ -37,7 +42,7 @@ def main() -> None:
     if args.only in ("all", "serving"):
         from benchmarks import serving_suite
 
-        serving_suite.run(smoke=args.smoke)
+        serving_suite.run(smoke=args.smoke, kv_dtype=args.kv_dtype)
 
 
 if __name__ == "__main__":

@@ -14,8 +14,16 @@ the peak pages-in-use of each plus the token-exactness of the shared run: the
 copy-on-write paged cache should serve the burst from far fewer physical pages
 (capacity O(unique tokens), not O(total tokens)).
 
+A third section replays the same shared-prefix burst once per KV page
+representation (f32 / int8 / int4 — EngineConfig.kv_dtype, the QuantizedAccessor
+axis composed with LayoutPaged) and records peak pages, decode throughput, pool
+bytes (the capacity_x_vs_f32 ratio is the pages-per-byte gain), greedy token
+agreement, and the max |logit - logit_f32| over aligned steps — the
+accuracy/capacity trade the CI smoke job gates on.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only serving --smoke --kv-dtype int8
 """
 from __future__ import annotations
 
@@ -27,7 +35,9 @@ import jax
 import numpy as np
 
 from repro.models import ModelConfig, Model
-from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine import (
+    EngineConfig, Request, ServeEngine, aligned_max_logit_err,
+)
 
 OUT_PATH = Path("BENCH_serving.json")
 SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # untracked: CI-sized numbers
@@ -150,7 +160,61 @@ def run_shared_prefix(model, params, vocab: int, n_requests: int,
     }
 
 
-def run(out_path: Path = None, smoke: bool = False) -> dict:
+def run_quantized(model, params, vocab: int, n_requests: int, max_new: int,
+                  kv_dtypes) -> dict:
+    """The same shared-prefix burst through one engine per KV representation;
+    f32 is the accuracy/capacity baseline the others are scored against."""
+    max_len = SHARED_PREFIX_LEN + max(SHARED_TAIL_BUCKETS) + max_new + 1
+    conf = EngineConfig.sized_for(
+        max_len, page_size=SHARED_PAGE_SIZE, max_batch=SHARED_MAX_BATCH,
+        record_logits=True,
+    )
+    engines, results, metrics = {}, {}, {}
+    for kv in kv_dtypes:
+        eng = ServeEngine(model, params, dataclasses.replace(conf, kv_dtype=kv))
+        # rehearsal compiles prefill buckets + this dtype's decode step, then
+        # reset so the measured pass times compiled code on a clean pool
+        eng.run(make_shared_prefix_requests(np.random.default_rng(7), vocab,
+                                            n_requests, max_new))
+        eng.reset_metrics()
+        results[kv] = eng.run(
+            make_shared_prefix_requests(np.random.default_rng(7), vocab,
+                                        n_requests, max_new)
+        )
+        engines[kv], metrics[kv] = eng, eng.metrics()
+    f32 = metrics["f32"]
+    section = {
+        "n_requests": n_requests,
+        "prefix_len": SHARED_PREFIX_LEN,
+        "page_size": SHARED_PAGE_SIZE,
+        "max_new_tokens": max_new,
+        "dtypes": {},
+    }
+    for kv in kv_dtypes:
+        m = metrics[kv]
+        entry = {
+            "peak_pages_in_use": m["peak_pages_in_use"],
+            "pages_shared": m["pages_shared"],
+            "tokens_per_s": m["tokens_per_s"],
+            "step_ms_p50": m["step_ms_p50"],
+            "kv_pool_bytes": m["kv_pool_bytes"],
+        }
+        if kv != "f32":
+            entry["capacity_x_vs_f32"] = round(
+                f32["kv_pool_bytes"] / m["kv_pool_bytes"], 2
+            )
+            entry["max_logit_err_vs_f32"] = aligned_max_logit_err(
+                engines["f32"], engines[kv], results["f32"], results[kv]
+            )
+            entry["tokens_exact_vs_f32"] = all(
+                results[kv][r].generated == results["f32"][r].generated
+                for r in results["f32"]
+            )
+        section["dtypes"][kv] = entry
+    return section
+
+
+def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> dict:
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
     cfg = bench_config(smoke)
@@ -197,6 +261,25 @@ def run(out_path: Path = None, smoke: bool = False) -> dict:
         f"shared={sp['pages_shared']} cow={sp['cow_copies']} "
         f"exact={sp['tokens_exact']}"
     )
+    kv_dtypes = (
+        ("f32", "int8", "int4") if kv_dtype == "all"
+        else tuple(dict.fromkeys(("f32", kv_dtype)))  # f32 baseline always runs
+    )
+    qs = run_quantized(model, params, cfg.vocab, shared_n, max_new, kv_dtypes)
+    report["quantized"] = qs
+    for kv, e in qs["dtypes"].items():
+        extra = (
+            f" capacity_x={e['capacity_x_vs_f32']} "
+            f"max_logit_err={e['max_logit_err_vs_f32']:.4f} "
+            f"exact={e['tokens_exact_vs_f32']}"
+            if kv != "f32" else ""
+        )
+        print(
+            f"serving/quantized_{kv},{e['step_ms_p50']*1e3:.2f},"
+            f"peak_pages={e['peak_pages_in_use']} "
+            f"tokens_per_s={e['tokens_per_s']:.1f} "
+            f"pool_bytes={e['kv_pool_bytes']}{extra}"
+        )
     out_path.write_text(json.dumps(report, indent=2))
     print(f"serving suite written to {out_path}")
     return report

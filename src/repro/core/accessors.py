@@ -27,6 +27,28 @@ Accessors implemented:
 
 All access/store implementations are vectorized: ``i`` may be a scalar or an ndarray
 of offsets (gather/scatter semantics), so whole-domain reads cost one gather.
+
+Composing accessors with layouts (paper §customization points)
+--------------------------------------------------------------
+The paper's central design claim is that the layout and accessor policies are
+ORTHOGONAL: an accessor sees only flat codomain offsets, so any layout can feed
+it and neither policy knows the other exists. This repo exercises the
+composition at serving scale: the paged KV cache keeps its index->offset map in
+``layouts.LayoutPaged`` (block-table indirection, CoW/refcount laws) while the
+element representation is swapped underneath it by
+``serving.engine.kvquant.PagedQuantSpec`` — block-scaled intN storage whose
+(page, head) scales are exactly ``QuantizedAccessor`` block scales with
+``block = page_size * head_dim`` over the paged codomain (for int8 the pool's
+bytes ARE valid QuantizedAccessor buffers; tests assert access-equivalence
+through LayoutPaged offsets). Layout laws — ``is_unique()``, ``fork``,
+``cow_slice`` — hold identically over quantized pools because they reason about
+offsets, never bytes.
+
+Offsets are FRONT-INDEXED: packed representations (BitPacked nibble/bit parity,
+Quantized block scales) cannot recover the true span from their buffers (an odd
+span leaves a pad nibble), so pythonic negative offsets are ambiguous and the
+packed accessors reject static negative ``i`` rather than silently reading the
+wrong nibble or block scale.
 """
 from __future__ import annotations
 
@@ -36,6 +58,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Accessor:
@@ -160,11 +183,20 @@ class BitPackedAccessor(Accessor):
         weights = (1 << jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
         return (bits.astype(jnp.uint8) * weights).sum(axis=1).astype(jnp.uint8)
 
+    @staticmethod
+    def _check_offset(i):
+        # bit parity of a negative offset depends on the true span, which the
+        # byte buffer does not record (see QuantizedAccessor._check_offset)
+        if isinstance(i, (int, np.integer)) and i < 0:
+            raise TypeError("BitPackedAccessor offsets must be non-negative")
+
     def access(self, buffers, i):
+        self._check_offset(i)
         byte = buffers[i // 8]
         return ((byte >> (jnp.asarray(i) % 8).astype(jnp.uint8)) & 1).astype(jnp.bool_)
 
     def store(self, buffers, i, value):
+        self._check_offset(i)
         i = jnp.asarray(i)
         bit = (jnp.asarray(1, jnp.uint8) << (i % 8).astype(jnp.uint8))
         byte_idx = i // 8
@@ -246,7 +278,23 @@ class QuantizedAccessor(Accessor):
             q = (lo | hi).astype(jnp.int8)
         return {"q": q, "scale": scale}
 
+    @staticmethod
+    def _check_offset(i):
+        """Packed storage is front-indexed: a negative offset's byte/nibble
+        parity and block-scale index depend on the TRUE span, which the buffers
+        do not record (an odd span leaves a pad nibble; a partial last block
+        shifts every block boundary). Before this check, ``access(bufs, -1)``
+        on an odd-span int4 buffer silently read the pad nibble (always 0) and
+        ``store(bufs, -1, v)`` corrupted it."""
+        if isinstance(i, (int, np.integer)) and i < 0:
+            raise TypeError(
+                "QuantizedAccessor offsets must be non-negative: negative "
+                "offsets are ambiguous for block-scaled/nibble-packed storage "
+                "(the true span is not recoverable from the buffers)"
+            )
+
     def _load_q(self, buffers, i):
+        self._check_offset(i)
         if self.bits == 8:
             return buffers["q"][i].astype(jnp.int8)
         byte = buffers["q"][jnp.asarray(i) // 2]
@@ -260,6 +308,7 @@ class QuantizedAccessor(Accessor):
         return (q * s).astype(self.element_type)
 
     def store(self, buffers, i, value):
+        self._check_offset(i)
         s = buffers["scale"][jnp.asarray(i) // self.block]
         q = jnp.clip(jnp.round(jnp.asarray(value, jnp.float32) / s), -self.qmax, self.qmax).astype(jnp.int8)
         if self.bits == 8:

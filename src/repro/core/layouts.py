@@ -399,6 +399,14 @@ class LayoutPaged(LayoutMapping):
     logical pages in order. Entries must be in ``[0, num_pages)`` — use a reserved
     null page for unallocated tail entries and keep those positions masked.
 
+    Composing with accessors (paper §customization points): this mapping never
+    inspects element bytes, so the pool behind it can change representation
+    freely — serving/engine/kvquant.PagedQuantSpec stores the SAME codomain as
+    block-scaled int8/int4 (one scale per (page, head), i.e. per contiguous
+    ``page_size * d`` offset range), and every law below — uniqueness, fork,
+    cow_slice, the shared_pages bookkeeping — holds identically over the
+    quantized pool because all of them quantify over offsets, not values.
+
     ``shared_pages`` names physical pages referenced by block tables OUTSIDE this
     instance (prefix sharing: the allocator's refcount for them exceeds this
     layout's own references). The map stays injective on its domain, but the

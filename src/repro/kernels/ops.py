@@ -31,7 +31,9 @@ from .common import use_interpret
 from .flash_attention import flash_attention as _flash_fwd
 from .flash_attention import flash_decode as _flash_decode
 from .paged_attention import paged_decode_attention_jnp as _paged_decode_jnp
+from .paged_attention import paged_decode_attention_quant_jnp as _paged_decode_quant_jnp
 from .paged_attention import paged_flash_decode as _paged_flash_decode
+from .paged_attention import paged_flash_decode_quant as _paged_flash_decode_quant
 from .matvec import matvec_left, matvec_right
 from .quant_matmul import quant_matmul as _qmm_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
@@ -161,6 +163,25 @@ def paged_decode_attention(
             q, k_pool, v_pool, block_tables, context_lens, scale=scale
         )
     return _paged_decode_jnp(q, k_pool, v_pool, block_tables, context_lens, scale=scale)
+
+
+def paged_decode_attention_quant(
+    q, k_q, k_scale, v_q, v_scale, block_tables, context_lens, *,
+    bits: int = 8, scale=None, impl: str = "auto",
+):
+    """One-token GQA decode against a QUANTIZED LayoutPaged pool: intN page
+    bytes (num_pages, Hkv, ps, Dq) + per-(page, head) f32 scales (num_pages,
+    Hkv) — the accessor customization point (PagedQuantSpec) composed with the
+    layout one. Same block-table/length contract as paged_decode_attention."""
+    if _want_pallas(impl):
+        return _paged_flash_decode_quant(
+            q, k_q, k_scale, v_q, v_scale, block_tables, context_lens,
+            bits=bits, scale=scale,
+        )
+    return _paged_decode_quant_jnp(
+        q, k_q, k_scale, v_q, v_scale, block_tables, context_lens,
+        bits=bits, scale=scale,
+    )
 
 
 # ---------------------------------------------------------------------------------

@@ -16,6 +16,17 @@ the online-softmax masking and the page skip predicate.
 table, mask by length) used off-TPU and as the differentiable/cheap fallback;
 both are validated against ref.attention on densified pools in
 tests/test_serving_engine.py.
+
+Quantized pools (the accessor axis composed with the layout axis): the
+``*_quant`` variants consume int8/int4 page pools with one f32 scale per
+(physical page, kv head) — serving/engine/kvquant.PagedQuantSpec's encoding.
+``paged_flash_decode_quant`` DMAs int8 page tiles and their (page, head) scale
+through the SAME block-table index maps as the f32 kernel (the layout is
+untouched; only the element representation changed) and dequantizes in VMEM
+next to the flash update. int4 pages pack two values per byte SPLIT-HALF along
+the feature dim (byte d = feature d in the lo nibble, feature d + D/2 in the
+hi), so in-kernel dequant is a lane concat — never an interleave — and a
+single token's scatter stays nibble-local to its own (slot, :) row.
 """
 from __future__ import annotations
 
@@ -30,6 +41,53 @@ from jax.experimental.pallas import tpu as pltpu
 from .common import use_interpret
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------------
+# int4 nibble packing (split-half) + page dequantization
+# ---------------------------------------------------------------------------------
+def pack_int4_splithalf(q: jax.Array) -> jax.Array:
+    """Pack signed int4 values (last dim even) two per byte, split-half: byte
+    ``d`` holds value ``d`` in the lo nibble and value ``d + D/2`` in the hi
+    nibble. Unpacking is then a lane-dim concat (TPU-cheap), and any write that
+    covers a full last-dim row (a token's K/V vector) maps to whole bytes."""
+    d = q.shape[-1]
+    lo = q[..., : d // 2] & 0x0F
+    hi = (q[..., d // 2 :] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4_splithalf(b: jax.Array) -> jax.Array:
+    """Inverse of pack_int4_splithalf; sign-extends via arithmetic shifts."""
+    lo = (b << 4).astype(jnp.int8) >> 4
+    hi = b >> 4
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.int8)
+
+
+def dequantize_pages(q: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
+    """q: (..., page_size, Dq) intN bytes; scale: (...) f32 per (page, head).
+    Returns f32 (..., page_size, D) — the decode half of PagedQuantSpec."""
+    if bits == 4:
+        q = unpack_int4_splithalf(q)
+    return q.astype(jnp.float32) * scale[..., None, None]
+
+
+def _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, *, scale):
+    """One online-softmax accumulation step over a (page_size, D) K/V tile —
+    shared by the f32 and the dequantizing kernels (identical math)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, page_size)
+    s = jnp.where(live, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
 
 
 def _paged_decode_kernel(
@@ -67,19 +125,7 @@ def _paged_decode_kernel(
         q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
         k = k_ref[0].astype(jnp.float32)     # (page_size, D)
         v = v_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale  # (G, page_size)
-        s = jnp.where(live, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        m_ref[...] = m_new
+        _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
 
     @pl.when(j == nj - 1)
     def _finalize():
@@ -178,3 +224,146 @@ def paged_decode_attention_jnp(
     l = jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v) / jnp.where(l == 0.0, 1.0, l)
     return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------------
+# quantized-pool decode: the accessor customization point inside the kernel
+# ---------------------------------------------------------------------------------
+def _paged_quant_decode_kernel(
+    bt_ref,    # scalar prefetch: (B, max_pages) int32 block table
+    len_ref,   # scalar prefetch: (B,) int32 live token counts
+    q_ref,     # (1, 1, G, D)
+    kq_ref,    # (1, page_size, Dq) int8 — physical page picked by the index map
+    ks_ref,    # (1,) f32 — that page's per-head K scale
+    vq_ref,    # (1, page_size, Dq) int8
+    vs_ref,    # (1,) f32
+    o_ref,     # (1, 1, G, D)
+    acc_ref,   # (G, D) f32
+    m_ref,     # (G, 1) f32
+    l_ref,     # (G, 1) f32
+    *,
+    scale: float,
+    page_size: int,
+    bits: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    g_sz = q_ref.shape[2]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = len_ref[b]
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (g_sz, page_size), 1)
+    live = k_pos < seq_len
+
+    @pl.when(j * page_size < seq_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+        kq = kq_ref[0]                       # (page_size, Dq) int8
+        vq = vq_ref[0]
+        if bits == 4:
+            kq = unpack_int4_splithalf(kq)   # lane concat: (page_size, D)
+            vq = unpack_int4_splithalf(vq)
+        k = kq.astype(jnp.float32) * ks_ref[0]
+        v = vq.astype(jnp.float32) * vs_ref[0]
+        _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def paged_flash_decode_quant(
+    q: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    bits: int = 8,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token GQA decode against an intN paged KV pool.
+
+    q: (B, Hq, 1, D); k_q/v_q: (num_pages, Hkv, page_size, Dq) int8 with
+    Dq = D (int8) or D // 2 (int4, split-half nibbles); k_scale/v_scale:
+    (num_pages, Hkv) f32, one scale per (physical page, kv head) — the
+    PagedQuantSpec encoding. Block table / length semantics are identical to
+    ``paged_flash_decode``: the layout indirection is untouched, the scales
+    ride the same ``bt[bb, j]`` index map as the page tiles.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, tq, d = q.shape
+    num_pages, hkv, page_size, dq = k_q.shape
+    assert tq == 1 and hq % hkv == 0
+    assert dq == (d if bits == 8 else d // 2)
+    group = hq // hkv
+    max_pages = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, d)
+
+    kern = functools.partial(
+        _paged_quant_decode_kernel, scale=scale, page_size=page_size, bits=bits
+    )
+    page_spec = pl.BlockSpec(
+        (1, None, page_size, dq), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)
+    )
+    scale_spec = pl.BlockSpec((1, None), lambda bb, h, j, bt, ln: (bt[bb, j], h))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+            page_spec,
+            scale_spec,
+            page_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, d), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+        qg, k_q, k_scale, v_q, v_scale,
+    )
+    return out.reshape(b, hq, 1, d)
+
+
+def paged_decode_attention_quant_jnp(
+    q: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    bits: int = 8,
+    scale: float | None = None,
+) -> jax.Array:
+    """jnp twin of paged_flash_decode_quant: dequantize the whole pool, then the
+    f32 gather path — manifestly the same semantics, O(pool) extra memory."""
+    k_pool = dequantize_pages(k_q, k_scale, bits=bits)
+    v_pool = dequantize_pages(v_q, v_scale, bits=bits)
+    return paged_decode_attention_jnp(
+        q, k_pool, v_pool, block_tables, context_lens, scale=scale
+    )

@@ -60,11 +60,24 @@ def cache_specs(cfg, batch: int, seq: int) -> Dict[str, TensorSpec]:
     }
 
 
-def paged_cache_specs(cfg, num_pages: int, page_size: int) -> Dict[str, TensorSpec]:
+def paged_cache_specs(cfg, num_pages: int, page_size: int, kv_spec=None) -> Dict[str, TensorSpec]:
     """Per-layer paged KV pool — the LayoutPaged codomain (pool_shape()) as a
     TensorSpec. Page-major with (page_size, head_dim) innermost keeps each page a
-    LayoutTiledTPU-friendly (sublane, lane) tile."""
+    LayoutTiledTPU-friendly (sublane, lane) tile.
+
+    ``kv_spec`` (serving.engine.kvquant.PagedQuantSpec) swaps the element
+    representation — the accessor axis — without touching the layout: each of
+    k/v becomes {"q": intN page bytes, "scale": one f32 per (page, head)}."""
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if kv_spec is not None:
+        dq = kv_spec.packed_dim(dh)
+        quant = {
+            "q": TensorSpec((num_pages, hkv, page_size, dq),
+                            (None, "kv_heads", None, None), dtype=jnp.int8, init="zeros"),
+            "scale": TensorSpec((num_pages, hkv), (None, "kv_heads"),
+                                dtype=jnp.float32, init="zeros"),
+        }
+        return {"k": quant, "v": dict(quant)}
     dt = cfg.param_dtype
     return {
         "k": TensorSpec((num_pages, hkv, page_size, dh), (None, "kv_heads", None, None), dtype=dt, init="zeros"),
@@ -89,6 +102,32 @@ def pack_kv_pages(pool: Dict[str, jax.Array], k: jax.Array, v: jax.Array,
     return {
         "k": pool["k"].at[:, pages].set(kp.astype(pool["k"].dtype)),
         "v": pool["v"].at[:, pages].set(vp.astype(pool["v"].dtype)),
+    }
+
+
+def pack_kv_pages_quant(pool, k: jax.Array, v: jax.Array, pages: jax.Array, *,
+                        spec) -> Dict[str, Dict[str, jax.Array]]:
+    """pack_kv_pages for a quantized pool: quantize AT SCATTER TIME with a fresh
+    scale per (page, head) (spec.encode_pages), then write {q, scale} together.
+
+    pool k/v: {"q": (L, num_pages, Hkv, ps, Dq) int8, "scale": (L, num_pages,
+    Hkv) f32}; k/v and pages as in pack_kv_pages. Page slack (prompt pad)
+    participates in the scale like any other slot — prompts are zero-padded
+    deterministically, so a page (bytes AND scale) stays a pure function of the
+    tokens that hash to it and prefix sharing dedupes quantized pages exactly
+    as f32 ones."""
+    l, _, hkv, s, dh = k.shape
+    ps = pool["k"]["q"].shape[3]
+    n = s // ps
+    # (L, Hkv, n, ps, Dh) -> (L, n, Hkv, ps, Dh)
+    kp = jnp.swapaxes(k[:, 0].reshape(l, hkv, n, ps, dh), 1, 2)
+    vp = jnp.swapaxes(v[:, 0].reshape(l, hkv, n, ps, dh), 1, 2)
+    kq, vq = spec.encode_pages(kp), spec.encode_pages(vp)
+    return {
+        "k": {"q": pool["k"]["q"].at[:, pages].set(kq["q"]),
+              "scale": pool["k"]["scale"].at[:, pages].set(kq["scale"])},
+        "v": {"q": pool["v"]["q"].at[:, pages].set(vq["q"]),
+              "scale": pool["v"]["scale"].at[:, pages].set(vq["scale"])},
     }
 
 
@@ -291,6 +330,25 @@ def self_attention_decode(
     return y, {"k": ck, "v": cv}
 
 
+def _quant_append(buf, tok, page, slot, spec):
+    """Scatter one quantized token per batch row into its (page, slot).
+
+    buf: {"q": (num_pages, Hkv, ps, Dq), "scale": (num_pages, Hkv)};
+    tok: (B, Hkv, Dh) f32; page/slot: (B,) int32. Scale policy (kvquant §scale
+    lifecycle): slot 0 means the page is brand new (decode just crossed a page
+    boundary), so it takes a fresh per-head scale from the token; otherwise the
+    token re-quantizes with the page's EXISTING scale, clipped — the
+    QuantizedAccessor.store law. Inactive rows target the reserved null page;
+    their writes (bytes and scale) land there harmlessly, like the f32 path."""
+    fresh = (slot == 0)[:, None]                       # (B, 1)
+    scale = jnp.where(fresh, spec.token_scale(tok), buf["scale"][page])  # (B, Hkv)
+    qtok = spec.quantize_tokens(tok, scale)            # (B, Hkv, Dq)
+    return {
+        "q": buf["q"].at[page, :, slot, :].set(qtok),
+        "scale": buf["scale"].at[page].set(scale),
+    }
+
+
 def self_attention_decode_paged(
     cfg,
     p,
@@ -301,6 +359,7 @@ def self_attention_decode_paged(
     *,
     shard: Sharder = NULL_SHARDER,
     impl: str = "auto",
+    kv_spec=None,
 ):
     """One-token decode against a paged KV pool (the LayoutPaged cache adapter).
 
@@ -311,21 +370,34 @@ def self_attention_decode_paged(
     slot len % ps, exactly LayoutPaged's index->offset map. Unlike the dense
     decode path, every batch row has its OWN position (continuous batching).
 
+    ``kv_spec`` (PagedQuantSpec) switches the pool to the quantized element
+    representation: cache k/v are then {"q", "scale"} pytrees, the append
+    quantizes at scatter time, and attention runs the dequantizing kernel (or
+    its jnp twin) — same layout, same block tables, different accessor.
+
     Single-host path: ``shard`` is accepted for API symmetry with
     self_attention_decode but no mesh-aware variant exists yet — on a mesh the
     page pool replicates (multi-host paging is a ROADMAP open item).
     """
     b, _, d = x.shape
-    ps = cache["k"].shape[2]
+    ps = cache["k"]["q"].shape[2] if kv_spec is not None else cache["k"].shape[2]
     q, k, v = _project_qkv(cfg, p, x)
     pos = jnp.asarray(context_lens, jnp.int32)  # (B,)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
     page = block_tables[jnp.arange(b), pos // ps]  # (B,)
     slot = pos % ps
-    ck = cache["k"].at[page, :, slot, :].set(k[:, :, 0, :].astype(cache["k"].dtype))
-    cv = cache["v"].at[page, :, slot, :].set(v[:, :, 0, :].astype(cache["v"].dtype))
-    out = ops.paged_decode_attention(q, ck, cv, block_tables, pos + 1, impl=impl)
+    if kv_spec is not None:
+        ck = _quant_append(cache["k"], k[:, :, 0, :], page, slot, kv_spec)
+        cv = _quant_append(cache["v"], v[:, :, 0, :], page, slot, kv_spec)
+        out = ops.paged_decode_attention_quant(
+            q, ck["q"], ck["scale"], cv["q"], cv["scale"], block_tables, pos + 1,
+            bits=kv_spec.bits, impl=impl,
+        )
+    else:
+        ck = cache["k"].at[page, :, slot, :].set(k[:, :, 0, :].astype(cache["k"].dtype))
+        cv = cache["v"].at[page, :, slot, :].set(v[:, :, 0, :].astype(cache["v"].dtype))
+        out = ops.paged_decode_attention(q, ck, cv, block_tables, pos + 1, impl=impl)
     y = _out_proj(p, out, x.dtype)
     return y, {"k": ck, "v": cv}
 

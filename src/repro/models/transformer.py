@@ -134,16 +134,17 @@ class DenseBlock:
         x = x + apply_mlp(cfg, p["mlp"], h, shard)
         return x, cache
 
-    def paged_cache_specs(self, cfg, num_pages: int, page_size: int):
+    def paged_cache_specs(self, cfg, num_pages: int, page_size: int, kv_spec=None):
         if self._window(cfg) is not None:
             raise NotImplementedError("paged KV caching does not support local windows")
-        return attn.paged_cache_specs(cfg, num_pages, page_size)
+        return attn.paged_cache_specs(cfg, num_pages, page_size, kv_spec=kv_spec)
 
     def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
-                     impl: str = "auto"):
+                     impl: str = "auto", kv_spec=None):
         h = apply_norm(cfg, x, p["ln_attn"])
         y, cache = attn.self_attention_decode_paged(
-            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard, impl=impl
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
+            impl=impl, kv_spec=kv_spec,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_mlp"])
@@ -184,10 +185,11 @@ class MoEBlock(DenseBlock):
         return x + y, cache
 
     def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
-                     impl: str = "auto"):
+                     impl: str = "auto", kv_spec=None):
         h = apply_norm(cfg, x, p["ln_attn"])
         y, cache = attn.self_attention_decode_paged(
-            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard, impl=impl
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
+            impl=impl, kv_spec=kv_spec,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_moe"])
@@ -596,7 +598,7 @@ class Model:
         return logits, caches
 
     # ---- paged serving (continuous batching) -------------------------------------
-    def paged_cache_specs(self, num_pages: int, page_size: int):
+    def paged_cache_specs(self, num_pages: int, page_size: int, kv_spec=None):
         cfg = self.cfg
         for kind, _ in block_program(cfg):
             if not hasattr(KINDS[kind], "paged_cache_specs"):
@@ -604,22 +606,25 @@ class Model:
                     f"paged KV caching supports dense-attention blocks; got {kind!r}"
                 )
         return [
-            stack_specs(KINDS[k].paged_cache_specs(cfg, num_pages, page_size), n)
+            stack_specs(KINDS[k].paged_cache_specs(cfg, num_pages, page_size, kv_spec), n)
             for k, n in block_program(cfg)
         ]
 
-    def init_paged_cache(self, num_pages: int, page_size: int):
+    def init_paged_cache(self, num_pages: int, page_size: int, kv_spec=None):
         return tree_initialize(
-            self.paged_cache_specs(num_pages, page_size), jax.random.key(0)
+            self.paged_cache_specs(num_pages, page_size, kv_spec), jax.random.key(0)
         )
 
     def decode_step_paged(self, params, caches, tokens: jax.Array,
                           block_tables: jax.Array, context_lens: jax.Array, *,
-                          shard: Sharder = NULL_SHARDER, attn_impl: str = "auto"):
+                          shard: Sharder = NULL_SHARDER, attn_impl: str = "auto",
+                          kv_spec=None):
         """Continuous-batching decode: tokens (B,) ids; block_tables (B, max_pages)
         int32; context_lens (B,) int32 per-sequence positions. caches are per-layer
         page pools (L, num_pages, Hkv, ps, Dh) addressed through the shared block
-        table — the LayoutPaged serving path."""
+        table — the LayoutPaged serving path. With ``kv_spec`` (PagedQuantSpec)
+        the pools are intN {"q", "scale"} pytrees and decode runs the
+        dequantizing kernel — same tables, same layout, different accessor."""
         cfg = self.cfg
         x = apply_embed(params["embed"], tokens[:, None])
         if cfg.family == "hybrid":
@@ -631,7 +636,8 @@ class Model:
             def body(xc, pc, _blk=blk):
                 pl, cl = pc
                 return _blk.decode_paged(
-                    cfg, pl, xc, cl, block_tables, context_lens, shard, impl=attn_impl
+                    cfg, pl, xc, cl, block_tables, context_lens, shard,
+                    impl=attn_impl, kv_spec=kv_spec,
                 )
 
             x, cache = stack_scan(body, x, (p, cache))

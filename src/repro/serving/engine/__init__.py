@@ -6,12 +6,16 @@
     print(engine.metrics())         # tokens/sec, p50/p99 latency, preemptions
 """
 from .cache import PagedKVCache
-from .engine import EngineConfig, ServeEngine
+from .engine import EngineConfig, ServeEngine, aligned_max_logit_err
+from .kvquant import KV_DTYPES, PagedQuantSpec
 from .request import Request, RequestQueue, RequestState
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
     "EngineConfig",
+    "aligned_max_logit_err",
+    "KV_DTYPES",
+    "PagedQuantSpec",
     "PagedKVCache",
     "Request",
     "RequestQueue",

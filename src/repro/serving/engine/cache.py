@@ -25,9 +25,18 @@ exactly while the slot's table references a refcount>1 page.
 — the LayoutPaged instance whose offsets address the flat pool. ``dense_view``
 gathers through exactly those offsets; tests use it to cross-check that the
 engine's scatter writes and the layout's index->offset algebra agree.
+
+``kv_dtype`` ("f32" | "int8" | "int4") selects the pool's element
+representation (kvquant.PagedQuantSpec — the accessor axis composed with the
+LayoutPaged one): quantized pools hold {q, scale} pytrees per k/v, prefill and
+the decode append quantize at scatter time, and every allocator law above —
+refcounts, prefix index, CoW — is representation-blind because it keys on page
+ids and token hashes, never bytes. Pool bytes drop ~4x (int8) / ~8x (int4)
+against f32 pages; ``stats()`` reports them.
 """
 from __future__ import annotations
 
+import functools
 from collections import deque
 from typing import Dict, List, Tuple
 
@@ -36,19 +45,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Extents, LayoutPaged
-from repro.models.attention import pack_kv_pages
+from repro.models.attention import pack_kv_pages, pack_kv_pages_quant
 
+from .kvquant import KV_DTYPES, kv_pool_bytes
 from .request import page_hash_chain
 
 _pack_kv_pages = jax.jit(pack_kv_pages, donate_argnums=(0,))
 
 
-def _copy_page(pool: Dict[str, jax.Array], src, dst) -> Dict[str, jax.Array]:
-    """Duplicate one physical page across all layers (the CoW device op)."""
-    return {
-        "k": pool["k"].at[:, dst].set(pool["k"][:, src]),
-        "v": pool["v"].at[:, dst].set(pool["v"][:, src]),
-    }
+def _copy_page(pool, src, dst):
+    """Duplicate one physical page across all layers (the CoW device op).
+
+    ``pool`` is any pytree of page-major arrays (page ids on axis 1, after the
+    layer dim) — the f32 {"k", "v"} pools and the quantized {"k"/"v": {"q",
+    "scale"}} pools share this one code path, so CoW copies a quantized page's
+    bytes AND its (page, head) scales in the same op."""
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
 
 
 _copy_page = jax.jit(_copy_page, donate_argnums=(0,))
@@ -56,16 +68,31 @@ _copy_page = jax.jit(_copy_page, donate_argnums=(0,))
 
 class PagedKVCache:
     def __init__(self, model, *, num_pages: int, page_size: int, max_batch: int,
-                 max_pages_per_seq: int, prefix_sharing: bool = True):
+                 max_pages_per_seq: int, prefix_sharing: bool = True,
+                 kv_dtype: str = "f32"):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype {kv_dtype!r} not in {sorted(KV_DTYPES)}"
+            )
         self.cfg = model.cfg
         self.page_size = page_size
         self.num_pages = num_pages
         self.max_batch = max_batch
         self.max_pages_per_seq = max_pages_per_seq
         self.prefix_sharing = prefix_sharing
-        self.pools = model.init_paged_cache(num_pages, page_size)
+        self.kv_dtype = kv_dtype
+        self.kv_spec = KV_DTYPES[kv_dtype]
+        if self.kv_spec is None:
+            self.pools = model.init_paged_cache(num_pages, page_size)
+            self._pack = _pack_kv_pages
+        else:
+            self.pools = model.init_paged_cache(num_pages, page_size, kv_spec=self.kv_spec)
+            self._pack = jax.jit(
+                functools.partial(pack_kv_pages_quant, spec=self.kv_spec),
+                donate_argnums=(0,),
+            )
         self._free: deque = deque(range(1, num_pages))
         # block-table rows + live lengths, indexed by batch slot (null-page filled)
         self.tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
@@ -236,7 +263,7 @@ class PagedKVCache:
             return
         pages = jnp.asarray(self.pages_of[slot][start:n], jnp.int32)
         self.pools = [
-            _pack_kv_pages(
+            self._pack(
                 pool, c["k"][:, :, :, start * ps :], c["v"][:, :, :, start * ps :], pages
             )
             for pool, c in zip(self.pools, caches)
@@ -264,12 +291,23 @@ class PagedKVCache:
 
     def dense_view(self, slot: int, entry: int = 0, layer: int = 0):
         """(k, v) of shape (Hkv, len, Dh) gathered through layout_for(slot)'s
-        offsets — the generic-fallback read path of the paged layout."""
+        offsets — the generic-fallback read path of the paged layout. Quantized
+        pools are decoded first (the accessor's access() over the whole
+        codomain), then gathered through the SAME offsets: the layout algebra
+        never sees the representation."""
         layout = self.layout_for(slot)
         offs = layout.offsets_dense()[0]  # (Hkv, n_pages*ps, Dh)
         length = int(self.lens[slot])
-        k = jnp.take(self.pools[entry]["k"][layer].reshape(-1), offs)[:, :length, :]
-        v = jnp.take(self.pools[entry]["v"][layer].reshape(-1), offs)[:, :length, :]
+
+        def flat(leaf):
+            if self.kv_spec is None:
+                return leaf[layer].reshape(-1)
+            return self.kv_spec.decode_pages(
+                leaf["q"][layer], leaf["scale"][layer]
+            ).reshape(-1)
+
+        k = jnp.take(flat(self.pools[entry]["k"]), offs)[:, :length, :]
+        v = jnp.take(flat(self.pools[entry]["v"]), offs)[:, :length, :]
         return k, v
 
     # -- stats -------------------------------------------------------------------
@@ -278,6 +316,7 @@ class PagedKVCache:
             "peak_pages_in_use": self.peak_pages_in_use,
             "pages_shared": self.pages_shared_total,
             "cow_copies": self.cow_copies,
+            "kv_pool_bytes": kv_pool_bytes(self.pools),
         }
 
     def reset_stats(self) -> None:

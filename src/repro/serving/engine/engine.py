@@ -19,7 +19,10 @@ Invariants the step loop maintains per running slot:
 
 Prefill of a newly admitted request runs at batch 1 on the sequence's true
 length (the KV pool is padded to whole pages, the logits are read at the true
-last position), then the packed KV pages are scattered into the pool.
+last position), then the packed KV pages are scattered into the pool —
+quantized at scatter time when ``kv_dtype`` selects int8/int4 pages
+(kvquant.PagedQuantSpec): the allocator, scheduler and admission logic are
+identical in that regime, only the pool's bytes shrink.
 Preemption is recompute-style: pages are dropped and the full context
 (prompt + generated so far) is re-prefilled on re-admission, which under greedy
 decoding reproduces the identical continuation.
@@ -50,6 +53,10 @@ class EngineConfig:
     watermark_pages: int = 1
     attn_impl: str = "auto"  # "pallas" | "jnp" | "auto" — ops.paged_decode_attention
     prefix_sharing: bool = True  # dedupe common prompt prefixes onto shared pages
+    kv_dtype: str = "f32"  # "f32" | "int8" | "int4" — KV page representation
+    # (kvquant.PagedQuantSpec): same pages/tables/admission, ~4x/~8x fewer bytes
+    record_logits: bool = False  # keep per-step logits rows (ServeEngine.logits_of)
+    # for cross-engine accuracy audits (e.g. int8 vs f32 max-logit-error)
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
@@ -67,6 +74,24 @@ class EngineConfig:
         )
 
 
+def aligned_max_logit_err(eng_ref, eng, results_ref, results) -> float:
+    """Max |logit difference| between two record_logits engines over steps
+    where both saw the SAME context: per request, every step up to and
+    including the first divergent generated token (those logits were computed
+    on identical prefixes, so the comparison stays meaningful after greedy
+    trajectories split). The accuracy metric the quantized-KV CI gate bounds."""
+    errs = [0.0]
+    for rid, s_ref in results_ref.items():
+        a, b = s_ref.generated, results[rid].generated
+        n_cmp = min(len(a), len(b))
+        div = next((i for i in range(n_cmp) if a[i] != b[i]), n_cmp - 1)
+        for n in range(div + 1):
+            errs.append(float(np.max(np.abs(
+                eng_ref.logits_of[rid][n] - eng.logits_of[rid][n]
+            ))))
+    return max(errs)
+
+
 class ServeEngine:
     def __init__(self, model, params, config: EngineConfig = EngineConfig(),
                  mesh=None, rules=None):
@@ -80,6 +105,7 @@ class ServeEngine:
             max_batch=config.max_batch,
             max_pages_per_seq=config.max_pages_per_seq,
             prefix_sharing=config.prefix_sharing,
+            kv_dtype=config.kv_dtype,
         )
         self.scheduler = Scheduler(
             self.cache, SchedulerConfig(config.max_batch, config.watermark_pages)
@@ -88,11 +114,18 @@ class ServeEngine:
         self._pending: List[RequestState] = []  # submitted, not yet arrived
         self._mesh, self._rules = mesh, rules
         self._step = jax.jit(
-            make_paged_serve_step(model, mesh, rules, attn_impl=config.attn_impl),
+            make_paged_serve_step(
+                model, mesh, rules, attn_impl=config.attn_impl,
+                kv_spec=self.cache.kv_spec,
+            ),
             donate_argnums=(1,),
         )
         self._prefill_fns: Dict[int, object] = {}  # padded_len -> jitted prefill
         self.results: Dict[int, RequestState] = {}
+        # rid -> {n: logits row that produced generated[n]} (config.record_logits).
+        # Keyed by generated-token index, not step, so preemption/recompute
+        # overwrites deterministically and traces align across engines.
+        self.logits_of: Dict[int, Dict[int, np.ndarray]] = {}
         self.step_times: List[float] = []
         self._n_decode_steps = 0
 
@@ -135,8 +168,13 @@ class ServeEngine:
             )
             self.cache.write_prefill(slot, caches)
             self.cache.lens[slot] = len(ctx)
-            tok = int(jnp.argmax(logits[0, 0, : self.model.cfg.vocab]))
+            row = np.asarray(logits[0, 0, : self.model.cfg.vocab], np.float32)
+            tok = int(np.argmax(row))
             state.generated.append(tok)
+            if self.config.record_logits:
+                self.logits_of.setdefault(state.request.rid, {})[
+                    len(state.generated) - 1
+                ] = row
             if state.first_token_time is None:
                 state.first_token_time = time.perf_counter() - self._t0
 
@@ -161,6 +199,10 @@ class ServeEngine:
         self._n_decode_steps += 1
         for slot, state in running.items():
             state.generated.append(int(np.argmax(logits[slot])))
+            if self.config.record_logits:
+                self.logits_of.setdefault(state.request.rid, {})[
+                    len(state.generated) - 1
+                ] = logits[slot].copy()
             self.cache.lens[slot] += 1
 
     def _sweep_finished(self) -> None:
@@ -211,6 +253,7 @@ class ServeEngine:
         """Drop finished-request records and timing state (benchmarks rehearse a
         warmup trace on the same engine so jit caches stay hot, then reset)."""
         self.results = {}
+        self.logits_of = {}
         self.step_times = []
         self._n_decode_steps = 0
         self.cache.reset_stats()

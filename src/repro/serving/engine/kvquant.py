@@ -1,0 +1,149 @@
+"""PagedQuantSpec: QuantizedAccessor-style block scales composed with LayoutPaged.
+
+The mdspan paper's pitch is that the layout and accessor customization points
+are ORTHOGONAL: the same storage can change its index->offset map (layout) or
+its element representation (accessor) without either knowing about the other.
+The paged KV cache already exercises the layout axis (LayoutPaged's block-table
+indirection); this module is the accessor axis on the very same pool — int8 or
+int4 page bytes with one f32 scale per (physical page, kv head), decoded on
+access, encoded on scatter.
+
+Why (page, head) scales compose cleanly with LayoutPaged: the layout's offset is
+
+    ((page * Hkv + head) * page_size + slot) * D + d
+
+so one (page, head) pair covers a CONTIGUOUS ``page_size * D`` range of the flat
+codomain. A scale per (page, head) is therefore exactly a QuantizedAccessor
+block scale with ``block = page_size * D`` over the paged codomain — for int8
+the pool's flat bytes + scales ARE valid ``QuantizedAccessor`` buffers
+(``as_flat_accessor`` returns the accessor; tests assert access-equivalence).
+Because scales are keyed by PHYSICAL page, every allocator-level law carries
+over untouched: refcounts, prefix-index adoption, CoW, and
+``LayoutPaged.is_unique()`` all reason about page ids, never bytes, so a shared
+quantized page is copied (bytes AND scale) and privatized exactly like an f32
+one.
+
+int4 deviation: ``QuantizedAccessor`` packs ADJACENT value pairs per byte;
+pages pack SPLIT-HALF along the feature dim (kernels/paged_attention.py:
+pack_int4_splithalf) so in-kernel dequant is a lane concat and a token's
+scatter stays nibble-local. The scale algebra is identical; only the nibble
+order differs, which no consumer outside this spec observes.
+
+Scale lifecycle (deterministic, so prefix sharing dedupes quantized pages):
+  - prefill scatter: fresh scale per (page, head) from that page's own absmax
+    (pad slack included — prompts are zero-padded deterministically, so a page
+    is still a pure function of the tokens that hash to it);
+  - decode append at slot 0: the page is brand new (decode just crossed a page
+    boundary) — fresh scale from the token itself;
+  - decode append at slot > 0: the page already carries prefill (or CoW-copied)
+    content — re-quantize with the EXISTING scale, clipped, the same law as
+    ``QuantizedAccessor.store``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accessors import QuantizedAccessor
+from repro.kernels.paged_attention import dequantize_pages, pack_int4_splithalf
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedQuantSpec:
+    """Element-representation policy for a paged KV pool (the accessor axis).
+
+    A quantized pool leaf is the pytree {"q": intN bytes, "scale": f32} with
+    q: (..., num_pages, Hkv, page_size, Dq) and scale: (..., num_pages, Hkv),
+    Dq = D (int8) or D // 2 (int4). All methods are shape-polymorphic in the
+    leading dims (the layer stack).
+    """
+
+    bits: int = 8
+    element_type: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError("PagedQuantSpec supports bits in {4, 8}")
+
+    @property
+    def qmax(self) -> int:
+        return 7 if self.bits == 4 else 127
+
+    def packed_dim(self, head_dim: int) -> int:
+        if self.bits == 8:
+            return head_dim
+        if head_dim % 2:
+            raise ValueError(f"int4 KV pages need an even head_dim, got {head_dim}")
+        return head_dim // 2
+
+    # -- page encode/decode -------------------------------------------------------
+    def encode_pages(self, x: jax.Array) -> Dict[str, jax.Array]:
+        """x: f32 (..., page_size, D) -> {"q": (..., page_size, Dq), "scale": (...)}.
+
+        One fresh scale per (page, head) slice (absmax / qmax; empty slices get
+        scale 1.0, matching QuantizedAccessor.from_codomain so the int8 pool is
+        bit-identical to the flat-accessor encoding)."""
+        x = jnp.asarray(x, jnp.float32)
+        absmax = jnp.max(jnp.abs(x), axis=(-2, -1))
+        scale = jnp.where(absmax > 0, absmax / self.qmax, 1.0).astype(jnp.float32)
+        q = jnp.clip(
+            jnp.round(x / scale[..., None, None]), -self.qmax, self.qmax
+        ).astype(jnp.int8)
+        if self.bits == 4:
+            q = pack_int4_splithalf(q)
+        return {"q": q, "scale": scale}
+
+    def decode_pages(self, q: jax.Array, scale: jax.Array) -> jax.Array:
+        """Inverse of encode_pages (up to quantization error)."""
+        return dequantize_pages(q, scale, bits=self.bits).astype(self.element_type)
+
+    # -- token append (the decode scatter) ----------------------------------------
+    def token_scale(self, tok: jax.Array) -> jax.Array:
+        """Fresh scale for a page whose first content is this token.
+        tok: (..., D) -> (...)."""
+        absmax = jnp.max(jnp.abs(jnp.asarray(tok, jnp.float32)), axis=-1)
+        return jnp.where(absmax > 0, absmax / self.qmax, 1.0).astype(jnp.float32)
+
+    def quantize_tokens(self, tok: jax.Array, scale: jax.Array) -> jax.Array:
+        """Quantize token vectors with a GIVEN (page, head) scale, clipped —
+        QuantizedAccessor.store's law. tok: (..., D), scale: (...) ->
+        packed (..., Dq) int8."""
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(
+            jnp.round(jnp.asarray(tok, jnp.float32) / safe[..., None]),
+            -self.qmax, self.qmax,
+        ).astype(jnp.int8)
+        if self.bits == 4:
+            q = pack_int4_splithalf(q)
+        return q
+
+    # -- the composition law -------------------------------------------------------
+    def as_flat_accessor(self, page_size: int, head_dim: int) -> QuantizedAccessor:
+        """The equivalent QuantizedAccessor over the flat LayoutPaged codomain:
+        (page, head) scales == block scales with block = page_size * head_dim.
+        int8 only — int4 nibble ORDER differs (split-half vs adjacent pairs)."""
+        if self.bits != 8:
+            raise NotImplementedError(
+                "int4 pages pack nibbles split-half (kernel-friendly); the flat "
+                "QuantizedAccessor packs adjacent pairs — byte layouts differ"
+            )
+        return QuantizedAccessor(
+            self.element_type, bits=8, block=page_size * head_dim
+        )
+
+
+# kv_dtype config values -> element-representation policy (None = dense f32/bf16
+# pages, i.e. the BasicAccessor regime the engine shipped with)
+KV_DTYPES: Dict[str, Optional[PagedQuantSpec]] = {
+    "f32": None,
+    "int8": PagedQuantSpec(bits=8),
+    "int4": PagedQuantSpec(bits=4),
+}
+
+
+def kv_pool_bytes(pools) -> int:
+    """Device bytes held by a (possibly quantized) list-of-pytrees page pool."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(pools)))

@@ -14,7 +14,7 @@ def make_serve_step(model, mesh=None, rules=None):
     return serve_step
 
 
-def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto"):
+def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto", kv_spec=None):
     shard = Sharder(mesh, rules)
 
     def paged_serve_step(params, caches, tokens, block_tables, context_lens):
@@ -26,10 +26,12 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto"):
         made every targeted page private (refcount 1) first: under prefix
         sharing a block-table entry may alias a page other sequences read, and
         this step writes unconditionally — copy-on-write happens on the host
-        BEFORE the tables are handed to the device step."""
+        BEFORE the tables are handed to the device step. ``kv_spec``
+        (PagedQuantSpec) selects quantized {q, scale} pools; the write then
+        quantizes at scatter time and attention dequantizes in-kernel."""
         return model.decode_step_paged(
             params, caches, tokens, block_tables, context_lens,
-            shard=shard, attn_impl=attn_impl,
+            shard=shard, attn_impl=attn_impl, kv_spec=kv_spec,
         )
 
     return paged_serve_step

@@ -58,6 +58,64 @@ def test_quantized_roundtrip_error_bound(vals, bits):
     assert np.all(np.abs(np.array(rec) - xs) <= bound + 1e-5)
 
 
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(1, 3),            # whole blocks
+    st.integers(-1, 1),           # span offset: straddle / hit / overhang a boundary
+    st.sampled_from([4, 8]),      # bits — int4 exercises nibble packing at tails
+    st.integers(1, 9),            # block size, odd blocks make bytes straddle blocks
+    st.data(),
+)
+def test_quantized_roundtrip_at_block_boundaries(nblocks, delta, bits, block, data):
+    """Round-trip at spans exactly on, one under, and one over block boundaries
+    — odd spans leave a pad nibble in the int4 byte stream, and per-offset
+    access must agree with the bulk decay at both tails (nibble parity)."""
+    span = max(1, nblocks * block + delta)
+    vals = data.draw(
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                 min_size=span, max_size=span)
+    )
+    acc = QuantizedAccessor(jnp.float32, bits=bits, block=block)
+    bufs = acc.from_codomain(jnp.array(vals, jnp.float32))
+    rec = np.array(acc.decay(bufs, span=span))
+    xs = np.array(vals, np.float32)
+    nb = -(-span // block)
+    pad = np.pad(xs, (0, nb * block - span)).reshape(nb, block)
+    step = np.abs(pad).max(axis=1) / acc.qmax
+    bound = np.repeat(np.maximum(step, 1e-7), block)[:span] * 0.5 + 1e-5
+    assert np.all(np.abs(rec - xs) <= bound)
+    for i in {0, span // 2, span - 1}:  # both tails + a block interior
+        assert float(acc.access(bufs, i)) == rec[i]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2), st.integers(-1, 1), st.sampled_from([4, 8]), st.data())
+def test_quantized_store_roundtrip_at_tail_offsets(nblocks, delta, bits, data):
+    """store/access at the first and last offsets around block boundaries:
+    the written value reads back within half a step of the block's existing
+    scale and every other offset is untouched (catches nibble-parity and
+    read-modify-write bugs at odd int4 tails)."""
+    block = 8
+    span = max(1, nblocks * block + delta)
+    vals = data.draw(
+        st.lists(st.floats(-50, 50, allow_nan=False, width=32),
+                 min_size=span, max_size=span)
+    )
+    acc = QuantizedAccessor(jnp.float32, bits=bits, block=block)
+    bufs = acc.from_codomain(jnp.array(vals, jnp.float32))
+    before = np.array(acc.decay(bufs, span=span))
+    for i in (0, span - 1):
+        scale = float(np.array(bufs["scale"])[i // block])
+        v = data.draw(st.floats(-abs(scale) * acc.qmax, abs(scale) * acc.qmax,
+                                allow_nan=False, width=32))
+        b2 = acc.store(bufs, i, v)
+        got = float(acc.access(b2, i))
+        assert abs(got - v) <= max(scale, 1e-7) * 0.5 + 1e-5
+        rest = np.array(acc.decay(b2, span=span))
+        mask = np.arange(span) != i
+        np.testing.assert_array_equal(rest[mask], before[mask])
+
+
 def test_quantized_store_uses_block_scale():
     acc = QuantizedAccessor(jnp.float32, bits=8, block=4)
     bufs = acc.from_codomain(jnp.array([1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]))

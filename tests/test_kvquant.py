@@ -1,0 +1,314 @@
+"""Quantized KV page subsystem: PagedQuantSpec laws, the accessor ∘ LayoutPaged
+composition, the dequantizing kernel vs its jnp twin, and the allocator/CoW
+laws over quantized pools (representation-blind: identical to the f32 regime).
+
+Engine-level accuracy/capacity tests (real model) live in
+test_serving_engine.py; everything here runs on synthetic pools or a fake
+model in milliseconds.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Extents, LayoutPaged, QuantizedAccessor
+from repro.kernels.paged_attention import (
+    dequantize_pages,
+    pack_int4_splithalf,
+    paged_decode_attention_jnp,
+    paged_decode_attention_quant_jnp,
+    paged_flash_decode_quant,
+    unpack_int4_splithalf,
+)
+from repro.serving.engine.cache import PagedKVCache
+from repro.serving.engine.kvquant import KV_DTYPES, PagedQuantSpec, kv_pool_bytes
+
+
+# =====================================================================================
+# PagedQuantSpec — encode/decode laws
+# =====================================================================================
+@pytest.mark.parametrize("bits", [8, 4])
+def test_encode_decode_roundtrip_within_half_step(bits):
+    spec = PagedQuantSpec(bits=bits)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((5, 2, 4, 8)).astype(np.float32)  # (P, H, ps, D)
+    enc = spec.encode_pages(jnp.asarray(x))
+    rec = np.array(spec.decode_pages(enc["q"], enc["scale"]))
+    step = np.abs(x).max(axis=(-2, -1)) / spec.qmax  # per (page, head)
+    assert np.all(np.abs(rec - x) <= step[..., None, None] * 0.5 + 1e-6)
+    # scale is per (page, head): shape matches, zero slices get the 1.0 default
+    assert enc["scale"].shape == (5, 2)
+    z = spec.encode_pages(jnp.zeros((1, 1, 4, 8)))
+    assert float(z["scale"][0, 0]) == 1.0
+    assert np.all(np.array(spec.decode_pages(z["q"], z["scale"])) == 0.0)
+
+
+def test_int4_splithalf_pack_unpack_identity():
+    rng = np.random.default_rng(1)
+    q = rng.integers(-7, 8, size=(3, 5, 16)).astype(np.int8)
+    rt = np.array(unpack_int4_splithalf(pack_int4_splithalf(jnp.asarray(q))))
+    np.testing.assert_array_equal(rt, q)
+
+
+def test_int4_requires_even_head_dim():
+    with pytest.raises(ValueError, match="even head_dim"):
+        PagedQuantSpec(bits=4).packed_dim(7)
+
+
+def test_quantize_tokens_uses_given_scale_and_clips():
+    spec = PagedQuantSpec(bits=8)
+    tok = jnp.asarray([[1.0, -2.0, 1000.0]])
+    scale = jnp.asarray([2.0 / spec.qmax])
+    q = np.array(spec.quantize_tokens(tok, scale))
+    assert q[0, 2] == spec.qmax  # out-of-range clips at the existing scale
+    # fresh scale from the token itself round-trips its absmax exactly
+    s = spec.token_scale(tok)
+    q2 = spec.quantize_tokens(tok, s)
+    assert float(q2[0, 2]) * float(s[0]) == pytest.approx(1000.0, rel=1e-5)
+
+
+# =====================================================================================
+# the composition law: (page, head) scales == flat QuantizedAccessor blocks
+# =====================================================================================
+def test_int8_pool_is_flat_quantized_accessor_over_layout_paged():
+    """The paper's claim made literal: PagedQuantSpec's int8 pool bytes+scales
+    ARE QuantizedAccessor buffers with block = page_size * head_dim over the
+    flat LayoutPaged codomain, so accessor.access ∘ layout.offsets reads the
+    same values as the page-level decode."""
+    P, H, ps, D = 5, 2, 4, 8
+    spec = KV_DTYPES["int8"]
+    rng = np.random.default_rng(2)
+    pool = rng.standard_normal((P, H, ps, D)).astype(np.float32)
+    enc = spec.encode_pages(jnp.asarray(pool))
+    acc = spec.as_flat_accessor(ps, D)
+    bufs = acc.from_codomain(jnp.asarray(pool.reshape(-1)))
+    # identical encodings (bytes and block scales)
+    np.testing.assert_array_equal(np.array(bufs["q"]), np.array(enc["q"]).reshape(-1))
+    np.testing.assert_allclose(
+        np.array(bufs["scale"]), np.array(enc["scale"]).reshape(-1), rtol=0
+    )
+    # identical reads through a scattered block table
+    lp = LayoutPaged(Extents.fully_dynamic(2, H, 2 * ps, D), ((3, 1), (4, 0)), ps, P)
+    offs = lp.offsets_dense()
+    via_accessor = np.array(acc.access(bufs, offs))
+    via_pages = np.array(
+        jnp.take(spec.decode_pages(enc["q"], enc["scale"]).reshape(-1), offs)
+    )
+    np.testing.assert_allclose(via_accessor, via_pages, rtol=0, atol=0)
+
+
+def test_int4_flat_accessor_documented_deviation():
+    with pytest.raises(NotImplementedError, match="split-half"):
+        KV_DTYPES["int4"].as_flat_accessor(4, 8)
+
+
+def test_quantized_accessor_rejects_negative_offsets():
+    """Regression: a negative offset's nibble parity/block index depends on the
+    true span, which packed buffers don't record — access(bufs, -1) on an
+    odd-span int4 buffer used to silently read the pad nibble (always 0) and
+    store(bufs, -1, v) corrupted it."""
+    acc = QuantizedAccessor(jnp.float32, bits=4, block=8)
+    bufs = acc.from_codomain(jnp.asarray([1.0, -2.0, 3.0, -1.0, -3.0]))  # odd span
+    assert float(acc.access(bufs, 4)) == pytest.approx(-3.0, abs=0.25)
+    with pytest.raises(TypeError, match="non-negative"):
+        acc.access(bufs, -1)
+    with pytest.raises(TypeError, match="non-negative"):
+        acc.access(bufs, np.int64(-1))  # numpy scalars index the same paths
+    with pytest.raises(TypeError, match="non-negative"):
+        acc.store(bufs, -1, 1.0)
+    with pytest.raises(TypeError, match="non-negative"):
+        QuantizedAccessor(jnp.float32, bits=8, block=4).access(
+            {"q": jnp.zeros(6, jnp.int8), "scale": jnp.ones(2)}, -3
+        )
+
+
+# =====================================================================================
+# dequantizing kernel vs jnp twin
+# =====================================================================================
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("lens", [(5, 20), (1, 16)])
+def test_quant_kernel_matches_twin(bits, lens):
+    b, hq, hkv, d, ps = len(lens), 4, 2, 16, 8
+    mp = -(-max(lens) // ps)
+    P = b * mp + 1
+    dq = d if bits == 8 else d // 2
+    rng = np.random.default_rng(bits * 10 + len(lens))
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    kq = jnp.asarray(rng.integers(-7 if bits == 4 else -127, 8 if bits == 4 else 128,
+                                  size=(P, hkv, ps, dq)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 128, size=(P, hkv, ps, dq)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.2, size=(P, hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.01, 0.2, size=(P, hkv)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, P)).reshape(b, mp), jnp.int32)
+    cl = jnp.asarray(lens, jnp.int32)
+    out_kernel = paged_flash_decode_quant(
+        q, kq, ks, vq, vs, bt, cl, bits=bits, interpret=True
+    )
+    out_twin = paged_decode_attention_quant_jnp(q, kq, ks, vq, vs, bt, cl, bits=bits)
+    np.testing.assert_allclose(
+        np.array(out_kernel), np.array(out_twin), atol=1e-4, rtol=0
+    )
+    # and the twin IS the f32 path over the dequantized pool (same masks/norms)
+    out_f32 = paged_decode_attention_jnp(
+        q, dequantize_pages(kq, ks, bits=bits), dequantize_pages(vq, vs, bits=bits),
+        bt, cl,
+    )
+    np.testing.assert_array_equal(np.array(out_twin), np.array(out_f32))
+
+
+# =====================================================================================
+# allocator + layout laws over quantized pools (fake model: L=1, Hkv=2, Dh=4)
+# =====================================================================================
+@dataclasses.dataclass
+class FakeCfg:
+    n_kv_heads: int = 2
+    head_dim: int = 4
+
+
+class FakeModel:
+    cfg = FakeCfg()
+
+    def init_paged_cache(self, num_pages, page_size, kv_spec=None):
+        hkv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
+        if kv_spec is None:
+            shape = (1, num_pages, hkv, page_size, dh)
+            return [{"k": jnp.zeros(shape), "v": jnp.zeros(shape)}]
+        dq = kv_spec.packed_dim(dh)
+        leaf = lambda: {
+            "q": jnp.zeros((1, num_pages, hkv, page_size, dq), jnp.int8),
+            "scale": jnp.zeros((1, num_pages, hkv), jnp.float32),
+        }
+        return [{"k": leaf(), "v": leaf()}]
+
+
+def make_cache(kv_dtype="f32", num_pages=10, page_size=4, prefix_sharing=True):
+    return PagedKVCache(
+        FakeModel(), num_pages=num_pages, page_size=page_size, max_batch=4,
+        max_pages_per_seq=8, prefix_sharing=prefix_sharing, kv_dtype=kv_dtype,
+    )
+
+
+def _stamp_random(cache, seed=0):
+    """Fill the pool leaves with recognizable random content (q bytes, scales)."""
+    rng = np.random.default_rng(seed)
+
+    def rand_like(a):
+        if a.dtype == jnp.int8:
+            return jnp.asarray(rng.integers(-7, 8, size=a.shape), jnp.int8)
+        return jnp.asarray(rng.uniform(0.01, 1.0, size=a.shape), a.dtype)
+
+    cache.pools = jax.tree.map(rand_like, cache.pools)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_layout_laws_identical_in_quantized_regime(kv_dtype):
+    """fork()/cow_slice()/is_unique() are representation-blind: the same
+    allocator history produces identical layout observers on an f32 and a
+    quantized cache (ISSUE: 'is_unique() laws must hold identically')."""
+    caches = [make_cache("f32"), make_cache(kv_dtype)]
+    toks = list(range(10))
+    for c in caches:
+        c.allocate(0, 3, tokens=toks)
+        c.allocate(1, 3, tokens=toks)  # full share
+        c.lens[0] = c.lens[1] = 10
+    for c in caches:
+        assert c.pages_of[1] == c.pages_of[0]
+        assert not c.layout_for(0).is_unique()
+        assert not c.layout_for(1).is_unique()
+    # CoW the quantized slot 1 and the f32 slot 1: same layout transitions
+    for c in caches:
+        assert c.needs_cow(1)
+        assert c.cow_page(1)
+    ref, quant = caches
+    assert quant.layout_for(1).block_table == ref.layout_for(1).block_table
+    assert quant.layout_for(1).shared_pages == ref.layout_for(1).shared_pages
+    assert not quant.layout_for(1).is_unique()  # full pages still shared
+    # fork/cow_slice algebra on the materialized layout object
+    lp = quant.layout_for(0)
+    forked = lp.fork(0, fresh_pages=(quant.pages_of[1][2],))
+    assert not forked.is_unique()
+    for c in caches:
+        c.free_slot(0)
+    assert quant.layout_for(1).is_unique() == ref.layout_for(1).is_unique() is True
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_cow_copies_quantized_bytes_and_scales_donor_untouched(kv_dtype):
+    c = make_cache(kv_dtype)
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    _stamp_random(c)
+    donor_pages = list(c.pages_of[0])
+    donor = jax.tree.map(lambda a: np.array(a[:, donor_pages]), c.pools[0])
+    c.allocate(1, 3, tokens=toks)
+    c.lens[1] = 10
+    assert c.needs_cow(1)
+    assert c.cow_page(1)
+    new_page = c.pages_of[1][2]
+    assert new_page != c.pages_of[0][2]
+    # the private copy carries the donor's q bytes AND its (page, head) scales
+    np.testing.assert_array_equal(
+        np.array(c.pools[0]["k"]["q"][:, new_page]), donor["k"]["q"][:, 2]
+    )
+    np.testing.assert_array_equal(
+        np.array(c.pools[0]["k"]["scale"][:, new_page]), donor["k"]["scale"][:, 2]
+    )
+    # scribble over the copy; the donor stays byte-identical (bytes and scales)
+    c.pools = [jax.tree.map(lambda a: a.at[:, new_page].set(0), c.pools[0])]
+    got = jax.tree.map(lambda a: np.array(a[:, donor_pages]), c.pools[0])
+    jax.tree.map(np.testing.assert_array_equal, got, donor)
+    assert not c.needs_cow(1)
+    assert int(c.ref.min()) >= 0
+
+
+def test_refcounts_nonnegative_under_shared_quantized_churn():
+    """Shared prompts adopted, CoW'd, freed and re-adopted over a quantized
+    pool: refcounts never go negative and the pool drains clean."""
+    c = make_cache("int8", num_pages=12)
+    donor = list(range(10))
+    for round_ in range(4):
+        c.allocate(0, 3, tokens=donor)
+        c.allocate(1, 3, tokens=donor)
+        c.allocate(2, 3, tokens=donor)
+        assert c.pages_shared_total > 0
+        for slot in (1, 2):
+            c.lens[slot] = 10
+            while c.needs_cow(slot):
+                assert c.cow_page(slot)
+        assert int(c.ref.min()) >= 0
+        for slot in (0, 1, 2):
+            c.free_slot(slot)
+            c.free_slot(slot)  # idempotent double-free
+        assert int(c.ref.min()) >= 0
+    assert int(c.ref.max()) == 0
+    assert c.num_free == c.num_pages - 1
+    assert not c._index
+
+
+def test_prefix_index_dedupes_quantized_pages_like_f32():
+    """The hash chain keys on token ids, never bytes: admission costs match
+    exactly across representations (the ROADMAP 'refcount interplay with
+    QuantizedAccessor scales' follow-on)."""
+    for kv_dtype in ("f32", "int8", "int4"):
+        c = make_cache(kv_dtype)
+        donor = list(range(10))
+        c.allocate(0, c.pages_for(11), tokens=donor)
+        assert c.new_pages_needed(donor) == 0
+        assert c.new_pages_needed(donor[:8] + [77, 78]) == 1
+        assert c.new_pages_needed([77] + donor[1:]) == 3
+
+
+def test_quantized_pool_bytes_shrink():
+    b32 = kv_pool_bytes(make_cache("f32").pools)
+    b8 = kv_pool_bytes(make_cache("int8").pools)
+    b4 = kv_pool_bytes(make_cache("int4").pools)
+    assert b32 / b8 >= 1.9 and b8 > b4
+    c = make_cache("int8")
+    assert c.stats()["kv_pool_bytes"] == b8
+
+
+def test_unknown_kv_dtype_rejected():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        make_cache("fp8")

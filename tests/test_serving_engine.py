@@ -11,7 +11,9 @@ from repro.core import Extents, LayoutError, LayoutPaged, LayoutRight
 from repro.kernels import ref
 from repro.kernels.paged_attention import paged_decode_attention_jnp, paged_flash_decode
 from repro.models import build_model, get_config
-from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine import (
+    EngineConfig, Request, ServeEngine, aligned_max_logit_err,
+)
 
 
 # =====================================================================================
@@ -237,6 +239,73 @@ def test_engine_sharing_stays_exact_under_preemption(small_model):
     assert m["pages_shared"] > 0
     for i, p in enumerate(prompts):
         assert results[i].generated == unbatched_greedy(cfg, model, params, p, n_gen)
+
+
+@pytest.mark.parametrize("kv_dtype,bound", [("int8", 0.75), ("int4", 2.0)])
+def test_engine_quantized_kv_bounded_error_and_smaller_pool(small_model, kv_dtype, bound):
+    """The whole serving stack over intN pages: same shared-prefix burst
+    (adoption + forced CoW on the partial last page) through an f32 and a
+    quantized engine. All requests complete, prefix sharing and CoW fire
+    identically (allocator is representation-blind), the pool holds the same
+    tokens in far fewer bytes, and logits on identical contexts stay within a
+    calibrated bound of f32."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(0, cfg.vocab, size=10).tolist()  # 10 % 4 != 0 -> CoW
+    prompts = [list(prefix) for _ in range(2)]
+    prompts += [prefix + rng.integers(0, cfg.vocab, size=3).tolist()]
+    n_gen = 5
+    make_reqs = lambda: [
+        Request(rid=i, prompt=list(p), max_new_tokens=n_gen)
+        for i, p in enumerate(prompts)
+    ]
+    econf = EngineConfig(num_pages=32, page_size=4, max_batch=3, max_pages_per_seq=8,
+                         record_logits=True)
+    eng_f32 = ServeEngine(model, params, econf)
+    eng_q = ServeEngine(model, params, dataclasses.replace(econf, kv_dtype=kv_dtype))
+    res_f32 = eng_f32.run(make_reqs())
+    res_q = eng_q.run(make_reqs())
+    assert set(res_q) == set(range(len(prompts)))
+    assert all(len(res_q[r].generated) == n_gen for r in res_q)
+    m_f32, m_q = eng_f32.metrics(), eng_q.metrics()
+    # allocator behavior identical across representations
+    assert m_q["pages_shared"] == m_f32["pages_shared"] > 0
+    assert m_q["cow_copies"] == m_f32["cow_copies"] >= 1
+    assert m_q["peak_pages_in_use"] == m_f32["peak_pages_in_use"]
+    # capacity: same pages, a fraction of the bytes
+    assert m_f32["kv_pool_bytes"] / m_q["kv_pool_bytes"] >= 1.9
+    err = aligned_max_logit_err(eng_f32, eng_q, res_f32, res_q)
+    assert 0 < err < bound, f"{kv_dtype} max logit err {err} outside (0, {bound})"
+
+
+def test_engine_quant_dense_view_matches_prefill_within_scale_bound(small_model):
+    """The quantized scatter path implements the layout map: reading the int8
+    pool back through LayoutPaged offsets reproduces the dense prefill cache
+    elementwise within half a quantization step of each (page, head) scale."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=10).tolist()
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=8,
+                     kv_dtype="int8"),
+    )
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng._t0 = 0.0
+    eng.queue.push(eng._pending.pop())
+    eng._admit_and_prefill(0.0)
+    layout = eng.cache.layout_for(0)
+    assert layout.is_unique() and not layout.is_strided()
+    k_paged, _ = eng.cache.dense_view(0)  # decoded through the accessor
+    _, caches = model.prefill(params, jnp.asarray([prompt], jnp.int32), max_len=12)
+    k_dense = np.array(caches[0]["k"][0, 0, :, : len(prompt)], np.float32)
+    # per-(page, head) half-step bound, gathered to each token's page
+    scales = np.array(eng.cache.pools[0]["k"]["scale"][0])  # (num_pages, Hkv)
+    pages = np.array(eng.cache.pages_of[0])[
+        np.arange(len(prompt)) // eng.cache.page_size
+    ]
+    bound = 0.5 * scales[pages].T[:, :, None] + 1e-6  # (Hkv, len, 1)
+    assert np.all(np.abs(np.array(k_paged, np.float32) - k_dense) <= bound)
 
 
 def test_engine_cache_dense_view_matches_layout(small_model):
