@@ -21,6 +21,17 @@ bytes (the capacity_x_vs_f32 ratio is the pages-per-byte gain), greedy token
 agreement, and the max |logit - logit_f32| over aligned steps — the
 accuracy/capacity trade the CI smoke job gates on.
 
+A fourth section is the LONG-PROMPT BURST: long prompts and short requests
+arrive together, replayed through a monolithic-prefill engine and a
+chunked-prefill (mixed-step) engine. Monolithic stalls every short request
+behind whole-prompt prefills; chunked interleaves page-sized chunks with
+decode, so the section records time-to-first-token p50/p95 and decode
+throughput for both (the CI gate requires chunked TTFT p50 strictly better)
+plus token-exactness between the two engines. A sub-section replays a
+shared-prefix follower trace with prefill COMPUTE skip (the chunk cursor
+starts past the adopted pages) and records prefill_tokens_skipped — the
+prefill-FLOPs saved by prefix sharing, beyond the storage dedupe of PR 2.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke --kv-dtype int8
@@ -63,6 +74,34 @@ SHARED_TAIL_BUCKETS = (0, 4, 8)
 SHARED_N_REQUESTS = 8
 SHARED_MAX_BATCH = 4
 SHARED_PAGE_SIZE = 8
+
+# long-prompt burst: a few long prompts and many short requests arrive at once.
+# Monolithic prefill serializes the long prompts in front of everything; the
+# chunked engine advances them CHUNK_TOKENS per mixed step while the shorts
+# prefill and decode in between — the TTFT distribution is the point. This
+# section uses its own, slightly larger model: chunking pays one dispatch per
+# chunk, so its win only shows where prefill COMPUTE dominates dispatch
+# overhead (d_model 128, 896-token prompts: a monolithic prefill costs well
+# over an order of magnitude more than a chunk step on CPU) — on the
+# dispatch-bound smoke model every schedule ties.
+LONG_PROMPT_LEN = 896
+LONG_N = 2
+SHORT_PROMPT_LEN = 8
+SHORT_N = 6
+BURST_PAGE_SIZE = 8
+# every burst request gets a slot at t=0: the section isolates prefill
+# head-of-line blocking (what chunking fixes) from slot-turnover contention
+# (which a per-step chunk budget inherently slows — tokens_per_s records
+# that trade)
+BURST_MAX_BATCH = 8
+CHUNK_TOKENS = 128
+
+
+def burst_config() -> ModelConfig:
+    return ModelConfig(
+        name="bench-burst-dense", family="dense", n_layers=2, d_model=128,
+        vocab=512, n_heads=4, n_kv_heads=2, d_ff=256, dtype="float32",
+    )
 
 
 def bench_config(smoke: bool = False) -> ModelConfig:
@@ -214,6 +253,123 @@ def run_quantized(model, params, vocab: int, n_requests: int, max_new: int,
     return section
 
 
+def make_long_burst_requests(rng: np.random.Generator, vocab: int, n_long: int,
+                             n_short: int, max_new: int) -> list:
+    """Long prompts first in FIFO order, shorts right behind — all at t=0, the
+    worst case for monolithic prefill (every short stalls behind whole-prompt
+    prefills)."""
+    reqs = []
+    for i in range(n_long):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, vocab, size=LONG_PROMPT_LEN).tolist(),
+            max_new_tokens=max_new, arrival_time=0.0,
+        ))
+    for i in range(n_short):
+        reqs.append(Request(
+            rid=n_long + i,
+            prompt=rng.integers(0, vocab, size=SHORT_PROMPT_LEN).tolist(),
+            max_new_tokens=max_new, arrival_time=0.0,
+        ))
+    return reqs
+
+
+def make_skip_requests(rng: np.random.Generator, vocab: int, max_new: int) -> list:
+    """Donor / filler / followers: the donor's long shared prefix is resident
+    (and published chunk-by-chunk) while it decodes; the filler frees its slot
+    so the followers admit MID-donor and adopt — the deterministic pattern that
+    exercises prefill compute skip without wall-clock staging."""
+    prefix = rng.integers(0, vocab, size=32).tolist()
+    return [
+        Request(rid=0, prompt=prefix + rng.integers(0, vocab, size=4).tolist(),
+                max_new_tokens=3 * max_new, arrival_time=0.0),
+        Request(rid=1, prompt=rng.integers(0, vocab, size=5).tolist(),
+                max_new_tokens=2, arrival_time=0.0),
+        Request(rid=2, prompt=prefix + rng.integers(0, vocab, size=3).tolist(),
+                max_new_tokens=max_new, arrival_time=0.0),
+        Request(rid=3, prompt=list(prefix), max_new_tokens=max_new,
+                arrival_time=0.0),
+    ]
+
+
+def run_long_prompt_burst(max_new: int, n_long: int, n_short: int) -> dict:
+    """The same burst through a monolithic and a chunked (mixed-step) engine;
+    records TTFT p50/p95 and decode throughput for both, token-exactness, and
+    a compute-skip sub-section (prefill FLOPs saved under shared prefixes).
+    Runs on its own burst_config() model (see the constant block above)."""
+    cfg = burst_config()
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(1))
+    vocab = cfg.vocab
+    max_len = LONG_PROMPT_LEN + 3 * max_new + 1
+    conf = EngineConfig.sized_for(
+        max_len, page_size=BURST_PAGE_SIZE, max_batch=BURST_MAX_BATCH,
+    )
+    confs = {
+        "monolithic": conf,
+        "chunked": dataclasses.replace(
+            conf, chunked_prefill=True, chunk_tokens=CHUNK_TOKENS
+        ),
+    }
+    outputs, stats = {}, {}
+    for mode, c in confs.items():
+        eng = ServeEngine(model, params, c)
+        # rehearsal compiles this mode's prefill shapes (monolithic: one per
+        # page bucket; chunked: the single chunk step) + decode, then reset
+        eng.run(make_long_burst_requests(np.random.default_rng(11), vocab,
+                                         n_long, n_short, max_new))
+        eng.reset_metrics()
+        results = eng.run(
+            make_long_burst_requests(np.random.default_rng(11), vocab,
+                                     n_long, n_short, max_new)
+        )
+        outputs[mode] = {rid: s.generated for rid, s in results.items()}
+        stats[mode] = eng.metrics()
+    mono, chk = stats["monolithic"], stats["chunked"]
+    # compute-skip sub-section: chunked engine, shared-prefix followers
+    skip_conf = dataclasses.replace(confs["chunked"], max_batch=2)
+    eng = ServeEngine(model, params, skip_conf)
+    eng.run(make_skip_requests(np.random.default_rng(13), vocab, max_new))
+    eng.reset_metrics()
+    skip_results = eng.run(make_skip_requests(np.random.default_rng(13), vocab, max_new))
+    m_skip = eng.metrics()
+    eng_cold = ServeEngine(
+        model, params, dataclasses.replace(skip_conf, prefix_sharing=False)
+    )
+    cold_results = eng_cold.run(make_skip_requests(np.random.default_rng(13), vocab, max_new))
+    skip_total = m_skip["prefill_tokens_skipped"] + m_skip["prefill_tokens_computed"]
+    return {
+        "n_long": n_long,
+        "n_short": n_short,
+        "long_prompt_len": LONG_PROMPT_LEN,
+        "short_prompt_len": SHORT_PROMPT_LEN,
+        "chunk_tokens": CHUNK_TOKENS,
+        "page_size": BURST_PAGE_SIZE,
+        "max_batch": BURST_MAX_BATCH,
+        "ttft_s_p50_monolithic": mono["ttft_s_p50"],
+        "ttft_s_p50_chunked": chk["ttft_s_p50"],
+        "ttft_s_p95_monolithic": mono["ttft_s_p95"],
+        "ttft_s_p95_chunked": chk["ttft_s_p95"],
+        "ttft_p50_speedup_x": round(
+            mono["ttft_s_p50"] / max(chk["ttft_s_p50"], 1e-9), 2
+        ),
+        "tokens_per_s_monolithic": mono["tokens_per_s"],
+        "tokens_per_s_chunked": chk["tokens_per_s"],
+        "decode_steps_chunked": chk["decode_steps"],
+        "tokens_exact": outputs["monolithic"] == outputs["chunked"],
+        "prefix_compute_skip": {
+            "prefill_tokens_skipped": m_skip["prefill_tokens_skipped"],
+            "prefill_tokens_computed": m_skip["prefill_tokens_computed"],
+            "prefill_flops_saved_pct": round(
+                100.0 * m_skip["prefill_tokens_skipped"] / max(skip_total, 1), 1
+            ),
+            "pages_shared": m_skip["pages_shared"],
+            "tokens_exact_vs_cold": {
+                r: skip_results[r].generated for r in skip_results
+            } == {r: cold_results[r].generated for r in cold_results},
+        },
+    }
+
+
 def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> dict:
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
@@ -267,6 +423,21 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
     )
     qs = run_quantized(model, params, cfg.vocab, shared_n, max_new, kv_dtypes)
     report["quantized"] = qs
+    lb = run_long_prompt_burst(
+        max_new, n_long=1 if smoke else LONG_N, n_short=3 if smoke else SHORT_N,
+    )
+    report["long_prompt_burst"] = lb
+    sk = lb["prefix_compute_skip"]
+    print(
+        f"serving/long_prompt_burst,ttft_p50 "
+        f"{lb['ttft_s_p50_chunked']*1e3:.0f}ms chunked vs "
+        f"{lb['ttft_s_p50_monolithic']*1e3:.0f}ms monolithic "
+        f"({lb['ttft_p50_speedup_x']}x), p95 {lb['ttft_s_p95_chunked']*1e3:.0f} vs "
+        f"{lb['ttft_s_p95_monolithic']*1e3:.0f}ms, exact={lb['tokens_exact']} | "
+        f"compute-skip {sk['prefill_tokens_skipped']} tokens "
+        f"({sk['prefill_flops_saved_pct']}% of prefill) "
+        f"exact_vs_cold={sk['tokens_exact_vs_cold']}"
+    )
     for kv, e in qs["dtypes"].items():
         extra = (
             f" capacity_x={e['capacity_x_vs_f32']} "

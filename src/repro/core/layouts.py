@@ -415,6 +415,18 @@ class LayoutPaged(LayoutMapping):
     (or aliases a page internally). ``fork()`` builds the aliased regime
     explicitly; ``cow_slice()`` is the copy-on-write swap that re-privatizes one
     logical page.
+
+    Slicing (submdspan — the chunked-prefill view): a ``(a, b)`` slice of the
+    pos rank yields another LayoutPaged whose block-table rows are trimmed to
+    exactly the pages covering ``[a, b)`` and whose ``pos_offset`` records where
+    inside the first page the chunk begins — so a prefill chunk's unit of work
+    is LITERALLY a submdspan of the pool, sharing storage with the parent and
+    costing only index arithmetic. ``shared_pages`` is filtered to the pages the
+    chunk still references: a chunk that starts past a shared prefix is
+    ``is_unique()`` even when its parent is not — the formal statement of the
+    shared-prefix compute-skip regime (the skipped pages are someone else's to
+    read, the chunk's own pages are private to write). See core/submdspan.py
+    §"chunk views are submdspans" for the laws.
     """
 
     extents: Extents
@@ -422,6 +434,7 @@ class LayoutPaged(LayoutMapping):
     page_size: int = 16
     num_pages: int = 0
     shared_pages: Tuple[int, ...] = ()
+    pos_offset: int = 0  # physical position of logical pos 0 within the first page
 
     def __post_init__(self):
         if self.extents.rank != 4:
@@ -429,15 +442,19 @@ class LayoutPaged(LayoutMapping):
         n_seq, _, max_pos, _ = self.extents.sizes
         if self.page_size <= 0:
             raise ValueError("page_size must be positive")
-        if max_pos % self.page_size != 0:
-            raise TypeError(
-                f"pos extent {max_pos} not a multiple of page_size {self.page_size}"
+        if not (0 <= self.pos_offset < self.page_size):
+            raise ValueError(
+                f"pos_offset {self.pos_offset} outside [0, page_size {self.page_size})"
             )
         table = tuple(tuple(int(p) for p in row) for row in self.block_table)
         object.__setattr__(self, "block_table", table)
         if len(table) != n_seq:
             raise TypeError(f"{len(table)} block-table rows for {n_seq} sequences")
-        pages_per_seq = max_pos // self.page_size
+        # rows must cover the (offset-shifted) pos domain exactly: full coverage
+        # of whole pages when pos_offset == 0 and max_pos is a page multiple
+        # (the allocator's full-sequence views), a partial first/last page
+        # otherwise (chunk submdspans)
+        pages_per_seq = -(-(self.pos_offset + max_pos) // self.page_size)
         for row in table:
             if len(row) != pages_per_seq:
                 raise TypeError(
@@ -473,11 +490,12 @@ class LayoutPaged(LayoutMapping):
     def __call__(self, s, h, p, d):
         _, n_heads, _, d_sz = self.extents.sizes
         ps = self.page_size
+        phys = p + self.pos_offset
         if all(isinstance(i, int) for i in (s, h, p, d)):
-            page = self.block_table[s][p // ps]
+            page = self.block_table[s][phys // ps]
         else:
-            page = self._table_array()[s, p // ps]
-        slot = p % ps
+            page = self._table_array()[s, phys // ps]
+        slot = phys % ps
         return ((page * n_heads + h) * ps + slot) * d_sz + d
 
     def pool_shape(self) -> Tuple[int, int, int, int]:
@@ -496,6 +514,10 @@ class LayoutPaged(LayoutMapping):
         return not any(p in shared for p in entries)
 
     def is_contiguous(self) -> bool:
+        if self.pos_offset != 0 or (
+            self.extents.extent(2) % self.page_size != 0
+        ):
+            return False  # a chunk view leaves page slack around its boundaries
         entries = sorted(p for row in self.block_table for p in row)
         return entries == list(range(self.num_pages))
 
@@ -503,6 +525,53 @@ class LayoutPaged(LayoutMapping):
         # Type-level answer: the table indirection breaks affine strides
         # (identity-table instances are not special-cased).
         return False
+
+    # -- slicing (submdspan): chunk views -----------------------------------------
+    def slice_layout(self, starts: Sequence[int], shape_spec) -> "LayoutPaged":
+        """The layout of a rectangular sub-view — the chunked-prefill law.
+
+        Only seq and pos may be restricted (``all_`` or ``(a, b)`` ranges): the
+        head and d ranks are interleaved INSIDE each page by the offset formula,
+        so restricting them would need a different pool geometry, and integer
+        specifiers would drop the rank-4 structure the block table addresses —
+        both are rejected at trace time (paper: a failed compile-time
+        constraint). A pos slice trims each row to exactly the pages covering
+        ``[a, b)`` and records the in-page start as ``pos_offset``; the result
+        is again a LayoutPaged over the SAME pool, and composing slices is
+        associative (slicing the slice == slicing once with the composed range).
+        """
+        if len(shape_spec.keep) != 4 or not all(shape_spec.keep):
+            raise LayoutError(
+                "submdspan of LayoutPaged must keep all four ranks "
+                "(integer specifiers would drop the block-table structure)"
+            )
+        s0, h0, p0, _d0 = (int(s) for s in starts)
+        sizes = shape_spec.extents.sizes
+        if h0 != 0 or sizes[1] != self.extents.extent(1):
+            raise LayoutError(
+                "LayoutPaged head rank only slices with all_ (heads interleave "
+                "inside each physical page)"
+            )
+        if sizes[3] != self.extents.extent(3):
+            raise LayoutError(
+                "LayoutPaged d rank only slices with all_ (d is innermost in "
+                "each page)"
+            )
+        rows = self.block_table[s0 : s0 + sizes[0]]
+        phys0 = self.pos_offset + p0
+        first_page = phys0 // self.page_size
+        last_page = -(-(phys0 + sizes[2]) // self.page_size)  # exclusive
+        new_rows = tuple(r[first_page:last_page] for r in rows)
+        referenced = {p for r in new_rows for p in r}
+        shared = tuple(p for p in self.shared_pages if p in referenced)
+        return LayoutPaged(
+            shape_spec.extents,
+            new_rows,
+            self.page_size,
+            self.num_pages,
+            shared,
+            phys0 - first_page * self.page_size,
+        )
 
     # -- prefix sharing / copy-on-write -------------------------------------------
     def fork(self, seq: int, fresh_pages: Sequence[int] = ()) -> "LayoutPaged":
@@ -530,6 +599,7 @@ class LayoutPaged(LayoutMapping):
             self.page_size,
             self.num_pages,
             self.shared_pages,
+            self.pos_offset,
         )
 
     def cow_slice(self, seq: int, logical_page: int, new_page: int) -> "LayoutPaged":
@@ -550,7 +620,10 @@ class LayoutPaged(LayoutMapping):
         shared = tuple(
             p for p in self.shared_pages if p != old or p in still_referenced
         )
-        return LayoutPaged(self.extents, table, self.page_size, self.num_pages, shared)
+        return LayoutPaged(
+            self.extents, table, self.page_size, self.num_pages, shared,
+            self.pos_offset,
+        )
 
 
 def layout_of_dense(arr_shape: Sequence[int], order: str = "right") -> LayoutMapping:

@@ -10,6 +10,34 @@ The result SHARES the parent's buffers — a subspan is pure index arithmetic th
 folds into the layout (a ``LayoutStride`` with a base offset). Zero cost: the
 Subspan3D benchmark asserts the optimized HLO of subspan-composed loops is identical
 to direct indexing (paper Figs. 7/8).
+
+Chunk views are submdspans (the paged regime)
+---------------------------------------------
+The serving engine's chunked prefill is this module applied to ``LayoutPaged``:
+a prefill chunk — the tokens one mixed engine step computes for one sequence —
+is the pos-range slice ``submdspan(seq_view, all_, all_, (a, b), all_)`` of that
+sequence's paged cache view, and ``LayoutPaged.slice_layout`` makes the result
+a LayoutPaged again: rows trimmed to exactly the pages covering ``[a, b)``,
+with ``pos_offset`` recording where inside the first page the chunk begins.
+No bytes move; the chunk is index arithmetic over the same pool, exactly as a
+``LayoutStride`` subspan is over a dense buffer.
+
+The laws (tests/test_submdspan_paged.py):
+  * pointwise:  ``sub(s, h, p, d) == parent(s, h, a + p, d)`` for every index —
+    including partial-page boundaries, where ``a % page_size != 0`` shifts the
+    slot arithmetic by ``pos_offset`` instead of re-tiling anything;
+  * composition: slicing a slice equals one slice with the composed range
+    (``(a, b)`` then ``(c, d)`` == ``(a + c, a + d)``), the P0009 subspan law;
+  * aliasing:   ``shared_pages`` filters to the pages the chunk references, so
+    a chunk lying entirely past a shared prefix is ``is_unique()`` even when
+    the parent view is not. This is the formal shape of the shared-prefix
+    compute skip: the engine may start a request's first chunk at the first
+    non-shared token precisely because that chunk's view owns its pages — the
+    skipped prefix stays a read-only alias of the donor's;
+  * accessor orthogonality (paper Table II, as in PR 3's accessor∘layout
+    sections): the slice transforms only the LAYOUT; reading a chunk of a
+    quantized pool decodes through the same accessor and then gathers through
+    the sliced offsets, so chunk reads commute with dequantization.
 """
 from __future__ import annotations
 

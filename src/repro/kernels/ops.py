@@ -34,6 +34,10 @@ from .paged_attention import paged_decode_attention_jnp as _paged_decode_jnp
 from .paged_attention import paged_decode_attention_quant_jnp as _paged_decode_quant_jnp
 from .paged_attention import paged_flash_decode as _paged_flash_decode
 from .paged_attention import paged_flash_decode_quant as _paged_flash_decode_quant
+from .paged_attention import paged_flash_prefill_chunk as _paged_flash_chunk
+from .paged_attention import paged_flash_prefill_chunk_quant as _paged_flash_chunk_quant
+from .paged_attention import paged_prefill_chunk_jnp as _paged_chunk_jnp
+from .paged_attention import paged_prefill_chunk_quant_jnp as _paged_chunk_quant_jnp
 from .matvec import matvec_left, matvec_right
 from .quant_matmul import quant_matmul as _qmm_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
@@ -180,6 +184,43 @@ def paged_decode_attention_quant(
         )
     return _paged_decode_quant_jnp(
         q, k_q, k_scale, v_q, v_scale, block_tables, context_lens,
+        bits=bits, scale=scale,
+    )
+
+
+def paged_prefill_chunk_attention(
+    q, chunk_k, chunk_v, k_pool, v_pool, block_tables, cursors, *,
+    scale=None, impl: str = "auto",
+):
+    """Chunked-prefill GQA attention: a Q-chunk (B, Hq, C, D) against the
+    resident PAST (pool positions < cursors[b], read through the block table)
+    plus its own PRESENT (chunk_k/chunk_v, (B, Hkv, C, D) f32, intra-chunk
+    causal) — one online softmax across both. The C == 1 case is
+    paged_decode_attention; this is the mixed-step prefill half."""
+    if _want_pallas(impl):
+        return _paged_flash_chunk(
+            q, chunk_k, chunk_v, k_pool, v_pool, block_tables, cursors,
+            scale=scale,
+        )
+    return _paged_chunk_jnp(
+        q, chunk_k, chunk_v, k_pool, v_pool, block_tables, cursors, scale=scale
+    )
+
+
+def paged_prefill_chunk_attention_quant(
+    q, chunk_k, chunk_v, k_q, k_scale, v_q, v_scale, block_tables, cursors, *,
+    bits: int = 8, scale=None, impl: str = "auto",
+):
+    """paged_prefill_chunk_attention over an intN paged pool (PagedQuantSpec):
+    the past dequantizes in-kernel; the present (the chunk's own K/V) stays
+    f32, so only CROSS-chunk attention pays the representation."""
+    if _want_pallas(impl):
+        return _paged_flash_chunk_quant(
+            q, chunk_k, chunk_v, k_q, k_scale, v_q, v_scale, block_tables,
+            cursors, bits=bits, scale=scale,
+        )
+    return _paged_chunk_quant_jnp(
+        q, chunk_k, chunk_v, k_q, k_scale, v_q, v_scale, block_tables, cursors,
         bits=bits, scale=scale,
     )
 

@@ -367,3 +367,364 @@ def paged_decode_attention_quant_jnp(
     return paged_decode_attention_jnp(
         q, k_pool, v_pool, block_tables, context_lens, scale=scale
     )
+
+
+# ---------------------------------------------------------------------------------
+# chunked prefill: a Q-chunk against all previously resident paged KV
+# ---------------------------------------------------------------------------------
+# Two-part attention per chunk: (1) the PAST — pool positions < cursor, read
+# through the block table exactly as decode does (dequantized in-kernel for
+# intN pages); (2) the PRESENT — the chunk's own K/V, handed in as fresh f32
+# tensors with intra-chunk causal masking, NEVER read back through the pool.
+# Part 2 is what keeps a single-chunk prefill bit-equivalent to a monolithic
+# one even over quantized pools: the chunk's own tokens attend each other at
+# full precision (as monolithic prefill does), and only CROSS-chunk attention
+# pays the representation — the same boundary monolithic decode pays at its
+# first step. Both parts fold into one online softmax (_flash_update), with
+# the chunk tile applied as the last accumulation step.
+
+
+def _past_live(cursor, c: int, group: int, page_size: int, j):
+    """(C*G, page_size) liveness of logical page j for the past part: every
+    slot before the chunk start (causality across the boundary is automatic —
+    all past positions precede every chunk row). Rows are t-major blocks of
+    size G (see the reshape in the callers)."""
+    rows = c * group
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 1
+    )
+    return k_pos < cursor
+
+
+def _chunk_self_live(c: int, group: int):
+    """(C*G, C) intra-chunk causal mask: row t attends chunk column tk <= t."""
+    rows = c * group
+    t = jax.lax.broadcasted_iota(jnp.int32, (rows, c), 0) // group
+    tk = jax.lax.broadcasted_iota(jnp.int32, (rows, c), 1)
+    return tk <= t
+
+
+def _paged_chunk_kernel(
+    bt_ref,    # scalar prefetch: (B, max_pages) int32 block table
+    cur_ref,   # scalar prefetch: (B,) int32 chunk start positions (resident KV)
+    q_ref,     # (1, 1, C*G, D) — chunk queries, t-major rows
+    ck_ref,    # (1, 1, C, D) — the chunk's own f32 K (never from the pool)
+    cv_ref,    # (1, 1, C, D)
+    k_ref,     # (1, page_size, D) — physical page picked by the index map
+    v_ref,     # (1, page_size, D)
+    o_ref,     # (1, 1, C*G, D)
+    acc_ref,   # (C*G, D) f32
+    m_ref,     # (C*G, 1) f32
+    l_ref,     # (C*G, 1) f32
+    *,
+    scale: float,
+    page_size: int,
+    chunk: int,
+    group: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * page_size < cur_ref[b])
+    def _past():
+        q = q_ref[0, 0].astype(jnp.float32)  # (C*G, D)
+        k = k_ref[0].astype(jnp.float32)     # (page_size, D)
+        v = v_ref[0].astype(jnp.float32)
+        live = _past_live(cur_ref[b], chunk, group, page_size, j)
+        _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
+
+    @pl.when(j == nj - 1)
+    def _present_and_finalize():
+        q = q_ref[0, 0].astype(jnp.float32)
+        ck = ck_ref[0, 0].astype(jnp.float32)  # (C, D)
+        cv = cv_ref[0, 0].astype(jnp.float32)
+        live = _chunk_self_live(chunk, group)
+        _flash_update(q, ck, cv, live, acc_ref, m_ref, l_ref, scale=scale)
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def paged_flash_prefill_chunk(
+    q: jax.Array,
+    chunk_k: jax.Array,
+    chunk_v: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    cursors: jax.Array,
+    *,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GQA chunked-prefill attention: past from the pool, present from f32.
+
+    q: (B, Hq, C, D) — the chunk's queries, absolute positions
+    cursors[b]..cursors[b]+C-1; chunk_k/chunk_v: (B, Hkv, C, D) the chunk's own
+    freshly-projected K/V (attended intra-chunk causally at full precision);
+    k_pool/v_pool: (num_pages, Hkv, page_size, D); block_tables: (B, max_pages)
+    int32; cursors: (B,) int32 tokens resident BEFORE this chunk — the pool is
+    read only below that bound, so the chunk's scattered pages (and anything
+    past them) never feed back into its own attention. Rows past the chunk's
+    valid length produce garbage the caller discards (their KV went to the
+    null page, so nothing real ever attends them).
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, c, d = q.shape
+    num_pages, hkv, page_size, _ = k_pool.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    max_pages = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    # t-major rows: (B, Hkv, C*G, D) with row t*G + g — _past_live's layout
+    qg = jnp.swapaxes(q.reshape(b, hkv, group, c, d), 2, 3).reshape(
+        b, hkv, c * group, d
+    )
+
+    kern = functools.partial(
+        _paged_chunk_kernel, scale=scale, page_size=page_size, chunk=c, group=group
+    )
+    rows = c * group
+    chunk_spec = pl.BlockSpec(
+        (1, 1, c, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0)),
+            chunk_spec,
+            chunk_spec,
+            pl.BlockSpec(
+                (1, None, page_size, d),
+                lambda bb, h, j, bt, cur: (bt[bb, j], h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, None, page_size, d),
+                lambda bb, h, j, bt, cur: (bt[bb, j], h, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32), cursors.astype(jnp.int32),
+        qg, chunk_k, chunk_v, k_pool, v_pool,
+    )
+    # rows back to (B, Hkv, C, G, D) -> (B, Hq, C, D)
+    return jnp.swapaxes(out.reshape(b, hkv, c, group, d), 2, 3).reshape(b, hq, c, d)
+
+
+def paged_prefill_chunk_jnp(
+    q: jax.Array,
+    chunk_k: jax.Array,
+    chunk_v: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    cursors: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """jnp twin: concatenate [gathered past pages | the chunk's own f32 K/V]
+    along the key axis, mask (past below cursor, present causally), one
+    softmax — identical semantics to the kernel's two-part online update."""
+    b, hq, c, d = q.shape
+    _, hkv, page_size, _ = k_pool.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = jnp.moveaxis(k_pool[block_tables], 2, 1)
+    v = jnp.moveaxis(v_pool[block_tables], 2, 1)
+    s_len = k.shape[2] * page_size
+    k = jnp.concatenate(
+        [k.reshape(b, hkv, s_len, d), chunk_k.astype(k.dtype)], axis=2
+    ).astype(jnp.float32)
+    v = jnp.concatenate(
+        [v.reshape(b, hkv, s_len, d), chunk_v.astype(v.dtype)], axis=2
+    ).astype(jnp.float32)
+    qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * scale
+    t_q = jnp.arange(c)
+    past = jnp.arange(s_len)[None, None, :] < cursors[:, None, None]  # (B, 1, S)
+    past = jnp.broadcast_to(past, (b, c, s_len))
+    present = (t_q[None, :] <= t_q[:, None])[None]  # (1, C, C) causal
+    present = jnp.broadcast_to(present, (b, c, c))
+    live = jnp.concatenate([past, present], axis=-1)[:, None, None]  # (B,1,1,C,S+C)
+    s = jnp.where(live, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * live
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v) / jnp.where(l == 0.0, 1.0, l)
+    return out.reshape(b, hq, c, d).astype(q.dtype)
+
+
+def _paged_chunk_quant_kernel(
+    bt_ref,    # scalar prefetch: (B, max_pages) int32 block table
+    cur_ref,   # scalar prefetch: (B,) int32 chunk start positions
+    q_ref,     # (1, 1, C*G, D)
+    ck_ref,    # (1, 1, C, D) f32 — the chunk's own K, never from the pool
+    cv_ref,    # (1, 1, C, D) f32
+    kq_ref,    # (1, page_size, Dq) int8 — physical page picked by the index map
+    ks_ref,    # (1,) f32 — that page's per-head K scale
+    vq_ref,    # (1, page_size, Dq) int8
+    vs_ref,    # (1,) f32
+    o_ref,     # (1, 1, C*G, D)
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    page_size: int,
+    chunk: int,
+    group: int,
+    bits: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * page_size < cur_ref[b])
+    def _past():
+        q = q_ref[0, 0].astype(jnp.float32)
+        kq = kq_ref[0]
+        vq = vq_ref[0]
+        if bits == 4:
+            kq = unpack_int4_splithalf(kq)
+            vq = unpack_int4_splithalf(vq)
+        k = kq.astype(jnp.float32) * ks_ref[0]
+        v = vq.astype(jnp.float32) * vs_ref[0]
+        live = _past_live(cur_ref[b], chunk, group, page_size, j)
+        _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
+
+    @pl.when(j == nj - 1)
+    def _present_and_finalize():
+        q = q_ref[0, 0].astype(jnp.float32)
+        ck = ck_ref[0, 0].astype(jnp.float32)
+        cv = cv_ref[0, 0].astype(jnp.float32)
+        live = _chunk_self_live(chunk, group)
+        _flash_update(q, ck, cv, live, acc_ref, m_ref, l_ref, scale=scale)
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def paged_flash_prefill_chunk_quant(
+    q: jax.Array,
+    chunk_k: jax.Array,
+    chunk_v: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    cursors: jax.Array,
+    *,
+    bits: int = 8,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention over an intN paged pool: the past part
+    dequantizes page tiles through the same (page, head) scale index maps as
+    paged_flash_decode_quant; the present part attends the chunk's own f32
+    K/V, so intra-chunk attention never pays the representation."""
+    interpret = use_interpret() if interpret is None else interpret
+    b, hq, c, d = q.shape
+    num_pages, hkv, page_size, dq = k_q.shape
+    assert hq % hkv == 0
+    assert dq == (d if bits == 8 else d // 2)
+    group = hq // hkv
+    max_pages = block_tables.shape[1]
+    scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
+    qg = jnp.swapaxes(q.reshape(b, hkv, group, c, d), 2, 3).reshape(
+        b, hkv, c * group, d
+    )
+
+    kern = functools.partial(
+        _paged_chunk_quant_kernel, scale=scale, page_size=page_size, chunk=c,
+        group=group, bits=bits,
+    )
+    rows = c * group
+    chunk_spec = pl.BlockSpec((1, 1, c, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0))
+    page_spec = pl.BlockSpec(
+        (1, None, page_size, dq), lambda bb, h, j, bt, cur: (bt[bb, j], h, 0, 0)
+    )
+    scale_spec = pl.BlockSpec((1, None), lambda bb, h, j, bt, cur: (bt[bb, j], h))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0)),
+            chunk_spec,
+            chunk_spec,
+            page_spec,
+            scale_spec,
+            page_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d), lambda bb, h, j, bt, cur: (bb, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32), cursors.astype(jnp.int32),
+        qg, chunk_k, chunk_v, k_q, k_scale, v_q, v_scale,
+    )
+    return jnp.swapaxes(out.reshape(b, hkv, c, group, d), 2, 3).reshape(b, hq, c, d)
+
+
+def paged_prefill_chunk_quant_jnp(
+    q: jax.Array,
+    chunk_k: jax.Array,
+    chunk_v: jax.Array,
+    k_q: jax.Array,
+    k_scale: jax.Array,
+    v_q: jax.Array,
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    cursors: jax.Array,
+    *,
+    bits: int = 8,
+    scale: float | None = None,
+) -> jax.Array:
+    """jnp twin of paged_flash_prefill_chunk_quant: dequantize the whole pool,
+    then the f32 chunk gather path (the chunk's own K/V stay f32 throughout)."""
+    k_pool = dequantize_pages(k_q, k_scale, bits=bits)
+    v_pool = dequantize_pages(v_q, v_scale, bits=bits)
+    return paged_prefill_chunk_jnp(
+        q, chunk_k, chunk_v, k_pool, v_pool, block_tables, cursors, scale=scale
+    )

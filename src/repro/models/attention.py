@@ -402,6 +402,104 @@ def self_attention_decode_paged(
     return y, {"k": ck, "v": cv}
 
 
+def _scatter_chunk_pages(cache, kp, vp, dest, kv_spec):
+    """Scatter whole chunk pages into the pool. kp/vp: (B, nP, Hkv, ps, Dh) page-
+    factored chunk KV; dest: (B, nP) physical destinations (invalid entries
+    already routed to the null page 0). Quantized pools encode one fresh scale
+    per (page, head) from the page's own absmax — exactly pack_kv_pages_quant's
+    law, so a chunk-written page is bit-compatible with a monolithic-prefill
+    one and the prefix index may dedupe across the two regimes."""
+    b, npg = dest.shape
+    flat = dest.reshape(-1)
+    if kv_spec is not None:
+        kq, vq = kv_spec.encode_pages(kp), kv_spec.encode_pages(vp)
+        hkv, ps, dq = kq["q"].shape[2:]
+        ck = {
+            "q": cache["k"]["q"].at[flat].set(kq["q"].reshape(b * npg, hkv, ps, dq)),
+            "scale": cache["k"]["scale"].at[flat].set(kq["scale"].reshape(b * npg, hkv)),
+        }
+        cv = {
+            "q": cache["v"]["q"].at[flat].set(vq["q"].reshape(b * npg, hkv, ps, dq)),
+            "scale": cache["v"]["scale"].at[flat].set(vq["scale"].reshape(b * npg, hkv)),
+        }
+        return ck, cv
+    hkv, ps, dh = kp.shape[2:]
+    ck = cache["k"].at[flat].set(kp.reshape(b * npg, hkv, ps, dh).astype(cache["k"].dtype))
+    cv = cache["v"].at[flat].set(vp.reshape(b * npg, hkv, ps, dh).astype(cache["v"].dtype))
+    return ck, cv
+
+
+def self_attention_prefill_chunk_paged(
+    cfg,
+    p,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    block_tables: jax.Array,
+    write_tables: jax.Array,
+    cursors: jax.Array,
+    n_new: jax.Array,
+    *,
+    shard: Sharder = NULL_SHARDER,
+    impl: str = "auto",
+    kv_spec=None,
+):
+    """One prefill CHUNK against a paged KV pool — the mixed-step prefill half.
+
+    x: (B, C, D) the chunk's token embeddings (C a page multiple, the engine's
+    chunk bucket); block_tables: (B, max_pages) the READ view (every resident
+    page, shared ones included); write_tables: the WRITE view — same rows with
+    non-writable entries (adopted shared-prefix pages, slots past the
+    allocation) nulled to page 0, so the scatter of a chunk that overlaps a
+    shared prefix lands harmlessly while its reads still see the donor's KV.
+    cursors: (B,) int32 page-aligned count of tokens resident before this
+    chunk; n_new: (B,) int32 valid new tokens this chunk contributes (a page
+    multiple; positions past it are pad whose KV routes to the null page).
+
+    This is the chunk-view path: the unit of work is formally the submdspan
+    ``[cursors, cursors + n_new)`` of the sequence's paged cache view
+    (core/submdspan.py §chunk views), executed as: scatter the chunk's KV into
+    its own pages, then attend Q rows against everything resident with causal
+    masking across the chunk boundary. ``kv_spec`` swaps in the quantized
+    accessor exactly as in the decode path.
+    """
+    b, c, d = x.shape
+    ps = cache["k"]["q"].shape[2] if kv_spec is not None else cache["k"].shape[2]
+    npg = c // ps
+    max_pages = block_tables.shape[1]
+    q, k, v = _project_qkv(cfg, p, x)  # (B, H, C, Dh)
+    pos = cursors[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    hkv, dh = k.shape[1], k.shape[3]
+    # page-factor the chunk KV: (B, Hkv, C, Dh) -> (B, nP, Hkv, ps, Dh)
+    kp = jnp.swapaxes(k.reshape(b, hkv, npg, ps, dh), 1, 2)
+    vp = jnp.swapaxes(v.reshape(b, hkv, npg, ps, dh), 1, 2)
+    # destination pages: the chunk's logical pages through the WRITE table;
+    # pages past n_new (chunk-bucket pad) go to the null page
+    logical = cursors[:, None] // ps + jnp.arange(npg)[None, :]  # (B, nP)
+    gathered = jnp.take_along_axis(
+        write_tables, jnp.clip(logical, 0, max_pages - 1), axis=1
+    )
+    valid = jnp.arange(npg)[None, :] * ps < n_new[:, None]
+    dest = jnp.where(valid, gathered, 0)
+    ck, cv = _scatter_chunk_pages(cache, kp, vp, dest, kv_spec)
+    # attention: past from the pool (positions < cursor), present from the
+    # chunk's own f32 k/v — the scattered pages never feed back into their own
+    # chunk's attention, so intra-chunk math matches monolithic prefill even
+    # over quantized pools
+    if kv_spec is not None:
+        out = ops.paged_prefill_chunk_attention_quant(
+            q, k, v, ck["q"], ck["scale"], cv["q"], cv["scale"], block_tables,
+            cursors, bits=kv_spec.bits, impl=impl,
+        )
+    else:
+        out = ops.paged_prefill_chunk_attention(
+            q, k, v, ck, cv, block_tables, cursors, impl=impl
+        )
+    y = _out_proj(p, out, x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
 # ---------------------------------------------------------------------------------
 # cross-attention paths (whisper decoder, vlm image layers)
 # ---------------------------------------------------------------------------------

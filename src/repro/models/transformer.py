@@ -151,6 +151,18 @@ class DenseBlock:
         x = x + apply_mlp(cfg, p["mlp"], h, shard)
         return x, cache
 
+    def prefill_chunk_paged(self, cfg, p, x, cache, block_tables, write_tables,
+                            cursors, n_new, shard, impl: str = "auto", kv_spec=None):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_prefill_chunk_paged(
+            cfg, p["attn"], h, cache, block_tables, write_tables, cursors, n_new,
+            shard=shard, impl=impl, kv_spec=kv_spec,
+        )
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_mlp"])
+        x = x + apply_mlp(cfg, p["mlp"], h, shard)
+        return x, cache
+
 
 class MoEBlock(DenseBlock):
     def specs(self, cfg, quant=None):
@@ -190,6 +202,18 @@ class MoEBlock(DenseBlock):
         y, cache = attn.self_attention_decode_paged(
             cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
             impl=impl, kv_spec=kv_spec,
+        )
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_moe"])
+        y, _ = moe_mod.apply_moe_dispatch(cfg, p["moe"], h, shard)
+        return x + y, cache
+
+    def prefill_chunk_paged(self, cfg, p, x, cache, block_tables, write_tables,
+                            cursors, n_new, shard, impl: str = "auto", kv_spec=None):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_prefill_chunk_paged(
+            cfg, p["attn"], h, cache, block_tables, write_tables, cursors, n_new,
+            shard=shard, impl=impl, kv_spec=kv_spec,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_moe"])
@@ -618,31 +642,64 @@ class Model:
     def decode_step_paged(self, params, caches, tokens: jax.Array,
                           block_tables: jax.Array, context_lens: jax.Array, *,
                           shard: Sharder = NULL_SHARDER, attn_impl: str = "auto",
-                          kv_spec=None):
-        """Continuous-batching decode: tokens (B,) ids; block_tables (B, max_pages)
-        int32; context_lens (B,) int32 per-sequence positions. caches are per-layer
-        page pools (L, num_pages, Hkv, ps, Dh) addressed through the shared block
-        table — the LayoutPaged serving path. With ``kv_spec`` (PagedQuantSpec)
-        the pools are intN {"q", "scale"} pytrees and decode runs the
-        dequantizing kernel — same tables, same layout, different accessor."""
+                          kv_spec=None, write_tables=None, n_new=None,
+                          last_index=None):
+        """The MIXED serving step: decode rows and prefill chunks are the same
+        computation at different widths.
+
+        tokens (B,): classic continuous-batching decode — block_tables
+        (B, max_pages) int32, context_lens (B,) int32 per-sequence positions,
+        caches per-layer page pools addressed through the shared block table
+        (the LayoutPaged serving path). With ``kv_spec`` (PagedQuantSpec) the
+        pools are intN {"q", "scale"} pytrees and decode runs the dequantizing
+        kernel — same tables, same layout, different accessor.
+
+        tokens (B, C): a prefill CHUNK per row — the chunk-view path
+        (core/submdspan.py §chunk views). ``context_lens`` is then the chunk
+        cursor (tokens resident before the chunk, page-aligned and TRACED, so
+        one compile serves every chunk position of every prompt in the C
+        bucket); ``write_tables`` routes the chunk's KV scatter (adopted
+        shared-prefix pages nulled — the compute-skip regime reads them but
+        never writes); ``n_new`` (B,) is the chunk's valid token count and
+        ``last_index`` (B,) picks the logits row (the prompt's true last
+        position when the chunk completes a prefill). Decode is the C == 1
+        degenerate case; the split exists so decode keeps its one-token
+        scatter-append (with the CoW contract) while chunks scatter whole
+        pages."""
         cfg = self.cfg
-        x = apply_embed(params["embed"], tokens[:, None])
+        chunk = tokens.ndim == 2
+        x = apply_embed(params["embed"], tokens if chunk else tokens[:, None])
         if cfg.family == "hybrid":
             x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
         new_caches = []
         for (kind, n), p, cache in zip(block_program(cfg), params["blocks"], caches):
             blk = KINDS[kind]
 
-            def body(xc, pc, _blk=blk):
-                pl, cl = pc
-                return _blk.decode_paged(
-                    cfg, pl, xc, cl, block_tables, context_lens, shard,
-                    impl=attn_impl, kv_spec=kv_spec,
-                )
+            if chunk:
+                def body(xc, pc, _blk=blk):
+                    pl, cl = pc
+                    return _blk.prefill_chunk_paged(
+                        cfg, pl, xc, cl, block_tables, write_tables,
+                        context_lens, n_new, shard, impl=attn_impl,
+                        kv_spec=kv_spec,
+                    )
+            else:
+                def body(xc, pc, _blk=blk):
+                    pl, cl = pc
+                    return _blk.decode_paged(
+                        cfg, pl, xc, cl, block_tables, context_lens, shard,
+                        impl=attn_impl, kv_spec=kv_spec,
+                    )
 
             x, cache = stack_scan(body, x, (p, cache))
             new_caches.append(cache)
         x = apply_norm(cfg, x, params["final_norm"])
+        if chunk:
+            # read hidden state only at each row's requested position before
+            # the lm_head: the chunk's other C-1 rows never pay the vocab matmul
+            x = jnp.take_along_axis(
+                x, jnp.asarray(last_index, jnp.int32)[:, None, None], axis=1
+            )
         logits = apply_lm_head(cfg, params["embed"], x)
         return logits[:, 0], new_caches
 

@@ -8,15 +8,25 @@
 from .cache import PagedKVCache
 from .engine import EngineConfig, ServeEngine, aligned_max_logit_err
 from .kvquant import KV_DTYPES, PagedQuantSpec
-from .request import Request, RequestQueue, RequestState
+from .request import (
+    DECODING,
+    PREFILLING,
+    QUEUED,
+    Request,
+    RequestQueue,
+    RequestState,
+)
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
+    "DECODING",
     "EngineConfig",
     "aligned_max_logit_err",
     "KV_DTYPES",
     "PagedQuantSpec",
     "PagedKVCache",
+    "PREFILLING",
+    "QUEUED",
     "Request",
     "RequestQueue",
     "RequestState",

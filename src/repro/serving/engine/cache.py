@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +107,13 @@ class PagedKVCache:
         # pages of a just-allocated slot already holding its prefix (skip their
         # prefill scatter); consumed by write_prefill
         self._shared_upto: Dict[int, int] = {}
+        # chunked prefill: chain entries whose pages are allocated but whose
+        # content is still materializing — registered into the index
+        # incrementally by publish_prefix() as chunks land (a chunk-by-chunk
+        # filler must never let another request adopt a half-written page, but
+        # every page BEHIND the chunk cursor is final and adoptable)
+        self._deferred: Dict[int, List[tuple]] = {}
+        self._published: Dict[int, int] = {}  # deferred keys already registered
         # stats (benchmarks read these through ServeEngine.metrics)
         self.pages_shared_total = 0
         self.cow_copies = 0
@@ -157,11 +164,15 @@ class PagedKVCache:
             chain = self._chain(tokens)
         return self.pages_for(len(tokens) + 1) - len(self._match_prefix(chain))
 
-    def allocate(self, slot: int, n_pages: int, tokens=None, chain=None) -> List[int]:
+    def allocate(self, slot: int, n_pages: int, tokens=None, chain=None,
+                 publish: bool = True) -> List[int]:
         """Bind ``n_pages`` logical pages to ``slot``: the leading run found in
         the prefix index is adopted by reference (incref), the rest pops from the
         free list. Fresh pages that prefill will fill are registered under the
-        context's chain keys so later arrivals can share them in turn."""
+        context's chain keys so later arrivals can share them in turn —
+        immediately when ``publish`` (the monolithic engine fills them in the
+        same step), or deferred to ``publish_prefix`` when the filler is
+        chunk-by-chunk and the content only exists once the last chunk lands."""
         if n_pages > self.max_pages_per_seq:
             raise RuntimeError(
                 f"sequence needs {n_pages} pages > max_pages_per_seq {self.max_pages_per_seq}"
@@ -181,15 +192,65 @@ class PagedKVCache:
         pages = shared + [self._take_free() for _ in range(n_new)]
         # register the fresh content-bearing pages (chain covers exactly the
         # pages prefill fills; the +1 decode-headroom tail has no content yet)
-        for i in range(len(shared), min(len(chain), n_pages)):
-            if chain[i] not in self._index:
-                self._index[chain[i]] = pages[i]
-                self._key_of[pages[i]] = chain[i]
+        fresh_keys = list(chain[len(shared) : min(len(chain), n_pages)])
+        if publish:
+            self._register(fresh_keys, pages, len(shared))
+        else:
+            self._deferred[slot] = fresh_keys
         self.pages_of[slot] = pages
         self._shared_upto[slot] = len(shared)
         self.tables[slot, :] = 0
         self.tables[slot, : len(pages)] = pages
         return pages
+
+    def _register(self, keys: List[tuple], pages: List[int], start: int) -> None:
+        for i, key in enumerate(keys, start=start):
+            if key not in self._index:
+                self._index[key] = pages[i]
+                self._key_of[pages[i]] = key
+
+    def publish_prefix(self, slot: int, written_pages: Optional[int] = None) -> None:
+        """Register a chunk-prefilled slot's fresh pages in the prefix index as
+        their content becomes final: entries for pages with index <
+        ``written_pages`` (None = all — the prefill completed, including the
+        partial last page whose pad tail the final chunk computed). Called
+        after each chunk's scatter, so a mid-prefill donor is adoptable up to
+        its written frontier and adopters NEVER see a half-written page. No-op
+        for monolithic allocations (already published at allocate) and after
+        preemption (free_slot discards the deferral)."""
+        keys = self._deferred.get(slot)
+        if not keys:
+            return
+        start = self._shared_upto.get(slot, 0)
+        done = self._published.get(slot, 0)
+        end = (
+            len(keys) if written_pages is None
+            else max(0, min(written_pages - start, len(keys)))
+        )
+        if end > done:
+            self._register(keys[done:end], self.pages_of[slot], start + done)
+        if end >= len(keys):
+            self._deferred.pop(slot, None)
+            self._published.pop(slot, None)
+        elif end > done:
+            self._published[slot] = end
+
+    def adopted_pages(self, slot: int) -> int:
+        """Pages of this slot adopted from the prefix index at allocation (the
+        leading run whose KV is already resident) — the shared-prefix
+        compute-skip extent, and the write-protected prefix of chunk scatters.
+        Unlike write_prefill's consumption of the same bookkeeping, reading
+        this does not clear it."""
+        return self._shared_upto.get(slot, 0)
+
+    def write_table_row(self, slot: int) -> np.ndarray:
+        """The slot's block-table row with every non-writable entry nulled to
+        page 0: adopted shared-prefix pages (other holders read them — the
+        chunk-scatter CoW obligation is discharged by never aiming at them)
+        and unallocated tail entries. The READ view stays ``tables[slot]``."""
+        row = self.tables[slot].copy()
+        row[: self.adopted_pages(slot)] = 0
+        return row
 
     def append_page(self, slot: int) -> bool:
         """Grow a running sequence by one page; False when the pool is exhausted
@@ -215,10 +276,14 @@ class PagedKVCache:
 
     def free_slot(self, slot: int) -> None:
         """Release the slot's pages (idempotent). Shared pages survive with the
-        other holders; only refcount-zero pages rejoin the free list."""
+        other holders; only refcount-zero pages rejoin the free list. A
+        mid-prefill release also discards the deferred index entries — the
+        half-written pages were never adoptable and never become so."""
         for p in self.pages_of.pop(slot, []):
             self._release_page(p)
         self._shared_upto.pop(slot, None)
+        self._deferred.pop(slot, None)
+        self._published.pop(slot, None)
         self.tables[slot, :] = 0
         self.lens[slot] = 0
 
@@ -289,26 +354,45 @@ class PagedKVCache:
             self.shared_pages_of(slot),
         )
 
+    def _flat_codomain(self, leaf, layer: int):
+        """One layer's pool as the layout's flat codomain, decoded through the
+        accessor when the pool is quantized — the layout algebra never sees
+        the representation."""
+        if self.kv_spec is None:
+            return leaf[layer].reshape(-1)
+        return self.kv_spec.decode_pages(
+            leaf["q"][layer], leaf["scale"][layer]
+        ).reshape(-1)
+
     def dense_view(self, slot: int, entry: int = 0, layer: int = 0):
         """(k, v) of shape (Hkv, len, Dh) gathered through layout_for(slot)'s
         offsets — the generic-fallback read path of the paged layout. Quantized
         pools are decoded first (the accessor's access() over the whole
-        codomain), then gathered through the SAME offsets: the layout algebra
-        never sees the representation."""
+        codomain), then gathered through the SAME offsets."""
         layout = self.layout_for(slot)
         offs = layout.offsets_dense()[0]  # (Hkv, n_pages*ps, Dh)
         length = int(self.lens[slot])
-
-        def flat(leaf):
-            if self.kv_spec is None:
-                return leaf[layer].reshape(-1)
-            return self.kv_spec.decode_pages(
-                leaf["q"][layer], leaf["scale"][layer]
-            ).reshape(-1)
-
-        k = jnp.take(flat(self.pools[entry]["k"]), offs)[:, :length, :]
-        v = jnp.take(flat(self.pools[entry]["v"]), offs)[:, :length, :]
+        k = jnp.take(self._flat_codomain(self.pools[entry]["k"], layer), offs)[:, :length, :]
+        v = jnp.take(self._flat_codomain(self.pools[entry]["v"], layer), offs)[:, :length, :]
         return k, v
+
+    def chunk_view(self, slot: int, start: int, stop: int, entry: int = 0,
+                   layer: int = 0):
+        """The formal mdspan of one prefill chunk: LITERALLY
+        ``submdspan(seq_view, all_, all_, (start, stop), all_)`` over the flat
+        pool (core/submdspan.py §chunk views are submdspans). Returns the K
+        span; its layout is again a LayoutPaged whose rows are trimmed to the
+        chunk's pages, whose ``pos_offset`` carries partial-page starts, and
+        whose ``is_unique()`` is True exactly when the chunk lies past every
+        shared page — the view the engine's chunk scatter/attend implements."""
+        from repro.core.mdspan import MdSpan
+        from repro.core.submdspan import all_, submdspan
+
+        span = MdSpan.over(
+            self._flat_codomain(self.pools[entry]["k"], layer),
+            self.layout_for(slot),
+        )
+        return submdspan(span, all_, all_, (start, stop), all_)
 
     # -- stats -------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:

@@ -1,31 +1,53 @@
 """ServeEngine: continuous-batching generation over a paged KV cache.
 
-One engine step = (admit + prefill newcomers) then (one batched decode step for
-every running sequence). Sequences enter and leave the batch at arbitrary steps
-(continuous batching): a fixed-size slot vector keeps the decode computation at
-one compiled shape, and per-slot positions (context_lens) + block-table rows
-carry each sequence's own state into decode_step_paged — the LayoutPaged path.
+One engine step is a MIXED step: (admit newcomers) then (one prefill chunk for
+each PREFILLING sequence, token-budgeted) then (one batched decode step for
+every DECODING sequence). Sequences enter and leave the batch at arbitrary
+steps (continuous batching): a fixed-size slot vector keeps the decode
+computation at one compiled shape, and per-slot positions (context_lens) +
+block-table rows carry each sequence's own state into decode_step_paged — the
+LayoutPaged path.
 
 Invariants the step loop maintains per running slot:
-  - cache.lens[slot] == len(state.context) - 1: every context token EXCEPT the
-    newest generated one has its KV in the pool;
-  - the decode input is state.generated[-1]; its KV is written at position
-    lens[slot] during the step (LayoutPaged: page table[lens//ps], slot lens%ps);
-  - the slot owns a WRITABLE page covering position lens[slot]: the scheduler
-    appends a page at page boundaries and copy-on-write-privatizes it when
-    prefix sharing left it refcount>1 (preempting later arrivals when the pool
-    runs dry), so the decode scatter never lands in a page another sequence
-    still reads.
+  - DECODING: cache.lens[slot] == len(state.context) - 1 — every context token
+    EXCEPT the newest generated one has its KV in the pool; the decode input is
+    state.generated[-1]; its KV is written at position lens[slot] during the
+    step (LayoutPaged: page table[lens//ps], slot lens%ps); and the slot owns a
+    WRITABLE page covering position lens[slot]: the scheduler appends a page at
+    page boundaries and copy-on-write-privatizes it when prefix sharing left it
+    refcount>1 (preempting later arrivals when the pool runs dry), so the
+    decode scatter never lands in a page another sequence still reads.
+  - PREFILLING (chunked mode): cache.lens[slot] == state.chunk_cursor — the
+    page-aligned count of context tokens whose KV is computed and resident.
+    Each mixed step advances the cursor by one chunk (formally: the engine
+    executes the submdspan [cursor, cursor + chunk) of the sequence's paged
+    view — cache.chunk_view); the slot is masked out of the batched decode
+    (null table row, length 0, so its lockstep "write" lands in the null page).
 
-Prefill of a newly admitted request runs at batch 1 on the sequence's true
-length (the KV pool is padded to whole pages, the logits are read at the true
-last position), then the packed KV pages are scattered into the pool —
-quantized at scatter time when ``kv_dtype`` selects int8/int4 pages
-(kvquant.PagedQuantSpec): the allocator, scheduler and admission logic are
-identical in that regime, only the pool's bytes shrink.
-Preemption is recompute-style: pages are dropped and the full context
-(prompt + generated so far) is re-prefilled on re-admission, which under greedy
-decoding reproduces the identical continuation.
+Prefill comes in two regimes:
+  - monolithic (chunked_prefill=False, the pre-mixed-step behavior): a newly
+    admitted request prefills at batch 1 on its full padded length, one compile
+    per page bucket, stalling the step for the whole prompt;
+  - chunked (chunked_prefill=True): the prompt advances chunk_tokens per step
+    through ONE compiled chunk step (cursor traced — every chunk position and
+    every prompt length share the compile), interleaved with decode so
+    long prompts stop freezing the batch. A per-step token quota splits the
+    step between decode appends and chunks; chunk boundaries are page-aligned
+    so a chunk-written page is bit-compatible with a monolithic one (the last
+    chunk computes the same zero-pad tail a monolithic prefill would).
+    When prefix sharing finds the prompt's leading pages resident, the first
+    chunk starts at the last whole page boundary before the first non-shared
+    token: the shared pages' COMPUTE is skipped, not just their storage
+    (metrics: prefill_tokens_skipped). KV is a pure per-token function of
+    token ids and absolute position, so the adopted pages already hold
+    exactly what this prompt's prefill would write.
+
+Quantization (``kv_dtype`` int8/int4, kvquant.PagedQuantSpec) composes with
+both regimes: prefill chunks quantize at scatter time page-by-page with the
+same whole-page scale law as monolithic prefill. Preemption is recompute-style
+in both regimes: pages are dropped (mid-prefill chunks included), and the full
+context (prompt + generated so far) is re-prefilled on re-admission, which
+under greedy decoding reproduces the identical continuation.
 """
 from __future__ import annotations
 
@@ -37,10 +59,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.step import make_paged_serve_step, make_prefill
+from repro.serving.step import (
+    make_chunked_prefill_step,
+    make_paged_serve_step,
+    make_prefill,
+)
 
 from .cache import PagedKVCache
-from .request import Request, RequestQueue, RequestState
+from .request import DECODING, PREFILLING, Request, RequestQueue, RequestState
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -57,6 +83,17 @@ class EngineConfig:
     # (kvquant.PagedQuantSpec): same pages/tables/admission, ~4x/~8x fewer bytes
     record_logits: bool = False  # keep per-step logits rows (ServeEngine.logits_of)
     # for cross-engine accuracy audits (e.g. int8 vs f32 max-logit-error)
+    chunked_prefill: bool = False  # mixed steps: page-sized prefill chunks
+    # interleaved with decode instead of monolithic batch-1 prefills
+    chunk_tokens: int = 0  # max tokens per prefill chunk (page multiple; 0 =
+    # auto: 2 pages). Chunks dispatch at the smallest power-of-two-of-page-size
+    # bucket >= their real length, so a short prompt never pays a full-width
+    # chunk step — one compile per bucket, O(log(chunk_tokens/page_size)) total
+    step_token_quota: int = 0  # per-step token budget split across decode
+    # appends + prefill chunks (0 = auto: max_batch + chunk_tokens)
+    prefill_compute_skip: bool = True  # start a shared-prefix request's first
+    # chunk past the adopted pages (skip their COMPUTE, not just their storage);
+    # effective only with chunked_prefill + prefix_sharing
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
@@ -121,13 +158,34 @@ class ServeEngine:
             donate_argnums=(1,),
         )
         self._prefill_fns: Dict[int, object] = {}  # padded_len -> jitted prefill
+        self._chunk_tokens = 0
+        if config.chunked_prefill:
+            self._chunk_tokens = config.chunk_tokens or 2 * config.page_size
+            if self._chunk_tokens % config.page_size:
+                raise ValueError(
+                    f"chunk_tokens {self._chunk_tokens} must be a multiple of "
+                    f"page_size {config.page_size} (chunk boundaries are "
+                    f"page-aligned so chunk-written pages match monolithic ones)"
+                )
+            # ONE compile serves every chunk of every prompt: cursor, valid
+            # length and logits index are all traced
+            self._chunk_step = jax.jit(
+                make_chunked_prefill_step(
+                    model, mesh, rules, attn_impl=config.attn_impl,
+                    kv_spec=self.cache.kv_spec,
+                ),
+                donate_argnums=(1,),
+            )
         self.results: Dict[int, RequestState] = {}
         # rid -> {n: logits row that produced generated[n]} (config.record_logits).
         # Keyed by generated-token index, not step, so preemption/recompute
         # overwrites deterministically and traces align across engines.
         self.logits_of: Dict[int, Dict[int, np.ndarray]] = {}
         self.step_times: List[float] = []
+        self.chunk_times: List[float] = []
         self._n_decode_steps = 0
+        self._prefill_tokens_computed = 0
+        self._prefill_tokens_skipped = 0
 
     # -- submission -------------------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -137,6 +195,18 @@ class ServeEngine:
                 f"request {request.rid} will need {need} pages "
                 f"(prompt {len(request.prompt)} + up to {request.max_new_tokens} new) "
                 f"> max_pages_per_seq {self.config.max_pages_per_seq}"
+            )
+        # a prompt whose admission floor exceeds the whole pool can never run,
+        # even against an empty cache — fail loudly at enqueue instead of
+        # letting it wedge the queue head forever (Scheduler.impossible covers
+        # the runtime variant: a preempted request whose context GREW past the
+        # pool)
+        floor = self.cache.pages_for(len(request.prompt) + 1)
+        if floor > self.config.num_pages - 1:
+            raise ValueError(
+                f"request {request.rid} needs {floor} pages just to admit its "
+                f"{len(request.prompt)}-token prompt, but the pool only has "
+                f"{self.config.num_pages - 1} usable pages — raise num_pages"
             )
         self._pending.append(RequestState(request))
 
@@ -168,36 +238,159 @@ class ServeEngine:
             )
             self.cache.write_prefill(slot, caches)
             self.cache.lens[slot] = len(ctx)
+            self._prefill_tokens_computed += padded
             row = np.asarray(logits[0, 0, : self.model.cfg.vocab], np.float32)
-            tok = int(np.argmax(row))
-            state.generated.append(tok)
-            if self.config.record_logits:
-                self.logits_of.setdefault(state.request.rid, {})[
-                    len(state.generated) - 1
-                ] = row
-            if state.first_token_time is None:
-                state.first_token_time = time.perf_counter() - self._t0
+            self._first_token(state, row)
+
+    def _first_token(self, state: RequestState, logits_row: np.ndarray) -> None:
+        """Record the token a completed prefill produced (either regime)."""
+        state.generated.append(int(np.argmax(logits_row)))
+        if self.config.record_logits:
+            self.logits_of.setdefault(state.request.rid, {})[
+                len(state.generated) - 1
+            ] = logits_row
+        if state.first_token_time is None:
+            state.first_token_time = time.perf_counter() - self._t0
+
+    # -- chunked prefill path ----------------------------------------------------
+    def _admit_chunked(self, now: float) -> None:
+        """Admit without computing anything: pages bind now (index registration
+        deferred to publish_prefix, which releases them chunk by chunk as their
+        content lands), and the chunk cursor starts at the shared-prefix
+        compute skip — the last whole-page boundary at or before the first
+        token the adopted pages don't already cover (always leaving >= 1 token
+        to compute: the prompt's last position must produce logits)."""
+        ps = self.cache.page_size
+        for slot, state in self.scheduler.admit(self.queue, now, publish=False):
+            n_ctx = len(state.context)
+            skip = 0
+            if self.config.prefill_compute_skip and self.cache.prefix_sharing:
+                adopted = self.cache.adopted_pages(slot)
+                skip = min(adopted * ps, ((n_ctx - 1) // ps) * ps)
+            state.chunk_cursor = skip
+            self.cache.lens[slot] = skip
+            self._prefill_tokens_skipped += skip
+
+    def _prefill_chunks(self, now: float) -> None:
+        """Advance PREFILLING slots by at most one chunk each, within the
+        step's token quota (decode appends are charged first — decode latency
+        is what chunking protects). Chunks run shortest-remaining-first,
+        stable on admission order: an interactive prompt's whole prefill costs
+        less than one long chunk, so it never queues behind one — this is the
+        TTFT bound chunking exists for. The budget's leftover flows to the
+        longest prompts in admission order (the same serialization a
+        monolithic engine imposes, at chunk granularity instead of
+        whole-prompt granularity)."""
+        running = self.scheduler.running
+        prefilling = [s for s in sorted(running) if running[s].phase == PREFILLING]
+        if not prefilling:
+            return
+        ps = self.cache.page_size
+        n_decoding = sum(1 for st in running.values() if st.phase == DECODING)
+        quota = self.config.step_token_quota or (
+            self.config.max_batch + self._chunk_tokens
+        )
+        budget = max(0, quota - n_decoding)
+        if n_decoding == 0:
+            # liveness: with nothing decoding, the step makes progress only
+            # through chunks — a too-small quota must not stall the engine
+            budget = max(budget, ps)
+        prefilling.sort(
+            key=lambda s: self.cache.pages_for(len(running[s].context)) * ps
+            - running[s].chunk_cursor
+        )
+        for slot in prefilling:
+            if budget < ps:
+                break
+            state = running[slot]
+            ctx = state.context
+            n_ctx = len(ctx)
+            padded = self.cache.pages_for(n_ctx) * ps
+            cursor = state.chunk_cursor
+            c_real = min(self._chunk_tokens, padded - cursor, (budget // ps) * ps)
+            budget -= c_real
+            # dispatch at the smallest bucket that holds the chunk: the jit
+            # cache traces one compile per bucket width, so an 8-token short
+            # prompt costs an 8-wide step, not a chunk_tokens-wide one
+            bucket = ps
+            while bucket < c_real:
+                bucket *= 2
+            bucket = min(bucket, self._chunk_tokens)
+            # the chunk's tokens, zero-padded through the page bucket exactly as
+            # a monolithic prefill pads — the last chunk COMPUTES the pad tail's
+            # KV so its final page is bit-compatible with the monolithic page
+            # (and with the prefix index's purity law)
+            padded_ctx = list(ctx) + [0] * (padded - n_ctx)
+            toks = padded_ctx[cursor : cursor + c_real]
+            toks += [0] * (bucket - c_real)
+            read_row = self.cache.tables[slot : slot + 1]
+            write_row = self.cache.write_table_row(slot)[None, :]
+            t0 = time.perf_counter()
+            logits, pools = self._chunk_step(
+                self.params,
+                self.cache.pools,
+                jnp.asarray([toks], jnp.int32),
+                jnp.asarray(read_row),
+                jnp.asarray(write_row),
+                jnp.asarray([cursor], jnp.int32),
+                jnp.asarray([c_real], jnp.int32),
+                jnp.asarray([min(n_ctx - 1 - cursor, c_real - 1)], jnp.int32),
+            )
+            self.cache.pools = pools
+            self.chunk_times.append(time.perf_counter() - t0)
+            self._prefill_tokens_computed += c_real
+            if cursor + c_real >= n_ctx:  # this chunk covered the last position
+                state.chunk_cursor = None
+                self.cache.lens[slot] = n_ctx
+                self.cache.publish_prefix(slot)
+                row = np.asarray(logits[0, : self.model.cfg.vocab], np.float32)
+                self._first_token(state, row)
+            else:
+                state.chunk_cursor = cursor + c_real
+                self.cache.lens[slot] = cursor + c_real
+                # pages behind the new cursor are final: publish them so a
+                # same-prefix arrival can adopt (and compute-skip) mid-prefill
+                self.cache.publish_prefix(slot, (cursor + c_real) // ps)
 
     # -- decode path ------------------------------------------------------------
     def _decode_once(self, now: float) -> None:
+        """One batched decode step for every DECODING slot. PREFILLING slots
+        (mixed steps only) are masked to the null row — table 0, length 0,
+        token 0 — so their lockstep write lands in the null page and their
+        logits row is discarded; the compiled shape never changes."""
         running = self.scheduler.running
         b = self.config.max_batch
         tokens = np.zeros((b,), np.int32)
+        tables = self.cache.tables
+        lens = self.cache.lens
+        decoding = {}
+        masked = False
         for slot, state in running.items():
-            tokens[slot] = state.generated[-1]
+            if state.phase == DECODING:
+                tokens[slot] = state.generated[-1]
+                decoding[slot] = state
+            else:
+                masked = True
+        if masked:
+            tables = tables.copy()
+            lens = lens.copy()
+            for slot, state in running.items():
+                if state.phase != DECODING:
+                    tables[slot] = 0
+                    lens[slot] = 0
         t0 = time.perf_counter()
         logits, pools = self._step(
             self.params,
             self.cache.pools,
             jnp.asarray(tokens),
-            jnp.asarray(self.cache.tables),
-            jnp.asarray(self.cache.lens),
+            jnp.asarray(tables),
+            jnp.asarray(lens),
         )
         self.cache.pools = pools
         logits = np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
         self.step_times.append(time.perf_counter() - t0)
         self._n_decode_steps += 1
-        for slot, state in running.items():
+        for slot, state in decoding.items():
             state.generated.append(int(np.argmax(logits[slot])))
             if self.config.record_logits:
                 self.logits_of.setdefault(state.request.rid, {})[
@@ -215,23 +408,37 @@ class ServeEngine:
 
     # -- main loop ----------------------------------------------------------------
     def run(self, requests: Optional[Sequence[Request]] = None) -> Dict[int, RequestState]:
-        """Serve until every submitted request completes; returns rid -> state."""
+        """Serve until every submitted request completes; returns rid -> state.
+        A request the pool can never hold (Scheduler.impossible) is FAILED —
+        returned with .error set and empty .generated — instead of wedging the
+        queue; everything behind it keeps serving."""
         if requests is not None:
             self.submit_all(requests)
         self._pending.sort(key=lambda s: s.request.arrival_time)
+        chunked = self.config.chunked_prefill
         self._t0 = time.perf_counter()
         while self._pending or self.queue or self.scheduler.running:
             now = time.perf_counter() - self._t0
             while self._pending and self._pending[0].request.arrival_time <= now:
                 self.queue.push(self._pending.pop(0))
-            self._admit_and_prefill(now)
+            for state in self.scheduler.reject_impossible(self.queue):
+                state.finish_time = time.perf_counter() - self._t0
+                self.results[state.request.rid] = state
+            if chunked:
+                self._admit_chunked(now)
+                self._prefill_chunks(now)
+            else:
+                self._admit_and_prefill(now)
             self._sweep_finished()  # a request can complete at prefill time
-            if self.scheduler.running:
-                for slot in sorted(self.scheduler.running):
-                    if slot in self.scheduler.running:
+            running = self.scheduler.running
+            if any(st.phase == DECODING for st in running.values()):
+                for slot in sorted(running):
+                    if slot in running and running[slot].phase == DECODING:
                         self.scheduler.ensure_decode_page(slot, self.queue)
                 self._decode_once(now)
                 self._sweep_finished()
+            elif running:
+                pass  # only PREFILLING slots: next mixed step continues chunking
             elif self._pending and not self.queue:
                 time.sleep(
                     min(max(self._pending[0].request.arrival_time - now, 0.0), 0.01)
@@ -240,7 +447,9 @@ class ServeEngine:
                 # nothing running, nothing arriving, head request not admitted:
                 # the whole (free) pool cannot hold its unshared pages — this
                 # can never resolve (with nothing running, no donor pages will
-                # ever join the prefix index)
+                # ever join the prefix index). reject_impossible already failed
+                # requests too big for the pool, so this is the safety net for
+                # allocator states it cannot see.
                 head = self.queue.peek()
                 raise RuntimeError(
                     f"request {head.request.rid} needs "
@@ -255,14 +464,18 @@ class ServeEngine:
         self.results = {}
         self.logits_of = {}
         self.step_times = []
+        self.chunk_times = []
         self._n_decode_steps = 0
+        self._prefill_tokens_computed = 0
+        self._prefill_tokens_skipped = 0
         self.cache.reset_stats()
 
     # -- metrics ------------------------------------------------------------------
     def metrics(self) -> Dict[str, float]:
-        states = list(self.results.values())
+        failed = [s for s in self.results.values() if s.error is not None]
+        states = [s for s in self.results.values() if s.error is None]
         if not states:
-            return {}
+            return {"failed": len(failed)} if failed else {}
         wall = max(s.finish_time for s in states)
         e2e = np.array([s.finish_time - s.request.arrival_time for s in states])
         ttft = np.array(
@@ -271,15 +484,20 @@ class ServeEngine:
         n_tok = sum(len(s.generated) for s in states)
         return {
             "requests": len(states),
+            "failed": len(failed),
             "generated_tokens": n_tok,
             "wall_s": float(wall),
             "tokens_per_s": float(n_tok / wall) if wall > 0 else float("inf"),
             "decode_steps": self._n_decode_steps,
             "step_ms_p50": float(np.percentile(self.step_times, 50) * 1e3) if self.step_times else 0.0,
+            "chunk_ms_p50": float(np.percentile(self.chunk_times, 50) * 1e3) if self.chunk_times else 0.0,
             "latency_s_p50": float(np.percentile(e2e, 50)),
             "latency_s_p99": float(np.percentile(e2e, 99)),
             "ttft_s_p50": float(np.percentile(ttft, 50)),
+            "ttft_s_p95": float(np.percentile(ttft, 95)),
             "ttft_s_p99": float(np.percentile(ttft, 99)),
             "preemptions": sum(s.n_preemptions for s in states),
+            "prefill_tokens_computed": self._prefill_tokens_computed,
+            "prefill_tokens_skipped": self._prefill_tokens_skipped,
             **self.cache.stats(),
         }

@@ -48,6 +48,15 @@ class Request:
             raise ValueError("max_new_tokens must be >= 1")
 
 
+# RequestState.phase values — the mixed-step lifecycle. QUEUED -> PREFILLING
+# (admitted, context KV materializing chunk by chunk) -> DECODING (context
+# resident, one token per step). The monolithic engine never observes
+# PREFILLING: it admits and fully prefills in the same step.
+QUEUED = "queued"
+PREFILLING = "prefilling"
+DECODING = "decoding"
+
+
 @dataclasses.dataclass
 class RequestState:
     """Engine-side lifecycle of a request (survives preemption)."""
@@ -55,10 +64,16 @@ class RequestState:
     request: Request
     generated: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None  # batch slot while running, None while queued
+    # chunked prefill: tokens of context whose KV is computed AND resident for
+    # the current residency (page-aligned except at completion); None once the
+    # prefill completes (or always, in the monolithic engine). Reset by
+    # release(): preemption is recompute-style, the cursor does not survive.
+    chunk_cursor: Optional[int] = None
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_preemptions: int = 0
+    error: Optional[str] = None  # set when the engine fails the request
     # memoized prefix-sharing keys: (page_size, len(context)) -> chain. The
     # context is append-only per request, so its length identifies its content
     # and a queued request re-checked every engine step hashes only once.
@@ -84,6 +99,22 @@ class RequestState:
         """Tokens that must be in the KV cache: prompt + everything generated.
         After preemption this whole sequence is re-prefilled (recompute policy)."""
         return self.request.prompt + self.generated
+
+    @property
+    def phase(self) -> str:
+        """QUEUED / PREFILLING / DECODING — where the mixed step routes this
+        request: a PREFILLING slot receives prefill chunks and is masked out of
+        the batched decode; a DECODING slot appends one token per step."""
+        if self.slot is None:
+            return QUEUED
+        return PREFILLING if self.chunk_cursor is not None else DECODING
+
+    def release(self) -> None:
+        """Drop residency state on preemption: the slot binding and the chunk
+        cursor (recompute policy — a re-admitted request restarts its prefill,
+        re-adopting whatever prefix pages survived)."""
+        self.slot = None
+        self.chunk_cursor = None
 
     @property
     def done(self) -> bool:

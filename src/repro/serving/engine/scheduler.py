@@ -66,9 +66,46 @@ class Scheduler:
         watermark = self.config.watermark_pages if self.running else 0
         return need + watermark <= self.cache.num_free
 
-    def admit(self, queue: RequestQueue, now: float) -> List[Tuple[int, RequestState]]:
+    def impossible(self, state: RequestState) -> bool:
+        """True when this request can NEVER admit: its context needs more pages
+        than the whole pool holds even with every page free and no co-tenant.
+        Prefix sharing cannot rescue it — adopted pages still occupy the pool,
+        and the one-page decode headroom must come from somewhere. Without this
+        check such a request sits at the queue head forever, wedging everything
+        behind it (fits() keeps returning False each step, the engine keeps
+        spinning). The engine fails it with a clear error instead."""
+        return (
+            self.cache.pages_for(len(state.context) + 1) > self.cache.num_pages - 1
+        )
+
+    def reject_impossible(self, queue: RequestQueue) -> List[RequestState]:
+        """Pop every queue-head request that impossible() condemns (arrival
+        order scans until the first servable head), stamping .error. Covers
+        both fresh submissions that slipped past submit()'s static check (a
+        preempted request's context GROWS by its generated tokens, so a
+        request servable at submit time can outgrow the pool) and keeps FIFO
+        semantics for everything behind the failed head."""
+        failed = []
+        while queue:
+            state = queue.peek()
+            if not self.impossible(state):
+                break
+            queue.pop()
+            state.error = (
+                f"request {state.request.rid} needs "
+                f"{self.cache.pages_for(len(state.context) + 1)} pages for its "
+                f"{len(state.context)}-token context but the pool only has "
+                f"{self.cache.num_pages - 1} — raise num_pages or shorten the request"
+            )
+            failed.append(state)
+        return failed
+
+    def admit(self, queue: RequestQueue, now: float,
+              publish: bool = True) -> List[Tuple[int, RequestState]]:
         """Pop admissible requests, allocate their prompt pages (+1 headroom page
-        so the first decode token always has a slot), bind batch slots."""
+        so the first decode token always has a slot), bind batch slots.
+        ``publish=False`` defers prefix-index registration to
+        cache.publish_prefix (chunked prefill: pages fill over many steps)."""
         admitted = []
         slots = self.free_slots()
         while queue and slots:
@@ -80,7 +117,7 @@ class Scheduler:
             ctx = state.context
             self.cache.allocate(
                 slot, self.cache.pages_for(len(ctx) + 1), tokens=ctx,
-                chain=self._chain_of(state),
+                chain=self._chain_of(state), publish=publish,
             )
             state.slot = slot
             state.admit_time = now
@@ -96,7 +133,7 @@ class Scheduler:
         slot = victims[-1]  # most recently admitted
         state = self.running.pop(slot)
         self.cache.free_slot(slot)
-        state.slot = None
+        state.release()  # drops the slot AND any mid-prefill chunk cursor
         state.n_preemptions += 1
         queue.requeue_front(state)
         return state
@@ -128,5 +165,5 @@ class Scheduler:
     def finish(self, slot: int) -> RequestState:
         state = self.running.pop(slot)
         self.cache.free_slot(slot)
-        state.slot = None
+        state.release()
         return state

@@ -37,6 +37,31 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto", kv_spe
     return paged_serve_step
 
 
+def make_chunked_prefill_step(model, mesh=None, rules=None, attn_impl="auto",
+                              kv_spec=None):
+    shard = Sharder(mesh, rules)
+
+    def chunk_prefill_step(params, caches, tokens, block_tables, write_tables,
+                           cursors, n_new, last_index):
+        """The mixed step's prefill half: tokens (B, C) — one prefill chunk per
+        row, C the engine's chunk bucket -> (logits (B, Vp) at last_index, new
+        page pools). ``cursors`` (chunk start), ``n_new`` and ``last_index``
+        are traced, so ONE compile serves every chunk position of every prompt
+        length in the bucket — there is no per-prompt-length prefill compile in
+        the chunked engine. ``block_tables`` is the read view of each row's
+        pages (shared prefix included: the compute-skip path attends the
+        donor's KV); ``write_tables`` nulls the non-writable entries so the
+        chunk's scatter never lands in a page another sequence reads — the CoW
+        obligation discharged by table surgery instead of a copy."""
+        return model.decode_step_paged(
+            params, caches, tokens, block_tables, cursors,
+            shard=shard, attn_impl=attn_impl, kv_spec=kv_spec,
+            write_tables=write_tables, n_new=n_new, last_index=last_index,
+        )
+
+    return chunk_prefill_step
+
+
 def make_prefill(model, mesh=None, rules=None, max_len=None):
     shard = Sharder(mesh, rules)
 

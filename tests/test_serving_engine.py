@@ -9,10 +9,15 @@ import pytest
 
 from repro.core import Extents, LayoutError, LayoutPaged, LayoutRight
 from repro.kernels import ref
-from repro.kernels.paged_attention import paged_decode_attention_jnp, paged_flash_decode
+from repro.kernels.paged_attention import (
+    paged_decode_attention_jnp,
+    paged_flash_decode,
+    paged_flash_prefill_chunk,
+    paged_prefill_chunk_jnp,
+)
 from repro.models import build_model, get_config
 from repro.serving.engine import (
-    EngineConfig, Request, ServeEngine, aligned_max_logit_err,
+    PREFILLING, EngineConfig, Request, ServeEngine, aligned_max_logit_err,
 )
 
 
@@ -110,6 +115,50 @@ def test_paged_decode_matches_dense_reference(batch, page_size, lens, impl):
             np.array(out[b], np.float32), np.array(want[0], np.float32),
             rtol=2e-5, atol=2e-5,
         )
+
+
+# =====================================================================================
+# chunked-prefill attention kernel vs dense reference
+# =====================================================================================
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_chunk_prefill_attention_matches_dense_reference(impl):
+    """Two-part chunk attention (past from the pool, present from f32) equals
+    full causal attention over [past | chunk] densified through the table."""
+    hq, hkv, d, ps, C, max_pages = 4, 2, 16, 4, 8, 6
+    num_pages = 2 * max_pages + 1
+    rng = np.random.default_rng(0)
+    cursors = np.array([4, 8], np.int32)  # page-aligned resident counts
+    valid = (8, 5)                        # row 1: a partial final chunk
+    q = jnp.asarray(rng.standard_normal((2, hq, C, d)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((2, hkv, C, d)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((2, hkv, C, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((num_pages, hkv, ps, d)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((num_pages, hkv, ps, d)), jnp.float32)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, num_pages)).reshape(2, max_pages), jnp.int32
+    )
+    cur = jnp.asarray(cursors)
+    if impl == "pallas":
+        out = paged_flash_prefill_chunk(
+            q, ck, cv, k_pool, v_pool, bt, cur, interpret=True
+        )
+    else:
+        out = paged_prefill_chunk_jnp(q, ck, cv, k_pool, v_pool, bt, cur)
+    k_dense = jnp.moveaxis(k_pool[bt], 2, 1).reshape(2, hkv, max_pages * ps, d)
+    v_dense = jnp.moveaxis(v_pool[bt], 2, 1).reshape(2, hkv, max_pages * ps, d)
+    for b in range(2):
+        kk = jnp.concatenate([k_dense[b : b + 1, :, : int(cursors[b])], ck[b : b + 1]], axis=2)
+        vv = jnp.concatenate([v_dense[b : b + 1, :, : int(cursors[b])], cv[b : b + 1]], axis=2)
+        for t in range(valid[b]):
+            L = int(cursors[b]) + t + 1
+            want = ref.attention(
+                q[b : b + 1, :, t : t + 1], kk[:, :, :L], vv[:, :, :L],
+                causal=True, q_offset=L - 1,
+            )
+            np.testing.assert_allclose(
+                np.array(out[b, :, t], np.float32), np.array(want[0, :, 0], np.float32),
+                rtol=2e-5, atol=2e-5,
+            )
 
 
 # =====================================================================================
@@ -330,3 +379,189 @@ def test_engine_cache_dense_view_matches_layout(small_model):
     np.testing.assert_allclose(
         np.array(k_paged, np.float32), np.array(k_dense, np.float32), rtol=1e-6, atol=1e-6
     )
+
+
+# =====================================================================================
+# chunked prefill (mixed steps) — token-exact vs the monolithic engine
+# =====================================================================================
+def _staggered_shared_requests(cfg, rng):
+    """Donor (long decode keeps it resident) + filler (frees its slot) +
+    followers (admitted MID-donor, adopt its published prefix pages and skip
+    their compute) — deterministic, no wall-clock staging."""
+    prefix = rng.integers(0, cfg.vocab, size=16).tolist()
+    return [
+        (prefix + rng.integers(0, cfg.vocab, size=4).tolist(), 11),
+        (rng.integers(0, cfg.vocab, size=5).tolist(), 2),
+        (prefix + rng.integers(0, cfg.vocab, size=3).tolist(), 5),
+        (list(prefix), 5),  # whole-prompt adoption incl. the partial page
+    ]
+
+
+def _run_pair(model, params, econf, reqs_spec):
+    mk = lambda: [
+        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        for i, (p, n) in enumerate(reqs_spec)
+    ]
+    eng_m = ServeEngine(model, params, econf)
+    eng_c = ServeEngine(
+        model, params,
+        dataclasses.replace(econf, chunked_prefill=True, chunk_tokens=8),
+    )
+    return eng_m.run(mk()), eng_c.run(mk()), eng_m, eng_c
+
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8"])
+def test_engine_chunked_exact_with_compute_skip(small_model, kv_dtype):
+    """Chunked-on vs chunked-off token-exact on a shared-prefix workload where
+    the followers' first chunk starts PAST the adopted pages (compute skip),
+    across multi-chunk prompts. int4 is exercised separately: its cross-chunk
+    reads go through 4-bit pages where monolithic prefill attends f32, so
+    multi-chunk exactness is not a structural guarantee at that width."""
+    cfg, model, params = small_model
+    reqs_spec = _staggered_shared_requests(cfg, np.random.default_rng(3))
+    econf = EngineConfig(num_pages=48, page_size=4, max_batch=2,
+                         max_pages_per_seq=9, kv_dtype=kv_dtype)
+    res_m, res_c, eng_m, eng_c = _run_pair(model, params, econf, reqs_spec)
+    for i in range(len(reqs_spec)):
+        assert res_m[i].generated == res_c[i].generated, i
+    m = eng_c.metrics()
+    assert m["prefill_tokens_skipped"] > 0  # followers skipped the prefix
+    assert m["pages_shared"] > 0
+    assert eng_m.metrics()["prefill_tokens_skipped"] == 0  # monolithic never skips
+
+
+def test_engine_chunked_skip_matches_cold_request(small_model):
+    """A skipped-prefix request produces the same tokens as a cold request of
+    the same prompt (sharing off): the adopted pages hold exactly what its own
+    prefill would have computed."""
+    cfg, model, params = small_model
+    reqs_spec = _staggered_shared_requests(cfg, np.random.default_rng(3))
+    econf = EngineConfig(num_pages=48, page_size=4, max_batch=2, max_pages_per_seq=9)
+    mk = lambda: [
+        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        for i, (p, n) in enumerate(reqs_spec)
+    ]
+    warm = ServeEngine(
+        model, params, dataclasses.replace(econf, chunked_prefill=True, chunk_tokens=8)
+    )
+    cold = ServeEngine(
+        model, params,
+        dataclasses.replace(econf, chunked_prefill=True, chunk_tokens=8,
+                            prefix_sharing=False),
+    )
+    res_w, res_c = warm.run(mk()), cold.run(mk())
+    assert warm.metrics()["prefill_tokens_skipped"] > 0
+    assert cold.metrics()["prefill_tokens_skipped"] == 0
+    for i in range(len(reqs_spec)):
+        assert res_w[i].generated == res_c[i].generated, i
+
+
+def test_engine_chunked_int4_exact_single_chunk_sharing_and_cow(small_model):
+    """int4 pages stay token-exact wherever attention never crosses a chunk
+    boundary: single-page prompts with partial-page adoption + forced CoW —
+    the whole sharing machinery over 4-bit pages, chunked vs monolithic."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, size=6).tolist()
+    filler = rng.integers(0, cfg.vocab, size=5).tolist()
+    reqs_spec = [(prompt, 12), (filler, 2), (prompt, 5), (prompt, 5)]
+    econf = EngineConfig(num_pages=24, page_size=8, max_batch=2,
+                         max_pages_per_seq=4, kv_dtype="int4")
+    res_m, res_c, eng_m, eng_c = _run_pair(model, params, econf, reqs_spec)
+    for i in range(len(reqs_spec)):
+        assert res_m[i].generated == res_c[i].generated, i
+    m = eng_c.metrics()
+    assert m["pages_shared"] >= 1 and m["cow_copies"] >= 1
+
+
+def test_engine_chunked_preemption_mid_prefill_stays_exact(small_model):
+    """A decoding sequence's page append exhausts the pool while a long prompt
+    is mid-prefill: the PREFILLING slot is preempted (cursor reset, deferred
+    index entries discarded), re-admitted, and the final tokens still match the
+    monolithic engine."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(7)
+    long_p = rng.integers(0, cfg.vocab, size=44).tolist()
+    short_p = rng.integers(0, cfg.vocab, size=4).tolist()
+    reqs_spec = [(long_p, 4), (short_p, 10)]
+    econf = EngineConfig(num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=12)
+    mk = lambda: [
+        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        for i, (p, n) in enumerate(reqs_spec)
+    ]
+    eng_m = ServeEngine(model, params, econf)
+    eng_c = ServeEngine(
+        model, params,
+        dataclasses.replace(econf, chunked_prefill=True, chunk_tokens=4),
+    )
+    victim_phases = []
+    orig = eng_c.scheduler._preempt_one
+
+    def spying_preempt(queue, keep_slot):
+        victims = [s for s in eng_c.scheduler.running if s != keep_slot]
+        if victims:
+            victim_phases.append(eng_c.scheduler.running[victims[-1]].phase)
+        return orig(queue, keep_slot)
+
+    eng_c.scheduler._preempt_one = spying_preempt
+    res_m, res_c = eng_m.run(mk()), eng_c.run(mk())
+    assert PREFILLING in victim_phases  # the long prompt was evicted mid-prefill
+    assert eng_c.metrics()["preemptions"] >= 1
+    for i in range(len(reqs_spec)):
+        assert res_m[i].generated == res_c[i].generated, i
+
+
+def test_engine_chunked_mixed_lengths_exact_and_single_compile_family(small_model):
+    """Mixed prompt lengths through the chunked engine match the unbatched
+    oracle, and the engine compiles NO per-prompt-length prefill functions —
+    the traced-cursor chunk step is the only prefill compile family."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+    lengths = (5, 9, 16, 3, 12)
+    prompts = [rng.integers(0, cfg.vocab, size=L).tolist() for L in lengths]
+    n_gen = 6
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=32, page_size=4, max_batch=4, max_pages_per_seq=8,
+                     chunked_prefill=True, chunk_tokens=8),
+    )
+    results = eng.run(reqs)
+    for i, p in enumerate(prompts):
+        assert results[i].generated == unbatched_greedy(cfg, model, params, p, n_gen)
+    assert not eng._prefill_fns  # monolithic path never compiled
+
+
+# =====================================================================================
+# impossible requests fail loudly instead of wedging the queue
+# =====================================================================================
+def test_submit_rejects_prompt_larger_than_pool(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=4, page_size=4, max_batch=2, max_pages_per_seq=16),
+    )
+    with pytest.raises(ValueError, match="usable pages"):
+        eng.submit(Request(rid=0, prompt=list(range(1, 40)), max_new_tokens=2))
+
+
+def test_grown_context_fails_request_and_serves_the_rest(small_model):
+    """A request whose context GROWS past the whole pool (legal at submit
+    time) is failed with .error set — the engine keeps serving everything
+    else instead of spinning on an unadmittable queue head."""
+    cfg, model, params = small_model
+    eng = ServeEngine(
+        model, params,
+        EngineConfig(num_pages=6, page_size=4, max_batch=2, max_pages_per_seq=8),
+    )
+    ok = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=3)
+    # 18-token prompt fits 5 of 5 usable pages at submit; +8 new tokens can
+    # never fit — the scheduler must fail it at (re-)admission, not spin
+    doomed = Request(rid=1, prompt=list(range(1, 19)), max_new_tokens=8)
+    eng.submit_all([ok, doomed])
+    # simulate the grown-context state preemption would produce
+    eng._pending[1].generated.extend([9, 9, 9])
+    results = eng.run()
+    assert results[0].error is None and len(results[0].generated) == 3
+    assert results[1].error is not None and "pool" in results[1].error
+    assert eng.metrics()["failed"] == 1

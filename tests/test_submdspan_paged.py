@@ -1,0 +1,273 @@
+"""submdspan over LayoutPaged — the chunk-view laws (core/submdspan.py §chunk
+views are submdspans): pointwise agreement with the parent at partial-page
+boundaries, slice composition, shared-page filtering (the compute-skip regime),
+and accessor orthogonality over quantized pools.
+
+Hypothesis property tests are guarded with importorskip (CI runs a
+no-hypothesis leg); the example-based laws below run everywhere.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Extents, LayoutPaged, MdSpan, all_, submdspan
+from repro.core.layouts import LayoutError
+from repro.serving.engine.cache import PagedKVCache
+from repro.serving.engine.kvquant import KV_DTYPES
+
+
+def span_over(layout: LayoutPaged) -> MdSpan:
+    buf = jnp.arange(layout.required_span_size(), dtype=jnp.float32)
+    return MdSpan.over(buf, layout)
+
+
+def scattered_layout(shared=()):
+    # 2 sequences x 3 pages out of a 9-page pool, deliberately out of order
+    return LayoutPaged(
+        Extents.fully_dynamic(2, 2, 12, 4), ((5, 2, 8), (7, 1, 3)), 4, 9, shared
+    )
+
+
+# =====================================================================================
+# pointwise + observer laws
+# =====================================================================================
+@pytest.mark.parametrize("a,b", [(0, 12), (0, 5), (2, 7), (4, 8), (3, 4), (9, 12)])
+def test_chunk_slice_matches_parent_pointwise(a, b):
+    """sub(s, h, p, d) == parent(s, h, a + p, d) — including partial-page
+    boundaries, where pos_offset carries the in-page start."""
+    lp = scattered_layout()
+    sub = submdspan(span_over(lp), all_, all_, (a, b), all_).layout
+    assert isinstance(sub, LayoutPaged)
+    assert sub.extents.extent(2) == b - a
+    for s in range(2):
+        for h in range(2):
+            for p in range(b - a):
+                for d in range(4):
+                    assert sub(s, h, p, d) == lp(s, h, a + p, d)
+
+
+def test_chunk_slice_trims_rows_to_covering_pages():
+    lp = scattered_layout()
+    sub = submdspan(span_over(lp), all_, all_, (5, 7), all_).layout
+    # positions [5, 7) live entirely in logical page 1
+    assert sub.block_table == ((2,), (1,))
+    assert sub.pos_offset == 1
+    assert not sub.is_contiguous()
+
+
+def test_chunk_slice_composition():
+    """Slicing a slice == one slice with the composed range (P0009)."""
+    lp = scattered_layout()
+    outer = submdspan(span_over(lp), all_, all_, (2, 11), all_)
+    inner = submdspan(outer, all_, all_, (3, 7), all_).layout
+    direct = submdspan(span_over(lp), all_, all_, (5, 9), all_).layout
+    assert inner == direct
+
+
+def test_chunk_slice_values_read_through_shared_buffer():
+    """The chunk shares the parent's buffer: values agree elementwise."""
+    lp = scattered_layout()
+    span = span_over(lp)
+    sub = submdspan(span, all_, all_, (3, 9), all_)
+    for s in range(2):
+        for h in range(2):
+            for p in range(6):
+                for d in range(4):
+                    assert float(sub(s, h, p, d)) == float(span(s, h, 3 + p, d))
+
+
+def test_seq_range_slice_and_rejections():
+    lp = scattered_layout()
+    sub = submdspan(span_over(lp), (1, 2), all_, (0, 12), all_).layout
+    assert sub.block_table == ((7, 1, 3),)
+    with pytest.raises(LayoutError):
+        submdspan(span_over(lp), 0, all_, (0, 4), all_)  # int drops the rank
+    with pytest.raises(LayoutError):
+        submdspan(span_over(lp), all_, (0, 1), (0, 4), all_)  # head slice
+    with pytest.raises(LayoutError):
+        submdspan(span_over(lp), all_, all_, (0, 4), (0, 2))  # d slice
+
+
+# =====================================================================================
+# aliasing: the compute-skip regime
+# =====================================================================================
+def test_chunk_past_shared_prefix_is_unique():
+    """shared_pages filters to the pages the chunk references: a chunk lying
+    past a shared prefix is unique even when the parent is not — the formal
+    shape of the shared-prefix compute skip."""
+    lp = scattered_layout(shared=(5, 2))  # first two pages of row 0 shared
+    assert not lp.is_unique()
+    head = submdspan(span_over(lp), all_, all_, (0, 8), all_).layout
+    assert not head.is_unique()
+    assert head.shared_pages == (2, 5)
+    tail = submdspan(span_over(lp), all_, all_, (8, 12), all_).layout
+    assert tail.is_unique()
+    assert tail.shared_pages == ()
+
+
+def test_chunk_boundary_straddling_shared_page_stays_aliased():
+    lp = scattered_layout(shared=(2,))  # row 0's middle page
+    mid = submdspan(span_over(lp), all_, all_, (7, 9), all_).layout
+    assert not mid.is_unique()  # position 7 still lives in shared page 2
+    assert mid.shared_pages == (2,)
+
+
+# =====================================================================================
+# the engine's chunk views (PagedKVCache.chunk_view) + accessor orthogonality
+# =====================================================================================
+@dataclasses.dataclass
+class FakeCfg:
+    n_kv_heads: int = 2
+    head_dim: int = 4
+
+
+class FakeModel:
+    cfg = FakeCfg()
+
+    def init_paged_cache(self, num_pages, page_size, kv_spec=None):
+        hkv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
+        if kv_spec is not None:
+            dq = kv_spec.packed_dim(dh)
+            return [{
+                k: {"q": jnp.zeros((1, num_pages, hkv, page_size, dq), jnp.int8),
+                    "scale": jnp.zeros((1, num_pages, hkv), jnp.float32)}
+                for k in ("k", "v")
+            }]
+        shape = (1, num_pages, hkv, page_size, dh)
+        return [{"k": jnp.zeros(shape), "v": jnp.zeros(shape)}]
+
+
+def make_cache(kv_dtype="f32"):
+    return PagedKVCache(
+        FakeModel(), num_pages=10, page_size=4, max_batch=2, max_pages_per_seq=6,
+        kv_dtype=kv_dtype,
+    )
+
+
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8", "int4"])
+def test_cache_chunk_view_is_submdspan_of_dense_view(kv_dtype):
+    """Reading a chunk through chunk_view's sliced offsets equals slicing the
+    full dense view — for quantized pools the buffer is the DECODED codomain,
+    so the slice transforms only the layout (accessor orthogonality)."""
+    c = make_cache(kv_dtype)
+    c.allocate(0, 3, tokens=list(range(10)))
+    c.lens[0] = 10
+    rng = np.random.default_rng(0)
+    spec = KV_DTYPES[kv_dtype]
+    if spec is None:
+        c.pools = [{
+            k: jnp.asarray(rng.standard_normal(c.pools[0][k].shape), jnp.float32)
+            for k in ("k", "v")
+        }]
+    else:
+        vals = rng.standard_normal((1, c.num_pages, 2, c.page_size, 4))
+        c.pools = [{k: spec.encode_pages(jnp.asarray(vals, jnp.float32))
+                    for k in ("k", "v")}]
+    k_full, _ = c.dense_view(0)
+    for start, stop in [(0, 4), (4, 10), (3, 7), (9, 10)]:
+        chunk = c.chunk_view(0, start, stop)
+        assert isinstance(chunk.layout, LayoutPaged)
+        got = chunk.to_dense()[0]  # (Hkv, stop-start, Dh)
+        np.testing.assert_allclose(
+            np.array(got), np.array(k_full[:, start:stop]), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_cache_chunk_view_uniqueness_tracks_adoption():
+    """A chunk past the adopted prefix is unique — exactly the pages the
+    chunked engine is allowed to write (the compute-skip write mask)."""
+    c = make_cache()
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    c.allocate(1, 3, tokens=toks)  # adopts all three pages
+    assert not c.chunk_view(1, 0, 8).layout.is_unique()
+    c.lens[1] = 10
+    assert c.cow_page(1)  # privatize the partial page
+    assert c.chunk_view(1, 8, 10).layout.is_unique()
+    assert not c.chunk_view(1, 0, 8).layout.is_unique()
+
+
+def test_write_table_row_masks_adopted_prefix():
+    c = make_cache()
+    toks = list(range(10))
+    c.allocate(0, 3, tokens=toks)
+    c.allocate(1, 3, tokens=toks)
+    assert c.adopted_pages(1) == 3
+    row = c.write_table_row(1)
+    assert list(row[:3]) == [0, 0, 0]  # all adopted pages nulled
+    fresh = c.write_table_row(0)
+    assert list(fresh[:3]) == c.pages_of[0]  # the donor owns its pages
+
+
+# =====================================================================================
+# hypothesis properties (conditionally defined: the example-based laws above
+# must still run on the no-hypothesis CI leg)
+# =====================================================================================
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the no-hypothesis CI leg
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n_pages_per_seq=st.integers(1, 4),
+        page_size=st.integers(1, 5),
+        data=st.data(),
+    )
+    def test_chunk_slice_pointwise_property(n_pages_per_seq, page_size, data):
+        """For random pools/tables and random (a, b) pos ranges — page-aligned
+        or not — the sliced layout agrees with the parent pointwise and its
+        offsets stay injective on the chunk domain."""
+        num_pages = 2 * n_pages_per_seq + 1
+        pages = data.draw(st.permutations(list(range(1, num_pages))))
+        table = (
+            tuple(pages[:n_pages_per_seq]),
+            tuple(pages[n_pages_per_seq : 2 * n_pages_per_seq]),
+        )
+        max_pos = n_pages_per_seq * page_size
+        lp = LayoutPaged(
+            Extents.fully_dynamic(2, 2, max_pos, 3), table, page_size, num_pages
+        )
+        a = data.draw(st.integers(0, max_pos - 1))
+        b = data.draw(st.integers(a + 1, max_pos))
+        sub = submdspan(span_over(lp), all_, all_, (a, b), all_).layout
+        offs = []
+        for s in range(2):
+            for h in range(2):
+                for p in range(b - a):
+                    for d in range(3):
+                        o = sub(s, h, p, d)
+                        assert o == lp(s, h, a + p, d)
+                        offs.append(o)
+        assert len(set(offs)) == len(offs)  # injective on the chunk domain
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        page_size=st.integers(1, 4),
+        n_pages=st.integers(2, 5),
+        data=st.data(),
+    )
+    def test_chunk_slice_shared_filter_property(page_size, n_pages, data):
+        """is_unique() of a chunk is False iff the chunk's positions touch a
+        shared page — for arbitrary shared sets and ranges."""
+        table = (tuple(range(1, n_pages + 1)),)
+        max_pos = n_pages * page_size
+        shared = tuple(
+            data.draw(st.sets(st.integers(1, n_pages), max_size=n_pages))
+        )
+        lp = LayoutPaged(
+            Extents.fully_dynamic(1, 1, max_pos, 2), table, page_size,
+            n_pages + 1, shared,
+        )
+        a = data.draw(st.integers(0, max_pos - 1))
+        b = data.draw(st.integers(a + 1, max_pos))
+        sub = submdspan(span_over(lp), all_, all_, (a, b), all_).layout
+        touched = {table[0][p // page_size] for p in range(a, b)}
+        assert sub.is_unique() == (not (touched & set(shared)))
+        assert set(sub.shared_pages) == (touched & set(shared))
