@@ -32,6 +32,18 @@ shared-prefix follower trace with prefill COMPUTE skip (the chunk cursor
 starts past the adopted pages) and records prefill_tokens_skipped — the
 prefill-FLOPs saved by prefix sharing, beyond the storage dedupe of PR 2.
 
+A fifth section is the DECODE HOT PATH: a steady-state, batch-full decode
+sweep (every slot decoding a long tail, no arrivals in flight) through one
+engine per fused-decode horizon K (EngineConfig.multi_step). K=1 times the
+device-resident single step — on-device sampling, persistent table/len
+mirrors, (B,) ids as the only per-token D2H; K>1 amortizes dispatch over
+K-step on-device loops. Records step_ms_p50/p95, the host-vs-device
+breakdown (host_overhead_ms_p50), fused-step counts, and token-exactness
+across every K; a sampled sub-section replays the trace with
+temperature/top-k/top-p twice and asserts seeded reproducibility. Every
+point's step timing now also carries step_ms_p95 + host_overhead_ms_p50 —
+the breakdown the CI perf-ratchet uploads.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke --kv-dtype int8
@@ -47,12 +59,15 @@ import numpy as np
 
 from repro.models import ModelConfig, Model
 from repro.serving.engine import (
-    EngineConfig, Request, ServeEngine, aligned_max_logit_err,
+    EngineConfig, Request, SamplingParams, ServeEngine, aligned_max_logit_err,
 )
 
 OUT_PATH = Path("BENCH_serving.json")
-SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # untracked: CI-sized numbers
-# must never clobber the tracked cross-PR trajectory in BENCH_serving.json
+SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # COMMITTED: the CI
+# perf-ratchet baseline (bench-smoke fails on step_ms_p50 +20% / tokens_per_s
+# -10% vs this file). Smoke runs still never clobber the full-size cross-PR
+# trajectory in BENCH_serving.json; regenerate + commit the smoke file when a
+# PR intentionally moves decode perf
 
 POINTS = [  # (max_batch, page_size)
     (2, 8),
@@ -95,6 +110,18 @@ BURST_PAGE_SIZE = 8
 # that trade)
 BURST_MAX_BATCH = 8
 CHUNK_TOKENS = 128
+
+# decode hot path: steady-state, batch-full decode — every slot holds a short
+# prompt and decodes a long tail with no arrivals, admissions or page events
+# in flight beyond routine page appends. This isolates the per-token decode
+# cost the device-resident refactor targets: host argmax + full-logits D2H +
+# per-step table uploads before, (B,) sampled ids after. Ks sweep the fused
+# horizon (multi_step); K=1 is the single-dispatch engine.
+STEADY_PROMPT_LEN = 8
+STEADY_NEW_TOKENS = 48
+STEADY_MAX_BATCH = 4
+STEADY_PAGE_SIZE = 16
+MULTI_STEP_KS = (1, 2, 4, 8)
 
 
 def burst_config() -> ModelConfig:
@@ -370,6 +397,87 @@ def run_long_prompt_burst(max_new: int, n_long: int, n_short: int) -> dict:
     }
 
 
+def run_steady_decode(model, params, vocab: int, n_new: int, ks) -> dict:
+    """Steady-state batch-full decode through one engine per fused horizon K.
+    K=1 is the single-dispatch device-resident step; larger K runs K-step
+    on-device loops over scheduler-proven event-free horizons. Asserts token
+    exactness across every K (greedy), then replays the trace SAMPLED
+    (temperature/top-k/top-p) twice at the largest K to demonstrate the
+    sampled-serving scenario and its seeded reproducibility."""
+    make = lambda sampling=None: [
+        Request(
+            rid=i,
+            prompt=np.random.default_rng(50 + i).integers(
+                0, vocab, size=STEADY_PROMPT_LEN
+            ).tolist(),
+            max_new_tokens=n_new,
+            **({"sampling": sampling} if sampling else {}),
+        )
+        for i in range(STEADY_MAX_BATCH)
+    ]
+    conf = EngineConfig.sized_for(
+        STEADY_PROMPT_LEN + n_new + 1, page_size=STEADY_PAGE_SIZE,
+        max_batch=STEADY_MAX_BATCH,
+    )
+    section = {
+        "prompt_len": STEADY_PROMPT_LEN,
+        "new_tokens": n_new,
+        "max_batch": STEADY_MAX_BATCH,
+        "page_size": STEADY_PAGE_SIZE,
+        "ks": {},
+    }
+    outputs = {}
+    for k in ks:
+        eng = ServeEngine(model, params, dataclasses.replace(conf, multi_step=k))
+        eng.run(make())  # rehearsal: compile the step (and the K-loop), warm pools
+        eng.reset_metrics()
+        results = eng.run(make())
+        outputs[k] = {rid: s.generated for rid, s in results.items()}
+        m = eng.metrics()
+        section["ks"][str(k)] = {
+            "step_ms_p50": m["step_ms_p50"],
+            "step_ms_p95": m["step_ms_p95"],
+            "host_overhead_ms_p50": m["host_overhead_ms_p50"],
+            "tokens_per_s": m["tokens_per_s"],
+            "decode_steps": m["decode_steps"],
+            "fused_steps": m["fused_steps"],
+        }
+    base = ks[0]
+    section["tokens_exact_across_ks"] = all(outputs[k] == outputs[base] for k in ks)
+    for k in ks[1:]:
+        section["ks"][str(k)]["step_speedup_x_vs_k1"] = round(
+            section["ks"][str(base)]["step_ms_p50"]
+            / max(section["ks"][str(k)]["step_ms_p50"], 1e-9), 2
+        )
+    # sampled serving (the scenario on-device sampling opens): seeded
+    # temperature/top-k/top-p through the fused engine, reproducible run-to-run
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=1234)
+    k_top = ks[-1]
+    eng = ServeEngine(model, params, dataclasses.replace(conf, multi_step=k_top))
+    eng.run(make(sp))
+    eng.reset_metrics()
+    res_a = eng.run(make(sp))
+    m_samp = eng.metrics()
+    res_b = ServeEngine(
+        model, params, dataclasses.replace(conf, multi_step=k_top)
+    ).run(make(sp))
+    section["sampled"] = {
+        "temperature": sp.temperature,
+        "top_k": sp.top_k,
+        "top_p": sp.top_p,
+        "multi_step": k_top,
+        "step_ms_p50": m_samp["step_ms_p50"],
+        "tokens_per_s": m_samp["tokens_per_s"],
+        "reproducible": all(
+            res_a[r].generated == res_b[r].generated for r in res_a
+        ),
+        "diverges_from_greedy": any(
+            res_a[r].generated != outputs[base][r] for r in res_a
+        ),
+    }
+    return section
+
+
 def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> dict:
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
@@ -407,8 +515,25 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
             f"serving/b{max_batch}_ps{page_size},{m['step_ms_p50']*1e3:.2f},"
             f"tokens_per_s={m['tokens_per_s']:.1f} p50={m['latency_s_p50']*1e3:.0f}ms "
             f"p99={m['latency_s_p99']*1e3:.0f}ms ttft_p99={m['ttft_s_p99']*1e3:.0f}ms "
+            f"host_overhead_p50={m['host_overhead_ms_p50']:.3f}ms "
             f"preempt={m['preemptions']}"
         )
+    sd = run_steady_decode(
+        model, params, cfg.vocab,
+        n_new=24 if smoke else STEADY_NEW_TOKENS,
+        ks=(1, 4) if smoke else MULTI_STEP_KS,
+    )
+    report["steady_decode"] = sd
+    k_last = list(sd["ks"])[-1]
+    print(
+        "serving/steady_decode,"
+        + " ".join(
+            f"K={k}:{e['step_ms_p50']:.3f}ms" for k, e in sd["ks"].items()
+        )
+        + f" (K={k_last} {sd['ks'][k_last]['step_speedup_x_vs_k1']}x vs K=1),"
+        f" exact_across_ks={sd['tokens_exact_across_ks']}"
+        f" sampled_reproducible={sd['sampled']['reproducible']}"
+    )
     sp = run_shared_prefix(model, params, cfg.vocab, shared_n, max_new)
     report["shared_prefix"] = sp
     print(

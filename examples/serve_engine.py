@@ -46,11 +46,27 @@ prefix sharing, a request whose prompt prefix is already resident skips the
 shared pages' prefill COMPUTE (not just their storage) and the demo reports
 the skipped tokens.
 
+On-device sampling: ``--temperature/--top-k/--top-p/--seed`` attach a
+SamplingParams policy to every request — token selection (greedy included)
+runs INSIDE the fused serve step, so logits never leave the device and the
+decode loop's only per-token transfer is the (B,) chosen ids. Sampling is
+seeded per (seed, request id, position): the demo re-runs the sampled trace
+through a second engine and asserts the outputs are identical (and the
+comparisons below — sharing on/off, chunked vs monolithic — stay exact even
+when sampled, because the fold depends on position, never on scheduling).
+
+Multi-step fused decode: ``--multi-step K`` lets the engine run K decode
+iterations in ONE on-device loop whenever the scheduler proves the horizon
+event-free (no admission, page append, CoW, or finish within K) — append,
+attend, sample and feed back without touching the host, amortizing dispatch
+over K tokens. Token-exact for any K; the run reports how many steps fused.
+
 Knobs: ``num_pages`` (pool memory budget), ``page_size`` (tokens per page),
 ``max_batch`` (decode batch width), ``attn_impl`` ("pallas" routes decode
 through the paged flash kernel; "auto" picks by backend), ``kv_dtype``
 (f32 | int8 | int4 page representation), ``--chunked`` + ``--chunk-tokens``
-(mixed-step prefill).
+(mixed-step prefill), ``--temperature/--top-k/--top-p/--seed`` (on-device
+sampling), ``--multi-step`` (fused decode horizon).
 """
 import argparse
 import dataclasses
@@ -59,7 +75,9 @@ import jax
 import numpy as np
 
 from repro.models import build_model, get_config
-from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine import (
+    EngineConfig, Request, SamplingParams, ServeEngine,
+)
 
 
 def main():
@@ -85,6 +103,20 @@ def main():
                          "trace and compares TTFT against a monolithic engine")
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="max tokens per prefill chunk (page multiple; 0 = auto)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax); selection "
+                         "always runs on device inside the fused serve step")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k largest logits before sampling (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: keep the smallest head of the "
+                         "distribution with mass top_p (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG stream seed (per-request streams fold "
+                         "the request id; same seed => same tokens, always)")
+    ap.add_argument("--multi-step", type=int, default=1, metavar="K",
+                    help="fused decode horizon: run K decode iterations in one "
+                         "on-device loop over event-free horizons (1 = off)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch, smoke=True), dtype="float32")
@@ -110,9 +142,13 @@ def main():
             rng.integers(0, cfg.vocab, size=long_len).tolist() for _ in range(2)
         ] + prompts
         arrivals = np.concatenate([[0.0, 0.0], arrivals])
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed,
+    )
     make_requests = lambda: [
         Request(rid=i, prompt=list(p), max_new_tokens=args.tokens,
-                arrival_time=float(arrivals[i]))
+                arrival_time=float(arrivals[i]), sampling=sampling)
         for i, p in enumerate(prompts)
     ]
     econf = EngineConfig.sized_for(
@@ -123,6 +159,7 @@ def main():
         kv_dtype=args.kv_dtype,
         chunked_prefill=args.chunked,
         chunk_tokens=args.chunk_tokens,
+        multi_step=args.multi_step,
     )
 
     engine = ServeEngine(model, params, econf)
@@ -136,8 +173,28 @@ def main():
         f"\n{m['requests']} requests, {m['generated_tokens']} tokens in {m['wall_s']:.2f}s "
         f"({m['tokens_per_s']:.1f} tok/s, CPU demo incl. compiles) | "
         f"latency p50 {m['latency_s_p50']*1e3:.0f}ms p99 {m['latency_s_p99']*1e3:.0f}ms | "
-        f"preemptions {m['preemptions']}"
+        f"step p50 {m['step_ms_p50']:.2f}ms (host overhead "
+        f"{m['host_overhead_ms_p50']:.2f}ms) | preemptions {m['preemptions']}"
     )
+    if args.multi_step > 1:
+        print(
+            f"multi-step fused decode (K={args.multi_step}): "
+            f"{m['fused_steps']}/{m['decode_steps']} decode steps ran inside "
+            f"on-device fused windows (event-free horizons only; token-exact vs K=1)"
+        )
+    if args.temperature > 0:
+        # seeded sampling is a pure function of (seed, rid, position): a second
+        # engine on the same trace must reproduce every token
+        rerun = ServeEngine(model, params, econf).run(make_requests())
+        assert all(
+            results[r].generated == rerun[r].generated for r in results
+        ), "seeded sampling must be reproducible"
+        print(
+            f"on-device sampling: temperature={args.temperature} "
+            f"top_k={args.top_k} top_p={args.top_p} seed={args.seed} | "
+            f"re-run reproduces all {len(results)} outputs exactly "
+            f"(logits never left the device)"
+        )
 
     if args.chunked:
         # same trace through a monolithic-prefill engine: the TTFT cost of

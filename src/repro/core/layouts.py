@@ -427,6 +427,21 @@ class LayoutPaged(LayoutMapping):
     shared-prefix compute-skip regime (the skipped pages are someone else's to
     read, the chunk's own pages are private to write). See core/submdspan.py
     §"chunk views are submdspans" for the laws.
+
+    Device-resident layout state (the serving hot path): a LayoutPaged mapping
+    is DATA — (block_table, lens) — not code, so where that data lives decides
+    what the indirection costs. The paged kernels already consume the tables
+    on device (scalar-prefetch BlockSpecs); the serving engine extends the
+    same discipline to the engine loop AROUND the kernels: PagedKVCache keeps
+    persistent device mirrors of every slot's table row and length beside the
+    page pool they index, allocator events (allocation, CoW, page append,
+    preemption) patch exactly the affected rows via ``dynamic_update_slice``
+    deltas, and routine decode appends advance the lengths ON DEVICE inside
+    the fused serve step (donated in place, no host round-trip). The mapping
+    state therefore lives where its codomain lives, and the host's copy is a
+    scheduling-side mirror — the paper's zero-overhead claim applied to the
+    layout's runtime representation, not just its index arithmetic
+    (serving/engine/cache.py §device-resident layout state).
     """
 
     extents: Extents

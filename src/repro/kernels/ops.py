@@ -226,6 +226,67 @@ def paged_prefill_chunk_attention_quant(
 
 
 # ---------------------------------------------------------------------------------
+# on-device token sampling (the serving hot path's logits consumer)
+# ---------------------------------------------------------------------------------
+def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int):
+    """Batched token selection on device: greedy / temperature / top-k / top-p.
+
+    logits: (B, Vp) with Vp >= vocab (pad columns masked off); temperature (B,)
+    f32 — 0 selects greedy argmax, EXACTLY matching host ``np.argmax`` over
+    ``logits[:, :vocab]``; top_k (B,) int32 (0 = off); top_p (B,) f32 in (0, 1]
+    (1 = off; non-positive values are treated as off); seed (B,) uint32 per-slot
+    stream ids; pos (B,) int32 the absolute sequence index of the token being
+    sampled. Returns (B,) int32 token ids.
+
+    Determinism: the per-slot key is ``fold_in(PRNGKey(seed[b]), pos[b])`` — a
+    pure function of (stream seed, position). A preempted-and-recomputed request
+    therefore re-samples the identical token at every position, and two engines
+    replaying the same trace agree bit-for-bit (the serving sampling contract;
+    serving/sampling.py derives the stream seed).
+
+    Filters compose in the conventional order: top-k keeps the k largest logits
+    (ties at the k-th value are all kept), then top-p keeps the smallest prefix
+    of the temperature-scaled distribution whose mass reaches top_p (the
+    crossing token included, so at least one survives). Sampling itself is the
+    Gumbel-max trick — an argmax, so the whole path stays a (B, V) map + two
+    sorts with no host round-trip. When NO slot samples (all temperatures 0) a
+    ``lax.cond`` skips the sort/softmax machinery at run time and the step pays
+    exactly one argmax.
+    """
+    b, vp = logits.shape
+    col = jnp.arange(vp)[None, :]
+    x = jnp.where(col < vocab, logits.astype(jnp.float32), -jnp.inf)
+    greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        # top-k: threshold at the k-th largest (k = vocab when off)
+        k_eff = jnp.clip(jnp.where(top_k > 0, top_k, vocab), 1, vocab)
+        x_desc = jnp.sort(x, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(x_desc, k_eff[:, None] - 1, axis=1)
+        xf = jnp.where(x >= kth, x, -jnp.inf)
+        # top-p over the temperature-scaled distribution of the survivors
+        t = jnp.maximum(temperature, 1e-6)[:, None]
+        z = xf / t
+        p_eff = jnp.where(top_p > 0, top_p, 1.0)[:, None]
+        z_desc = jnp.sort(z, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(z_desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = (cum - probs) < p_eff  # mass BEFORE the token; top-1 always kept
+        cutoff = jnp.min(jnp.where(keep, z_desc, jnp.inf), axis=-1, keepdims=True)
+        z = jnp.where(z >= cutoff, z, -jnp.inf)
+        keys = jax.vmap(
+            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+        )(seed, pos)
+        g = jax.vmap(lambda key: jax.random.gumbel(key, (vp,)))(keys)
+        tok = jnp.argmax(z + g, axis=-1).astype(jnp.int32)
+        return jnp.where(temperature > 0, tok, greedy)
+
+    return jax.lax.cond(
+        jnp.any(temperature > 0), _sampled, lambda _: greedy, operand=None
+    )
+
+
+# ---------------------------------------------------------------------------------
 # SSD scan
 # ---------------------------------------------------------------------------------
 def ssd_jnp(

@@ -643,7 +643,7 @@ class Model:
                           block_tables: jax.Array, context_lens: jax.Array, *,
                           shard: Sharder = NULL_SHARDER, attn_impl: str = "auto",
                           kv_spec=None, write_tables=None, n_new=None,
-                          last_index=None):
+                          last_index=None, active=None):
         """The MIXED serving step: decode rows and prefill chunks are the same
         computation at different widths.
 
@@ -665,9 +665,19 @@ class Model:
         position when the chunk completes a prefill). Decode is the C == 1
         degenerate case; the split exists so decode keeps its one-token
         scatter-append (with the CoW contract) while chunks scatter whole
-        pages."""
+        pages.
+
+        ``active`` (B,) int32/bool — decode path only — is the phase bitmap:
+        rows with active == 0 (PREFILLING or empty slots in a mixed step) have
+        their table row and length nulled ON DEVICE, so their lockstep write
+        lands in the null page and the host never copies/patches the full
+        tables to mask them. The engine's device-resident table/len mirrors
+        stay untouched."""
         cfg = self.cfg
         chunk = tokens.ndim == 2
+        if active is not None and not chunk:
+            block_tables = jnp.where(active[:, None] > 0, block_tables, 0)
+            context_lens = jnp.where(active > 0, context_lens, 0)
         x = apply_embed(params["embed"], tokens if chunk else tokens[:, None])
         if cfg.family == "hybrid":
             x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)

@@ -1,3 +1,17 @@
-from .step import make_paged_serve_step, make_prefill, make_serve_step
+from .sampling import GREEDY, SamplingParams, stream_seed
+from .step import (
+    make_paged_serve_multistep,
+    make_paged_serve_step,
+    make_prefill,
+    make_serve_step,
+)
 
-__all__ = ["make_paged_serve_step", "make_prefill", "make_serve_step"]
+__all__ = [
+    "GREEDY",
+    "SamplingParams",
+    "make_paged_serve_multistep",
+    "make_paged_serve_step",
+    "make_prefill",
+    "make_serve_step",
+    "stream_seed",
+]

@@ -5,6 +5,8 @@
     results = engine.run()          # rid -> RequestState (tokens in .generated)
     print(engine.metrics())         # tokens/sec, p50/p99 latency, preemptions
 """
+from repro.serving.sampling import GREEDY, SamplingParams
+
 from .cache import PagedKVCache
 from .engine import EngineConfig, ServeEngine, aligned_max_logit_err
 from .kvquant import KV_DTYPES, PagedQuantSpec
@@ -21,6 +23,8 @@ from .scheduler import Scheduler, SchedulerConfig
 __all__ = [
     "DECODING",
     "EngineConfig",
+    "GREEDY",
+    "SamplingParams",
     "aligned_max_logit_err",
     "KV_DTYPES",
     "PagedQuantSpec",

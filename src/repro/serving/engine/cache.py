@@ -66,6 +66,23 @@ def _copy_page(pool, src, dst):
 _copy_page = jax.jit(_copy_page, donate_argnums=(0,))
 
 
+def _patch_slot(tables, lens, patch):
+    """Patch ONE slot of the device-resident table/len mirrors (the allocator
+    event delta). ``patch`` is a single packed (2 + max_pages,) int32 vector
+    [slot, len, row...] — one device_put per event (a put costs ~1ms on this
+    backend regardless of size, so the delta travels as one array, not
+    three). The slot index is traced, so every event shares one compile and
+    the old buffers are donated in place. This is how allocation / CoW /
+    preemption reach the device — a row-sized upload, never the whole table."""
+    slot = patch[0]
+    tables = jax.lax.dynamic_update_slice(tables, patch[None, 2:], (slot, 0))
+    lens = jax.lax.dynamic_update_slice(lens, patch[1:2], (slot,))
+    return tables, lens
+
+
+_patch_slot = jax.jit(_patch_slot, donate_argnums=(0, 1))
+
+
 class PagedKVCache:
     def __init__(self, model, *, num_pages: int, page_size: int, max_batch: int,
                  max_pages_per_seq: int, prefix_sharing: bool = True,
@@ -97,6 +114,23 @@ class PagedKVCache:
         # block-table rows + live lengths, indexed by batch slot (null-page filled)
         self.tables = np.zeros((max_batch, max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_batch,), np.int32)
+        # device-resident mirrors of tables/lens — the persistent LayoutPaged
+        # index->offset state, living beside the pool it indexes. Allocator
+        # events (allocate/append/CoW/free/set_len) mark their slot dirty;
+        # device_state() patches exactly those rows (dynamic_update_slice
+        # deltas) before the next step instead of re-uploading whole arrays.
+        # Routine decode appends never touch this path: the fused serve step
+        # advances the device lens itself and adopt_lens_device() takes over
+        # its (donated) output.
+        self._tables_dev = jnp.asarray(self.tables)
+        self._lens_dev = jnp.asarray(self.lens)
+        self._dirty_slots: set = set()
+        # warm the event-patch compile now (a no-op patch of slot 0) so the
+        # first allocator event inside a measured run never pays it
+        self._tables_dev, self._lens_dev = _patch_slot(
+            self._tables_dev, self._lens_dev,
+            jnp.asarray(np.zeros(2 + max_pages_per_seq, np.int32)),
+        )
         self.pages_of: Dict[int, List[int]] = {}
         # per-page refcounts (ref[0] stays 0: the null page is never allocated)
         self.ref = np.zeros((num_pages,), np.int32)
@@ -201,6 +235,7 @@ class PagedKVCache:
         self._shared_upto[slot] = len(shared)
         self.tables[slot, :] = 0
         self.tables[slot, : len(pages)] = pages
+        self._dirty_slots.add(slot)
         return pages
 
     def _register(self, keys: List[tuple], pages: List[int], start: int) -> None:
@@ -263,6 +298,7 @@ class PagedKVCache:
         p = self._take_free()
         pages.append(p)
         self.tables[slot, len(pages) - 1] = p
+        self._dirty_slots.add(slot)
         return True
 
     def _release_page(self, p: int) -> None:
@@ -286,6 +322,49 @@ class PagedKVCache:
         self._published.pop(slot, None)
         self.tables[slot, :] = 0
         self.lens[slot] = 0
+        self._dirty_slots.add(slot)
+
+    # -- device-resident layout state ---------------------------------------------
+    def set_len(self, slot: int, n: int) -> None:
+        """Host-side length assignment (admission, chunk landings, prefill
+        completion) — an allocator EVENT, so the slot is marked for a device
+        patch. Routine decode appends go through bump_len instead."""
+        self.lens[slot] = n
+        self._dirty_slots.add(slot)
+
+    def bump_len(self, slot: int, n: int = 1) -> None:
+        """Advance the host lens mirror after a decode step appended ``n``
+        tokens. NO dirty mark: the fused serve step already advanced the
+        device-resident lens itself (adopt_lens_device took its output), so
+        patching here would be a redundant upload."""
+        self.lens[slot] += n
+
+    def device_state(self) -> Tuple[jax.Array, jax.Array]:
+        """The device-resident (tables, lens) mirrors, with pending allocator
+        events applied as per-slot dynamic_update_slice patches (one compile,
+        row-sized uploads). When an event storm touched most of the batch —
+        bursts of admissions, cascading preemptions — one whole-array upload
+        is cheaper than row-by-row patching and resets the delta stream."""
+        if self._dirty_slots:
+            if len(self._dirty_slots) > max(1, self.max_batch // 2):
+                self._tables_dev = jnp.asarray(self.tables)
+                self._lens_dev = jnp.asarray(self.lens)
+            else:
+                for s in sorted(self._dirty_slots):
+                    patch = np.empty(2 + self.max_pages_per_seq, np.int32)
+                    patch[0], patch[1] = s, self.lens[s]
+                    patch[2:] = self.tables[s]
+                    self._tables_dev, self._lens_dev = _patch_slot(
+                        self._tables_dev, self._lens_dev, jnp.asarray(patch)
+                    )
+            self._dirty_slots.clear()
+        return self._tables_dev, self._lens_dev
+
+    def adopt_lens_device(self, lens_dev: jax.Array) -> None:
+        """Take over the serve step's device-side lens output (the donated
+        successor of the array device_state handed out) — decode appends
+        advance the mapping state entirely on device."""
+        self._lens_dev = lens_dev
 
     # -- copy-on-write -----------------------------------------------------------
     def needs_cow(self, slot: int) -> bool:
@@ -312,6 +391,7 @@ class PagedKVCache:
         self.tables[slot, pi] = new
         self.ref[old] -= 1
         self.cow_copies += 1
+        self._dirty_slots.add(slot)
         return True
 
     # -- device writes -----------------------------------------------------------

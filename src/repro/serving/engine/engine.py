@@ -42,6 +42,18 @@ Prefill comes in two regimes:
     token ids and absolute position, so the adopted pages already hold
     exactly what this prompt's prefill would write.
 
+The decode hot path is DEVICE-RESIDENT: block tables and lengths live in
+persistent device mirrors beside the page pools (PagedKVCache.device_state —
+allocator events patch single rows, routine appends advance lengths on device),
+token selection (serving/sampling.py: greedy/temperature/top-k/top-p) is fused
+into the serve step so logits never cross to the host, and the host loop splits
+into an event-driven scheduler tick (admission, page appends, CoW, sweeping)
+and a device-loop driver (_decode_once) whose only per-token D2H traffic is the
+(B,) sampled ids. Over a scheduler-proven event-free horizon the driver runs
+``multi_step`` iterations in ONE on-device lax.scan (append -> attend ->
+sample -> feed back), amortizing dispatch over K tokens — token-exact vs K=1
+because sampling folds absolute positions, never steps or slots.
+
 Quantization (``kv_dtype`` int8/int4, kvquant.PagedQuantSpec) composes with
 both regimes: prefill chunks quantize at scatter time page-by-page with the
 same whole-page scale law as monolithic prefill. Preemption is recompute-style
@@ -59,8 +71,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
+from repro.serving.sampling import pack_slot_params, stream_seed
 from repro.serving.step import (
     make_chunked_prefill_step,
+    make_paged_serve_multistep,
     make_paged_serve_step,
     make_prefill,
 )
@@ -82,7 +97,15 @@ class EngineConfig:
     kv_dtype: str = "f32"  # "f32" | "int8" | "int4" — KV page representation
     # (kvquant.PagedQuantSpec): same pages/tables/admission, ~4x/~8x fewer bytes
     record_logits: bool = False  # keep per-step logits rows (ServeEngine.logits_of)
-    # for cross-engine accuracy audits (e.g. int8 vs f32 max-logit-error)
+    # for cross-engine accuracy audits (e.g. int8 vs f32 max-logit-error).
+    # OPT-IN SLOW PATH: the fused step normally samples on device and logits
+    # never cross to the host; recording fetches the full (B, vocab) rows each
+    # step and disables the multi-step fused loop
+    multi_step: int = 1  # fused decode horizon K: when the scheduler proves the
+    # next K steps event-free (no admission/page-append/CoW/max-token finish —
+    # Scheduler.event_free_horizon), run them as ONE on-device lax.scan loop:
+    # append -> attend -> sample -> feed back, amortizing a dispatch and a
+    # (K, B) ids fetch over K tokens. 1 = off; token-exact for any K
     chunked_prefill: bool = False  # mixed steps: page-sized prefill chunks
     # interleaved with decode instead of monolithic batch-1 prefills
     chunk_tokens: int = 0  # max tokens per prefill chunk (page multiple; 0 =
@@ -150,13 +173,52 @@ class ServeEngine:
         self.queue = RequestQueue()
         self._pending: List[RequestState] = []  # submitted, not yet arrived
         self._mesh, self._rules = mesh, rules
+        vocab = model.cfg.vocab
+        # fused step: sample on device, advance lens on device; donate the page
+        # pools, the fed-back token vector and the lens mirror so the step
+        # mutates them in place. Tables are NOT donated — the device mirror is
+        # persistent and only patched by allocator events (cache.device_state).
         self._step = jax.jit(
             make_paged_serve_step(
                 model, mesh, rules, attn_impl=config.attn_impl,
-                kv_spec=self.cache.kv_spec,
+                kv_spec=self.cache.kv_spec, vocab=vocab,
             ),
-            donate_argnums=(1,),
+            donate_argnums=(1, 2, 4),
         )
+        # multi-step fused loop (one compile: only exactly-K windows fuse).
+        # record_logits needs per-step rows on the host, so it forces K = 1.
+        self._k = 1 if config.record_logits else max(1, int(config.multi_step))
+        if self._k > 1:
+            self._multistep = jax.jit(
+                make_paged_serve_multistep(
+                    model, self._k, mesh, rules, attn_impl=config.attn_impl,
+                    kv_spec=self.cache.kv_spec, vocab=vocab,
+                ),
+                donate_argnums=(1, 2, 4),
+            )
+        # single-row sampler for prefill first tokens: the (vocab,) logits row
+        # stays on device; only the chosen id crosses to the host. Policy rides
+        # in two packed vectors (f32 [temp, top_p], i32 [top_k, seed-bits,
+        # pos]) — two device_puts per prefill token, not five scalar ones
+        self._sample_row = jax.jit(
+            lambda row, f, i: ops.sample_tokens(
+                row[None], f[0:1], i[0:1], f[1:2],
+                i[1:2].astype(jnp.uint32), i[2:3], vocab=vocab,
+            )[0]
+        )
+        # per-slot device vectors for the fused step: fed-back tokens + the
+        # packed policy/phase arrays (slot_f32 (2, B): temperature, top_p;
+        # slot_i32 (3, B): active bitmap, top_k, seed-bits). Rebuilt — three
+        # small uploads — only when slot composition changes; in steady state
+        # the previous step's device outputs flow straight back in.
+        self._tokens_dev = jnp.zeros((config.max_batch,), jnp.int32)
+        f32p, i32p = pack_slot_params({}, config.max_batch)
+        self._slot_f32 = jnp.asarray(f32p)
+        self._slot_i32 = jnp.asarray(
+            np.vstack([np.zeros((1, config.max_batch), np.int32), i32p])
+        )
+        self._slots_stale = True
+        self._slot_sig: object = None
         self._prefill_fns: Dict[int, object] = {}  # padded_len -> jitted prefill
         self._chunk_tokens = 0
         if config.chunked_prefill:
@@ -181,9 +243,13 @@ class ServeEngine:
         # Keyed by generated-token index, not step, so preemption/recompute
         # overwrites deterministically and traces align across engines.
         self.logits_of: Dict[int, Dict[int, np.ndarray]] = {}
-        self.step_times: List[float] = []
+        self.step_times: List[float] = []  # per-token device-path time (fused
+        # windows contribute time / K per token): dispatch + execute + ids D2H
+        self.host_overheads: List[float] = []  # per-token (wall - device): the
+        # scheduler tick's slot sync, bookkeeping and Python loop around the step
         self.chunk_times: List[float] = []
         self._n_decode_steps = 0
+        self._n_fused_steps = 0  # decode steps executed inside fused windows
         self._prefill_tokens_computed = 0
         self._prefill_tokens_skipped = 0
 
@@ -237,18 +303,34 @@ class ServeEngine:
                 self.params, tokens, last_index=jnp.int32(len(ctx) - 1)
             )
             self.cache.write_prefill(slot, caches)
-            self.cache.lens[slot] = len(ctx)
+            self.cache.set_len(slot, len(ctx))
             self._prefill_tokens_computed += padded
-            row = np.asarray(logits[0, 0, : self.model.cfg.vocab], np.float32)
-            self._first_token(state, row)
+            self._first_token(state, logits[0, 0])
 
-    def _first_token(self, state: RequestState, logits_row: np.ndarray) -> None:
-        """Record the token a completed prefill produced (either regime)."""
-        state.generated.append(int(np.argmax(logits_row)))
+    def _first_token(self, state: RequestState, logits_row) -> None:
+        """Sample the token a completed prefill produced (either regime), ON
+        DEVICE: ``logits_row`` is the (Vp,) device array; only the chosen id
+        crosses to the host (the full row only under record_logits). The PRNG
+        fold position is len(context) — the length of the context the token
+        extends — identical to what the decode path would fold for the same
+        token, so preemption-recompute re-samples it bit-for-bit."""
+        sp = state.request.sampling
+        seed_bits = np.uint32(
+            stream_seed(sp.seed, state.request.rid)
+        ).astype(np.int32)
+        tok = int(self._sample_row(
+            logits_row,
+            jnp.asarray(np.array([sp.temperature, sp.top_p], np.float32)),
+            jnp.asarray(np.array(
+                [sp.top_k, seed_bits, len(state.context)], np.int32
+            )),
+        ))
+        state.generated.append(tok)
+        self._slots_stale = True  # the slot's next decode input is host-known
         if self.config.record_logits:
             self.logits_of.setdefault(state.request.rid, {})[
                 len(state.generated) - 1
-            ] = logits_row
+            ] = np.asarray(logits_row[: self.model.cfg.vocab], np.float32)
         if state.first_token_time is None:
             state.first_token_time = time.perf_counter() - self._t0
 
@@ -268,7 +350,7 @@ class ServeEngine:
                 adopted = self.cache.adopted_pages(slot)
                 skip = min(adopted * ps, ((n_ctx - 1) // ps) * ps)
             state.chunk_cursor = skip
-            self.cache.lens[slot] = skip
+            self.cache.set_len(slot, skip)
             self._prefill_tokens_skipped += skip
 
     def _prefill_chunks(self, now: float) -> None:
@@ -341,62 +423,112 @@ class ServeEngine:
             self._prefill_tokens_computed += c_real
             if cursor + c_real >= n_ctx:  # this chunk covered the last position
                 state.chunk_cursor = None
-                self.cache.lens[slot] = n_ctx
+                self.cache.set_len(slot, n_ctx)
                 self.cache.publish_prefix(slot)
-                row = np.asarray(logits[0, : self.model.cfg.vocab], np.float32)
-                self._first_token(state, row)
+                self._first_token(state, logits[0])
             else:
                 state.chunk_cursor = cursor + c_real
-                self.cache.lens[slot] = cursor + c_real
+                self.cache.set_len(slot, cursor + c_real)
                 # pages behind the new cursor are final: publish them so a
                 # same-prefix arrival can adopt (and compute-skip) mid-prefill
                 self.cache.publish_prefix(slot, (cursor + c_real) // ps)
 
-    # -- decode path ------------------------------------------------------------
-    def _decode_once(self, now: float) -> None:
-        """One batched decode step for every DECODING slot. PREFILLING slots
-        (mixed steps only) are masked to the null row — table 0, length 0,
-        token 0 — so their lockstep write lands in the null page and their
-        logits row is discarded; the compiled shape never changes."""
+    # -- decode path (the device-loop driver) -------------------------------------
+    def _sync_slot_state(self) -> None:
+        """Re-upload the per-slot device vectors — fed-back tokens + the two
+        packed policy/phase arrays — ONLY when slot composition changed
+        (admission, finish, preemption, a prefill completing). In steady-state
+        decode the previous step's sampled tokens ARE the next inputs and flow
+        back as device arrays: the step's only recurring H2D traffic is zero
+        and its only D2H traffic is the (B,) sampled ids."""
         running = self.scheduler.running
+        sig = tuple(
+            (slot, st.request.rid, st.phase) for slot, st in sorted(running.items())
+        )
+        if not self._slots_stale and sig == self._slot_sig:
+            return
         b = self.config.max_batch
         tokens = np.zeros((b,), np.int32)
-        tables = self.cache.tables
-        lens = self.cache.lens
+        active = np.zeros((1, b), np.int32)
         decoding = {}
-        masked = False
         for slot, state in running.items():
             if state.phase == DECODING:
                 tokens[slot] = state.generated[-1]
+                active[0, slot] = 1
                 decoding[slot] = state
-            else:
-                masked = True
-        if masked:
-            tables = tables.copy()
-            lens = lens.copy()
-            for slot, state in running.items():
-                if state.phase != DECODING:
-                    tables[slot] = 0
-                    lens[slot] = 0
+        f32p, i32p = pack_slot_params(decoding, b)
+        self._tokens_dev = jnp.asarray(tokens)
+        self._slot_f32 = jnp.asarray(f32p)
+        self._slot_i32 = jnp.asarray(np.vstack([active, i32p]))
+        self._slots_stale = False
+        self._slot_sig = sig
+
+    def _fused_k(self, now: float) -> int:
+        """How many decode steps to run in one device dispatch: K when the
+        scheduler proves the horizon event-free AND no pending arrival lands
+        inside it (estimated from the last measured step), else 1."""
+        if self._k <= 1:
+            return 1
+        if self.scheduler.event_free_horizon(self.queue) < self._k:
+            return 1
+        if self._pending:
+            est = self.step_times[-1] if self.step_times else 2e-3
+            if self._pending[0].request.arrival_time <= now + self._k * est:
+                return 1
+        return self._k
+
+    def _decode_once(self, now: float) -> None:
+        """One device dispatch of the decode hot path: a single fused step, or
+        a K-step on-device loop over an event-free horizon. PREFILLING slots
+        (mixed steps only) are masked ON DEVICE via the phase bitmap — table
+        row and length null-routed inside the step — so the host never copies
+        or re-uploads tables to mask them; the compiled shape never changes.
+        Tokens are sampled on device; the only per-token D2H traffic is the
+        sampled ids ((B,) per step, (K, B) per fused window)."""
+        running = self.scheduler.running
+        decoding = {s: st for s, st in running.items() if st.phase == DECODING}
+        wall0 = time.perf_counter()
+        k = self._fused_k(now)
+        self._sync_slot_state()
+        tables, lens = self.cache.device_state()
+        record = self.config.record_logits
         t0 = time.perf_counter()
-        logits, pools = self._step(
-            self.params,
-            self.cache.pools,
-            jnp.asarray(tokens),
-            jnp.asarray(tables),
-            jnp.asarray(lens),
-        )
+        if k > 1:
+            toks, last, new_lens, pools = self._multistep(
+                self.params, self.cache.pools, self._tokens_dev, tables, lens,
+                self._slot_f32, self._slot_i32,
+            )
+            ids = np.asarray(toks)  # (K, B) — the fused window's only D2H
+            logits_rows = None
+            self._n_fused_steps += k
+        else:
+            last, logits, new_lens, pools = self._step(
+                self.params, self.cache.pools, self._tokens_dev, tables, lens,
+                self._slot_f32, self._slot_i32,
+            )
+            ids = np.asarray(last)[None]  # (1, B)
+            logits_rows = (
+                np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
+                if record else None
+            )
+        t_dev = time.perf_counter() - t0
         self.cache.pools = pools
-        logits = np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
-        self.step_times.append(time.perf_counter() - t0)
-        self._n_decode_steps += 1
-        for slot, state in decoding.items():
-            state.generated.append(int(np.argmax(logits[slot])))
-            if self.config.record_logits:
-                self.logits_of.setdefault(state.request.rid, {})[
-                    len(state.generated) - 1
-                ] = logits[slot].copy()
-            self.cache.lens[slot] += 1
+        self.cache.adopt_lens_device(new_lens)
+        self._tokens_dev = last
+        self.step_times.extend([t_dev / k] * k)
+        self._n_decode_steps += k
+        for i in range(k):
+            for slot, state in decoding.items():
+                if state.done:
+                    continue  # finished mid-window (EOS): overrun ids discarded
+                state.generated.append(int(ids[i, slot]))
+                self.cache.bump_len(slot)
+                if logits_rows is not None:
+                    self.logits_of.setdefault(state.request.rid, {})[
+                        len(state.generated) - 1
+                    ] = logits_rows[slot].copy()
+        wall = time.perf_counter() - wall0
+        self.host_overheads.append((wall - t_dev) / k)
 
     def _sweep_finished(self) -> None:
         for slot in list(self.scheduler.running):
@@ -464,8 +596,10 @@ class ServeEngine:
         self.results = {}
         self.logits_of = {}
         self.step_times = []
+        self.host_overheads = []
         self.chunk_times = []
         self._n_decode_steps = 0
+        self._n_fused_steps = 0
         self._prefill_tokens_computed = 0
         self._prefill_tokens_skipped = 0
         self.cache.reset_stats()
@@ -489,7 +623,15 @@ class ServeEngine:
             "wall_s": float(wall),
             "tokens_per_s": float(n_tok / wall) if wall > 0 else float("inf"),
             "decode_steps": self._n_decode_steps,
+            "fused_steps": self._n_fused_steps,
             "step_ms_p50": float(np.percentile(self.step_times, 50) * 1e3) if self.step_times else 0.0,
+            # device-path tail + the host-vs-device breakdown: step_ms_* times
+            # dispatch + device execute + the (B,)/(K, B) ids fetch per token;
+            # host_overhead_ms_p50 is the wall-clock the host loop adds around
+            # it (slot sync, scheduler bookkeeping) — what the device-resident
+            # refactor squeezed out, and what the bench's breakdown proves
+            "step_ms_p95": float(np.percentile(self.step_times, 95) * 1e3) if self.step_times else 0.0,
+            "host_overhead_ms_p50": float(np.percentile(self.host_overheads, 50) * 1e3) if self.host_overheads else 0.0,
             "chunk_ms_p50": float(np.percentile(self.chunk_times, 50) * 1e3) if self.chunk_times else 0.0,
             "latency_s_p50": float(np.percentile(e2e, 50)),
             "latency_s_p99": float(np.percentile(e2e, 99)),

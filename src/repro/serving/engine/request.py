@@ -5,6 +5,8 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional, Sequence, Tuple
 
+from repro.serving.sampling import GREEDY, SamplingParams
+
 
 def page_hash_chain(tokens: Sequence[int], page_size: int) -> List[Tuple]:
     """Chain hashes of page-granular token chunks — the prefix-sharing keys.
@@ -39,6 +41,9 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0
     eos_id: Optional[int] = None
+    # token-selection policy, executed on device inside the fused serve step
+    # (serving/sampling.py). Default: greedy argmax — the exact-match oracle.
+    sampling: SamplingParams = GREEDY
 
     def __post_init__(self):
         self.prompt = [int(t) for t in self.prompt]
@@ -46,6 +51,8 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.sampling is None:
+            self.sampling = GREEDY
 
 
 # RequestState.phase values — the mixed-step lifecycle. QUEUED -> PREFILLING

@@ -25,7 +25,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from .cache import PagedKVCache
-from .request import RequestQueue, RequestState
+from .request import DECODING, RequestQueue, RequestState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +161,33 @@ class Scheduler:
                     "KV pool exhausted while copy-on-write needed a page — "
                     "num_pages is too small for this request"
                 )
+
+    # -- fused-decode horizon --------------------------------------------------------
+    def event_free_horizon(self, queue: RequestQueue) -> int:
+        """Largest K such that the next K decode steps provably need NO
+        scheduler intervention — the precondition for running them as one
+        on-device fused loop (make_paged_serve_multistep). A pure function of
+        host-mirrored state: no admission (queue must be empty — free pages
+        only shrink during decode, so nothing unadmittable becomes admittable
+        mid-horizon), every slot DECODING, no CoW pending, and per slot at
+        least K tokens of both owned page capacity (no page-boundary append)
+        and max_new_tokens budget (no max-token finish). EOS finishes are NOT
+        predictable; a fused window may overrun an EOS by up to K-1 tokens —
+        the driver discards them, and the overrun writes stay inside the
+        slot's owned pages because K never exceeds its remaining capacity."""
+        if queue or not self.running:
+            return 0
+        k = 1 << 30
+        for slot, state in self.running.items():
+            if state.phase != DECODING or self.cache.needs_cow(slot):
+                return 0
+            capacity = (
+                len(self.cache.pages_of[slot]) * self.cache.page_size
+                - int(self.cache.lens[slot])
+            )
+            remaining = state.request.max_new_tokens - len(state.generated)
+            k = min(k, capacity, remaining)
+        return max(k, 0)
 
     def finish(self, slot: int) -> RequestState:
         state = self.running.pop(slot)

@@ -1,0 +1,92 @@
+"""SamplingParams: per-request token-selection policy, executed ON DEVICE.
+
+The engine's decode hot path fuses token selection into the serve step
+(serving/step.py): logits are produced, filtered and sampled without ever
+leaving the device, and the only per-token D2H traffic is the (B,) chosen ids.
+This module is the host-side half of that contract — the per-request policy
+record plus the packing helpers that turn a batch slot's policies into the
+(B,) device vectors ``ops.sample_tokens`` consumes.
+
+Reproducibility contract (what the tests pin down):
+  - greedy (temperature 0) equals host ``np.argmax`` over the same logits row,
+    bit-for-bit — the on-device path is not allowed to drift from the oracle;
+  - a sampled request is a pure function of (seed, rid, position): replaying
+    the same trace through any engine — different batch composition, different
+    chunking, preempted and recomputed — yields the same tokens, because the
+    PRNG key folds the absolute position, never the step count or slot id;
+  - multi-step fused decode (EngineConfig.multi_step) samples inside the
+    on-device loop with the same fold, so K>1 is token-exact vs K=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into a token (all selection on device).
+
+    temperature 0 = greedy argmax (the default, and the exact-match oracle all
+    engine-vs-engine tests rely on). temperature > 0 samples from the
+    temperature-scaled distribution after the optional top_k (keep the k
+    largest logits; 0 = off) and top_p (keep the smallest head of the
+    distribution reaching mass top_p; 1.0 = off) filters. ``seed`` names the
+    request's PRNG stream; the effective stream also folds the request id
+    (``stream_seed``) so same-seed concurrent requests draw independently.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def stream_seed(seed: int, rid: int) -> int:
+    """The per-request PRNG stream id: the user seed mixed with the request id
+    (golden-ratio multiply, uint32 wraparound) so concurrent requests sharing a
+    seed draw independent streams. A pure function of (seed, rid) — stable
+    across runs, engines, batch slots, and preemption-recompute."""
+    return (int(seed) ^ ((int(rid) * 0x9E3779B9) & 0xFFFFFFFF)) & 0xFFFFFFFF
+
+
+def pack_slot_params(states_by_slot, max_batch: int):
+    """Flatten the running slots' SamplingParams into the TWO packed host
+    arrays the fused serve step consumes (a device_put costs ~1ms on this
+    backend regardless of size, so the engine uploads two arrays per
+    slot-composition change, never one per field):
+
+      f32 (2, B): [temperature, top_p]
+      i32 (2, B): [top_k, seed-bits] — the uint32 stream seed reinterpreted
+      as int32 (two's complement; the step casts back, bit-identical)
+
+    Inactive slots keep greedy defaults — they are masked out of the step
+    anyway (the engine prepends its phase bitmap as the i32 pack's row 0)."""
+    f32 = np.zeros((2, max_batch), np.float32)
+    f32[1] = 1.0  # top_p off
+    i32 = np.zeros((2, max_batch), np.int32)
+    for slot, state in states_by_slot.items():
+        sp = state.request.sampling
+        f32[0, slot] = sp.temperature
+        f32[1, slot] = sp.top_p
+        i32[0, slot] = sp.top_k
+        i32[1, slot] = np.uint32(
+            stream_seed(sp.seed, state.request.rid)
+        ).astype(np.int32)
+    return f32, i32

@@ -1,6 +1,20 @@
-"""serve_step / prefill factories (batched decode against sharded KV caches)."""
+"""serve_step / prefill factories (batched decode against sharded KV caches).
+
+The paged factories implement the DEVICE-RESIDENT decode hot path: token
+selection (serving/sampling.py policies via ops.sample_tokens) is fused into
+the step so logits never leave the device, the per-slot lengths advance on
+device (the step returns ``context_lens + active`` for the engine to adopt as
+its persistent mirror), and ``make_paged_serve_multistep`` runs K such
+iterations in one on-device ``lax.scan`` — the sampled token feeds straight
+back into the next embedding lookup, amortizing one dispatch and one (K, B)
+ids transfer over K generated tokens.
+"""
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
 from repro.models.layers import Sharder
 
 
@@ -14,27 +28,105 @@ def make_serve_step(model, mesh=None, rules=None):
     return serve_step
 
 
-def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto", kv_spec=None):
+def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
+                  tokens, block_tables, context_lens, slot_f32, slot_i32):
+    """One fused decode iteration: append -> attend -> sample, all on device.
+
+    The per-slot policy rides in TWO packed vectors (device_put on this
+    backend costs ~1ms per array regardless of size, so the engine uploads
+    exactly two on a slot-composition change, never six):
+      slot_f32 (2, B) f32: [temperature, top_p]
+      slot_i32 (3, B) i32: [active, top_k, seed-bits (uint32 reinterpreted)]
+    ``active`` is the phase bitmap (masked slots null-route on device — see
+    decode_step_paged); the sampled position folds ``context_lens + 1``, the
+    length of the context the new token extends, so sampling is invariant
+    under preemption-recompute and batch recomposition. Returns
+    (next_tokens (B,) i32, logits (B, Vp), new_lens (B,) i32, caches).
+    """
+    active = slot_i32[0]
+    logits, caches = model.decode_step_paged(
+        params, caches, tokens, block_tables, context_lens,
+        shard=shard, attn_impl=attn_impl, kv_spec=kv_spec, active=active,
+    )
+    nxt = ops.sample_tokens(
+        logits, slot_f32[0], slot_i32[1], slot_f32[1],
+        slot_i32[2].astype(jnp.uint32),  # i32 -> u32 wraps: bit-identical
+        context_lens + 1, vocab=vocab,
+    )
+    new_lens = context_lens + jnp.where(active > 0, 1, 0).astype(context_lens.dtype)
+    return nxt, logits, new_lens, caches
+
+
+def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
+                          kv_spec=None, vocab=None):
     shard = Sharder(mesh, rules)
 
-    def paged_serve_step(params, caches, tokens, block_tables, context_lens):
-        """tokens: (B,) int32; block_tables: (B, max_pages) int32; context_lens:
-        (B,) int32 per-sequence positions -> (logits (B, Vp), new page pools).
+    if vocab is None:
+        # legacy unfused step: logits come back to the host (kept for external
+        # callers and as the reference semantics the fused path must reproduce)
+        def paged_serve_step(params, caches, tokens, block_tables, context_lens):
+            """tokens: (B,) int32; block_tables: (B, max_pages) int32;
+            context_lens: (B,) int32 per-sequence positions -> (logits (B, Vp),
+            new page pools). Each row scatters its token's KV at page
+            block_tables[b, lens[b]//ps], slot lens[b] % ps; the caller must
+            have made every targeted page private (CoW on the host) first."""
+            return model.decode_step_paged(
+                params, caches, tokens, block_tables, context_lens,
+                shard=shard, attn_impl=attn_impl, kv_spec=kv_spec,
+            )
 
-        Each row scatters its token's KV at page block_tables[b, lens[b]//ps],
-        slot lens[b] % ps. The caller (Scheduler.ensure_decode_page) must have
-        made every targeted page private (refcount 1) first: under prefix
-        sharing a block-table entry may alias a page other sequences read, and
-        this step writes unconditionally — copy-on-write happens on the host
-        BEFORE the tables are handed to the device step. ``kv_spec``
-        (PagedQuantSpec) selects quantized {q, scale} pools; the write then
-        quantizes at scatter time and attention dequantizes in-kernel."""
-        return model.decode_step_paged(
-            params, caches, tokens, block_tables, context_lens,
-            shard=shard, attn_impl=attn_impl, kv_spec=kv_spec,
+        return paged_serve_step
+
+    def fused_serve_step(params, caches, tokens, block_tables, context_lens,
+                         slot_f32, slot_i32):
+        """The device-resident decode step: one batched token per active slot,
+        SAMPLED on device (greedy/temperature/top-k/top-p per slot, packed in
+        slot_f32/slot_i32 — see _fused_decode). The only per-token D2H traffic
+        is the (B,) next_tokens output; logits are returned for the opt-in
+        record_logits slow path and cost nothing when the host never fetches
+        them. ``context_lens`` is the engine's device-resident lens mirror
+        (donated); ``new_lens`` is its successor — the LayoutPaged
+        index->offset state advances beside the pool it indexes, no host
+        round-trip."""
+        return _fused_decode(
+            model, shard, attn_impl, kv_spec, vocab, params, caches,
+            tokens, block_tables, context_lens, slot_f32, slot_i32,
         )
 
-    return paged_serve_step
+    return fused_serve_step
+
+
+def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
+                               attn_impl="auto", kv_spec=None, vocab=None):
+    """K fused decode iterations in one on-device loop (jax.lax.scan).
+
+    Legal only over an event-free horizon (Scheduler.event_free_horizon): no
+    admission, no page-boundary crossing past owned capacity, no CoW, no
+    max-token finish within K — so the loop body never needs the host. Each
+    iteration appends the current token's KV, attends, samples, and feeds the
+    sampled token into the next iteration's embedding lookup; lengths advance
+    on device. Returns (tokens_per_step (K, B) i32, last_tokens (B,),
+    new_lens (B,), caches) — one dispatch and one (K, B) ids fetch per K
+    generated tokens.
+    """
+    shard = Sharder(mesh, rules)
+
+    def fused_multistep(params, caches, tokens, block_tables, context_lens,
+                        slot_f32, slot_i32):
+        def body(carry, _):
+            toks, lens, cs = carry
+            nxt, _, new_lens, cs = _fused_decode(
+                model, shard, attn_impl, kv_spec, vocab, params, cs,
+                toks, block_tables, lens, slot_f32, slot_i32,
+            )
+            return (nxt, new_lens, cs), nxt
+
+        (last, new_lens, caches), toks = jax.lax.scan(
+            body, (tokens, context_lens, caches), None, length=k_steps
+        )
+        return toks, last, new_lens, caches
+
+    return fused_multistep
 
 
 def make_chunked_prefill_step(model, mesh=None, rules=None, attn_impl="auto",
