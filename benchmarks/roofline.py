@@ -27,6 +27,46 @@ ICI_BW = 50e9  # B/s / link
 
 ARTI = Path("artifacts/dryrun")
 
+# element bytes per KV pool entry, by EngineConfig.kv_dtype; quantized pools
+# add one f32 scale per (page, kv head) on top of the payload
+_KV_ELT_BYTES = {"f32": 4.0, "int8": 1.0, "int4": 0.5}
+
+
+def paged_decode_analytic_bytes(
+    context_lens,
+    *,
+    page_size: int,
+    n_kv_heads: int,
+    head_dim: int,
+    kv_dtype: str = "f32",
+) -> int:
+    """Analytic KV-pool bytes one paged-decode step must move.
+
+    The kernel DMAs whole pages and skips pages wholly past a sequence's
+    length (`pl.when(j * page_size < seq_len)`), so per sequence the traffic
+    is ceil(len / page_size) pages × page_size × Hkv × D elements, twice (K
+    and V). Quantized pools move intN payload plus one f32 scale per (page,
+    head) per pool. This is the model core.instrument's CountingAccessor
+    must agree with (tests pin ±10% for f32 and int8): the counted twin reads
+    the same live pages through the flat-codomain accessor, so the two derive
+    the same traffic from opposite ends — formula vs measurement.
+    """
+    if kv_dtype not in _KV_ELT_BYTES:
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in {sorted(_KV_ELT_BYTES)}")
+    elt = _KV_ELT_BYTES[kv_dtype]
+    total = 0.0
+    for n_tok in context_lens:
+        n_tok = int(n_tok)
+        if n_tok <= 0:
+            continue
+        live_pages = -(-n_tok // page_size)
+        payload = live_pages * page_size * n_kv_heads * head_dim * elt
+        scales = (
+            live_pages * n_kv_heads * 4 if kv_dtype in ("int8", "int4") else 0
+        )
+        total += 2 * (payload + scales)  # K pool + V pool
+    return int(total)
+
 
 def model_flops(rec: dict, shape) -> float:
     """Analytic 'useful' flops per step per CHIP."""

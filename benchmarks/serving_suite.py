@@ -44,6 +44,16 @@ temperature/top-k/top-p twice and asserts seeded reproducibility. Every
 point's step timing now also carries step_ms_p95 + host_overhead_ms_p50 —
 the breakdown the CI perf-ratchet uploads.
 
+A sixth section is TELEMETRY: the steady-decode trace replayed through a
+trace=off and a trace=on engine (same config otherwise). Records
+step_ms_p50 for both and the overhead percentage — the "zero-overhead when
+off, near-zero when on" claim the CI gate pins (trace=on p50 within 5% of
+trace=off) — plus token-exactness between the two. The trace=on engine's
+lifecycle trace is exported to ``artifacts/serving_trace.json`` as Chrome
+trace-event JSON (open in Perfetto / chrome://tracing), schema-validated
+in-process, and the per-event-name counts are reported so the trace can be
+cross-checked against the engine's own metrics counters.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke --kv-dtype int8
@@ -60,9 +70,11 @@ import numpy as np
 from repro.models import ModelConfig, Model
 from repro.serving.engine import (
     EngineConfig, Request, SamplingParams, ServeEngine, aligned_max_logit_err,
+    validate_chrome_trace,
 )
 
 OUT_PATH = Path("BENCH_serving.json")
+TRACE_PATH = Path("artifacts/serving_trace.json")  # gitignored; CI uploads it
 SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # COMMITTED: the CI
 # perf-ratchet baseline (bench-smoke fails on step_ms_p50 +20% / tokens_per_s
 # -10% vs this file). Smoke runs still never clobber the full-size cross-PR
@@ -478,6 +490,70 @@ def run_steady_decode(model, params, vocab: int, n_new: int, ks) -> dict:
     return section
 
 
+def run_telemetry(model, params, vocab: int, n_new: int) -> dict:
+    """The steady-decode trace through a trace=off and a trace=on engine.
+
+    The off/on step_ms_p50 pair is the overhead claim (trace events are
+    host-side appends to a preallocated ring — no device work, no extra D2H);
+    the trace=on engine's lifecycle trace is exported as Chrome trace-event
+    JSON, schema-validated, and summarized as per-name event counts."""
+    make = lambda: [
+        Request(
+            rid=i,
+            prompt=np.random.default_rng(90 + i).integers(
+                0, vocab, size=STEADY_PROMPT_LEN
+            ).tolist(),
+            max_new_tokens=n_new,
+        )
+        for i in range(STEADY_MAX_BATCH)
+    ]
+    conf = EngineConfig.sized_for(
+        STEADY_PROMPT_LEN + n_new + 1, page_size=STEADY_PAGE_SIZE,
+        max_batch=STEADY_MAX_BATCH, multi_step=4,
+    )
+    stats, outputs, trace_info = {}, {}, {}
+    for mode, tr in (("trace_off", False), ("trace_on", True)):
+        eng = ServeEngine(model, params, dataclasses.replace(conf, trace=tr))
+        eng.run(make())  # rehearsal: compile, warm pools
+        eng.reset_metrics()  # also clears rehearsal trace events
+        results = eng.run(make())
+        outputs[mode] = {rid: s.generated for rid, s in results.items()}
+        stats[mode] = eng.metrics()
+        if tr:
+            chrome = eng.trace.to_chrome()
+            validate_chrome_trace(chrome)
+            TRACE_PATH.parent.mkdir(exist_ok=True)
+            eng.trace.export(TRACE_PATH)
+            counts = {}
+            for ev in eng.trace.events:
+                if ev.ph in ("i", "B"):  # count spans once (by their begin)
+                    counts[ev.name] = counts.get(ev.name, 0) + 1
+            trace_info = {
+                "trace_path": str(TRACE_PATH),
+                "trace_events": len(chrome["traceEvents"]),
+                "events_dropped": eng.trace.dropped,
+                "event_counts": counts,
+                "validated": True,
+            }
+    off_p50 = stats["trace_off"]["step_ms_p50"]
+    on_p50 = stats["trace_on"]["step_ms_p50"]
+    return {
+        "prompt_len": STEADY_PROMPT_LEN,
+        "new_tokens": n_new,
+        "max_batch": STEADY_MAX_BATCH,
+        "multi_step": 4,
+        "step_ms_p50_trace_off": off_p50,
+        "step_ms_p50_trace_on": on_p50,
+        "trace_overhead_pct": round(
+            100.0 * (on_p50 - off_p50) / max(off_p50, 1e-9), 2
+        ),
+        "tokens_per_s_trace_off": stats["trace_off"]["tokens_per_s"],
+        "tokens_per_s_trace_on": stats["trace_on"]["tokens_per_s"],
+        "tokens_exact": outputs["trace_off"] == outputs["trace_on"],
+        **trace_info,
+    }
+
+
 def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> dict:
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
@@ -533,6 +609,15 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
         + f" (K={k_last} {sd['ks'][k_last]['step_speedup_x_vs_k1']}x vs K=1),"
         f" exact_across_ks={sd['tokens_exact_across_ks']}"
         f" sampled_reproducible={sd['sampled']['reproducible']}"
+    )
+    tel = run_telemetry(model, params, cfg.vocab, n_new=16 if smoke else 32)
+    report["telemetry"] = tel
+    print(
+        f"serving/telemetry,step_p50 {tel['step_ms_p50_trace_on']:.3f}ms on vs "
+        f"{tel['step_ms_p50_trace_off']:.3f}ms off "
+        f"({tel['trace_overhead_pct']:+.1f}%), "
+        f"{tel['trace_events']} trace events -> {tel['trace_path']} "
+        f"(validated={tel['validated']}) exact={tel['tokens_exact']}"
     )
     sp = run_shared_prefix(model, params, cfg.vocab, shared_n, max_new)
     report["shared_prefix"] = sp

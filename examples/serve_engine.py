@@ -61,12 +61,20 @@ event-free (no admission, page append, CoW, or finish within K) — append,
 attend, sample and feed back without touching the host, amortizing dispatch
 over K tokens. Token-exact for any K; the run reports how many steps fused.
 
+Lifecycle tracing: ``--trace FILE`` records every engine transition (enqueue,
+admit, prefill/chunk spans, page appends, CoW, preemption, fused decode
+windows, finish) into a bounded in-memory ring and exports it as Chrome
+trace-event JSON — open the file in Perfetto (https://ui.perfetto.dev) or
+chrome://tracing to see one timeline track per batch slot plus a scheduler
+track. Tracing is host-side only: no device work, no extra transfers.
+
 Knobs: ``num_pages`` (pool memory budget), ``page_size`` (tokens per page),
 ``max_batch`` (decode batch width), ``attn_impl`` ("pallas" routes decode
 through the paged flash kernel; "auto" picks by backend), ``kv_dtype``
 (f32 | int8 | int4 page representation), ``--chunked`` + ``--chunk-tokens``
 (mixed-step prefill), ``--temperature/--top-k/--top-p/--seed`` (on-device
-sampling), ``--multi-step`` (fused decode horizon).
+sampling), ``--multi-step`` (fused decode horizon), ``--trace FILE``
+(lifecycle trace export).
 """
 import argparse
 import dataclasses
@@ -117,6 +125,9 @@ def main():
     ap.add_argument("--multi-step", type=int, default=1, metavar="K",
                     help="fused decode horizon: run K decode iterations in one "
                          "on-device loop over event-free horizons (1 = off)")
+    ap.add_argument("--trace", default="", metavar="FILE",
+                    help="record the request-lifecycle trace and export it to "
+                         "FILE as Chrome trace-event JSON (view in Perfetto)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch, smoke=True), dtype="float32")
@@ -160,10 +171,18 @@ def main():
         chunked_prefill=args.chunked,
         chunk_tokens=args.chunk_tokens,
         multi_step=args.multi_step,
+        trace=bool(args.trace),
     )
 
     engine = ServeEngine(model, params, econf)
     results = engine.run(make_requests())
+    if args.trace:
+        engine.trace.export(args.trace)
+        n_ev = len(engine.trace.events)
+        print(
+            f"lifecycle trace: {n_ev} events -> {args.trace} "
+            f"(open in https://ui.perfetto.dev or chrome://tracing)"
+        )
 
     for rid in sorted(results):
         s = results[rid]

@@ -49,6 +49,25 @@ Quantized block scales) cannot recover the true span from their buffers (an odd
 span leaves a pad nibble), so pythonic negative offsets are ambiguous and the
 packed accessors reject static negative ``i`` rather than silently reading the
 wrong nibble or block scale.
+
+Instrumentation via accessor composition (observability as a policy)
+--------------------------------------------------------------------
+The same customization point that swaps the element REPRESENTATION (the
+quantization section above) can swap the element OBSERVATION:
+``core.instrument.CountingAccessor`` wraps any accessor here and forwards
+every operation to it unchanged while tallying loads/stores and the bytes
+they touch. Because an accessor sees only flat codomain offsets, the wrapper
+composes with any layout — the instrumented paged-decode twin in
+``core.instrument.counted_paged_decode`` drives LayoutPaged's offset formula
+through a counted f32 or quantized accessor and gets measured bytes-moved
+that ``benchmarks/roofline.py`` checks against its analytic model.
+
+The byte accounting lives HERE, not in the wrapper, because only the accessor
+knows its representation's cost: ``bytes_for_offsets(i)`` returns the storage
+bytes behind a batch of offsets — ``n * itemsize`` for dense accessors,
+``n`` int8 bytes (+ 4 per distinct block scale) for QuantizedAccessor at 8
+bits, half that for int4 nibbles, ``n/8`` for BitPackedAccessor. The wrapper
+never inspects buffers; it just asks the policy it wraps.
 """
 from __future__ import annotations
 
@@ -97,6 +116,15 @@ class Accessor:
         """Rebase buffers at offset i (C++ a.offset(p, i)); returns buffers usable
         with ``self.offset_policy`` such that access(offset(p,i), 0) == access(p,i)."""
         raise NotImplementedError
+
+    # instrumentation ----------------------------------------------------------
+    def bytes_for_offsets(self, i) -> int:
+        """Storage bytes behind a batch of offsets ``i`` (scalar or ndarray) —
+        the representation-specific cost model ``core.instrument``'s
+        CountingAccessor charges per access/store. Dense default: one storage
+        element per offset."""
+        n = int(np.size(i))
+        return n * jnp.dtype(self.storage_dtype()).itemsize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +246,11 @@ class BitPackedAccessor(Accessor):
         if isinstance(i, int) and i % 8 == 0:
             return buffers[i // 8:]
         raise TypeError("BitPackedAccessor.offset requires byte-aligned offsets")
+
+    def bytes_for_offsets(self, i) -> int:
+        # distinct bytes touched: offsets sharing a byte cost it once
+        self._check_offset(i)
+        return int(np.unique(np.asarray(i) // 8).size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,6 +375,18 @@ class QuantizedAccessor(Accessor):
     def requantize(self, buffers, span=None):
         """Recompute block scales from current contents (periodic optimizer rescale)."""
         return self.from_codomain(self.decay(buffers, span))
+
+    def bytes_for_offsets(self, i) -> int:
+        """intN payload bytes + one f32 scale per DISTINCT block touched —
+        the bandwidth a quantized gather actually moves (block scales are
+        reused across the offsets inside a block). Needs concrete offsets
+        (numpy/host) to count distinct blocks."""
+        self._check_offset(i)
+        arr = np.asarray(i)
+        n = int(arr.size)
+        payload = n if self.bits == 8 else int(np.unique(arr // 2).size)
+        scales = int(np.unique(arr // self.block).size) * 4
+        return payload + scales
 
 
 class MemorySpace(enum.Enum):

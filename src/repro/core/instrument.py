@@ -1,0 +1,180 @@
+"""CountingAccessor: the paper's accessor hook used FOR observability.
+
+The mdspan accessor policy is usually pitched as changing what an element IS
+(atomic, restrict, quantized). This module uses the same customization point
+to change what an access REPORTS: ``CountingAccessor`` wraps any accessor in
+this repo — BasicAccessor f32, QuantizedAccessor intN, BitPackedAccessor —
+and forwards every operation unchanged while tallying loads/stores and the
+representation-true bytes behind them (each wrapped accessor prices its own
+``bytes_for_offsets``; the wrapper never looks inside buffers).
+
+Because accessors see only flat codomain offsets, the wrapper composes with
+any layout. ``counted_paged_decode`` is the payoff: it drives LayoutPaged's
+offset formula
+
+    ((page * Hkv + head) * page_size + slot) * D + d
+
+through a counted accessor and replays the paged-decode jnp twin's math on
+the gathered values — same output as ``kernels.ops.paged_decode_attention``,
+plus a measured bytes-moved figure that ``benchmarks/roofline.py``'s analytic
+model must reproduce (tests pin agreement within 10% for the f32 and int8
+paths). Page skipping mirrors the kernel: only pages with
+``j * page_size < context_len`` are gathered, so the tally reflects the
+traffic the kernel actually schedules, not the dense worst case.
+
+int4 pages are excluded: their split-half nibble order differs from
+QuantizedAccessor's adjacent pairs (kvquant.as_flat_accessor raises), so
+there is no flat accessor to count through.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accessors import Accessor
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class TrafficTally:
+    """Running totals of accessor traffic (host-side ints, O(1) memory)."""
+
+    loads: int = 0          # offsets read
+    stores: int = 0         # offsets written
+    bytes_loaded: int = 0   # storage bytes behind the reads
+    bytes_stored: int = 0   # storage bytes behind the writes
+
+    @property
+    def bytes_moved(self) -> int:
+        return self.bytes_loaded + self.bytes_stored
+
+    def reset(self) -> None:
+        self.loads = self.stores = 0
+        self.bytes_loaded = self.bytes_stored = 0
+
+
+class CountingAccessor(Accessor):
+    """Wrap ``inner``, forwarding everything and counting traffic into
+    ``tally``. Offsets must be host-concrete (numpy / python ints) so the
+    count happens at call time — this is an instrumentation twin for the jnp
+    paths, not something to close a jit over."""
+
+    def __init__(self, inner: Accessor, tally: TrafficTally | None = None):
+        self.inner = inner
+        self.tally = tally if tally is not None else TrafficTally()
+
+    @property
+    def element_type(self) -> Any:  # type: ignore[override]
+        return self.inner.element_type
+
+    def storage_dtype(self):
+        return self.inner.storage_dtype()
+
+    def alloc(self, span_size: int):
+        return self.inner.alloc(span_size)
+
+    def from_codomain(self, dense):
+        return self.inner.from_codomain(dense)
+
+    def access(self, buffers, i):
+        self.tally.loads += int(np.size(i))
+        self.tally.bytes_loaded += self.inner.bytes_for_offsets(i)
+        return self.inner.access(buffers, i)
+
+    def store(self, buffers, i, value):
+        self.tally.stores += int(np.size(i))
+        self.tally.bytes_stored += self.inner.bytes_for_offsets(i)
+        return self.inner.store(buffers, i, value)
+
+    def decay(self, buffers):
+        return self.inner.decay(buffers)
+
+    @property
+    def offset_policy(self) -> "Accessor":
+        # rebased views keep counting into the SAME tally
+        return self
+
+    def offset(self, buffers, i):
+        return self.inner.offset(buffers, i)
+
+    def bytes_for_offsets(self, i) -> int:
+        return self.inner.bytes_for_offsets(i)
+
+
+def flat_pool_offsets(phys_pages, hkv: int, page_size: int, head_dim: int):
+    """Flat codomain offsets of whole pages: LayoutPaged's offset formula
+    vectorized over (n_pages, Hkv, page_size, D). ``phys_pages`` is a 1-D
+    array of physical page ids."""
+    p = np.asarray(phys_pages, np.int64)
+    h = np.arange(hkv, dtype=np.int64)
+    s = np.arange(page_size, dtype=np.int64)
+    d = np.arange(head_dim, dtype=np.int64)
+    return (
+        ((p[:, None, None, None] * hkv + h[None, :, None, None]) * page_size
+         + s[None, None, :, None]) * head_dim + d[None, None, None, :]
+    )
+
+
+def counted_paged_decode(
+    q,
+    k_buffers,
+    v_buffers,
+    accessor: CountingAccessor,
+    block_tables,
+    context_lens,
+    *,
+    pool_shape,
+    scale: float | None = None,
+):
+    """Paged GQA decode through a counted accessor over the FLAT pool codomain.
+
+    q: (B, Hq, 1, D); k_buffers/v_buffers: ``accessor``-encoded buffers of the
+    flattened (num_pages, Hkv, page_size, D) pool (f32: the pool reshaped to
+    1-D; int8: kvquant's flat bytes + (page*head) scales —
+    ``PagedQuantSpec.as_flat_accessor`` buffers); block_tables: (B, max_pages);
+    context_lens: (B,); pool_shape: the 4-tuple above. Returns (out, tally)
+    where ``out`` matches ``ops.paged_decode_attention`` on the equivalent
+    dense pool and ``tally`` is the accessor's traffic after this call.
+
+    Per-row math is the jnp twin's, restricted to the live pages the kernel
+    DMAs (masked tail positions inside the last live page are exactly zeroed
+    by the ``* live`` term, so dropping fully-dead pages is value-identical).
+    """
+    q = np.asarray(q, np.float32)
+    b, hq, tq, d = q.shape
+    num_pages, hkv, page_size, d_pool = pool_shape
+    assert tq == 1 and hq % hkv == 0 and d == d_pool
+    group = hq // hkv
+    scale = float(scale) if scale is not None else 1.0 / float(np.sqrt(d))
+    block_tables = np.asarray(block_tables)
+    context_lens = np.asarray(context_lens)
+
+    out = np.zeros((b, hq, 1, d), np.float32)
+    for row in range(b):
+        n_tok = int(context_lens[row])
+        if n_tok <= 0:
+            continue  # kernel parity: fully-masked rows output exact zeros
+        n_live = -(-n_tok // page_size)
+        offs = flat_pool_offsets(
+            block_tables[row, :n_live], hkv, page_size, d
+        )  # (n_live, Hkv, ps, D)
+        k = np.asarray(accessor.access(k_buffers, offs), np.float32)
+        v = np.asarray(accessor.access(v_buffers, offs), np.float32)
+        s_len = n_live * page_size
+        # (n_live, Hkv, ps, D) -> (Hkv, n_live*ps, D)
+        k = np.moveaxis(k, 1, 0).reshape(hkv, s_len, d)
+        v = np.moveaxis(v, 1, 0).reshape(hkv, s_len, d)
+        qg = q[row].reshape(hkv, group, d)
+        s = np.einsum("hgd,hkd->hgk", qg, k) * scale
+        live = np.arange(s_len) < n_tok
+        s = np.where(live[None, None, :], s, NEG_INF)
+        m = np.max(s, axis=-1, keepdims=True)
+        p = np.exp(s - m) * live[None, None, :]
+        ell = np.sum(p, axis=-1, keepdims=True)
+        o = np.einsum("hgk,hkd->hgd", p, v) / np.where(ell == 0.0, 1.0, ell)
+        out[row] = o.reshape(hq, 1, d)
+    return jnp.asarray(out), accessor.tally

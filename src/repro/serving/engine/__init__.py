@@ -20,12 +20,21 @@ from .request import (
 )
 from .scheduler import Scheduler, SchedulerConfig
 
+from repro.serving.telemetry import (  # noqa: E402  (re-export)
+    EngineTrace,
+    MetricsRegistry,
+    validate_chrome_trace,
+)
+
 __all__ = [
     "DECODING",
     "EngineConfig",
+    "EngineTrace",
     "GREEDY",
+    "MetricsRegistry",
     "SamplingParams",
     "aligned_max_logit_err",
+    "validate_chrome_trace",
     "KV_DTYPES",
     "PagedQuantSpec",
     "PagedKVCache",

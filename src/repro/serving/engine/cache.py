@@ -152,6 +152,12 @@ class PagedKVCache:
         self.pages_shared_total = 0
         self.cow_copies = 0
         self.peak_pages_in_use = 0
+        # lifecycle trace (serving/telemetry.EngineTrace), attached by the
+        # engine when EngineConfig.trace is set. Allocator events — allocate,
+        # append_page, CoW, free_slot — are exactly the device-delta emission
+        # points (_patch_slot), so tracing them costs one guarded host append
+        # per EVENT, never per token, and nothing at all when None.
+        self.trace = None
 
     # -- allocator ---------------------------------------------------------------
     @property
@@ -236,6 +242,11 @@ class PagedKVCache:
         self.tables[slot, :] = 0
         self.tables[slot, : len(pages)] = pages
         self._dirty_slots.add(slot)
+        if self.trace is not None:
+            self.trace.instant(
+                "alloc", slot, pages=n_pages, shared=len(shared),
+                free=len(self._free),
+            )
         return pages
 
     def _register(self, keys: List[tuple], pages: List[int], start: int) -> None:
@@ -299,6 +310,8 @@ class PagedKVCache:
         pages.append(p)
         self.tables[slot, len(pages) - 1] = p
         self._dirty_slots.add(slot)
+        if self.trace is not None:
+            self.trace.instant("append_page", slot, page=p, free=len(self._free))
         return True
 
     def _release_page(self, p: int) -> None:
@@ -315,7 +328,10 @@ class PagedKVCache:
         other holders; only refcount-zero pages rejoin the free list. A
         mid-prefill release also discards the deferred index entries — the
         half-written pages were never adoptable and never become so."""
-        for p in self.pages_of.pop(slot, []):
+        released = self.pages_of.pop(slot, [])
+        if released and self.trace is not None:
+            self.trace.instant("free_slot", slot, pages=len(released))
+        for p in released:
             self._release_page(p)
         self._shared_upto.pop(slot, None)
         self._deferred.pop(slot, None)
@@ -392,6 +408,8 @@ class PagedKVCache:
         self.ref[old] -= 1
         self.cow_copies += 1
         self._dirty_slots.add(slot)
+        if self.trace is not None:
+            self.trace.instant("cow", slot, src=old, dst=new)
         return True
 
     # -- device writes -----------------------------------------------------------

@@ -72,13 +72,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.runtime.health import StragglerPolicy
 from repro.serving.sampling import pack_slot_params, stream_seed
 from repro.serving.step import (
     make_chunked_prefill_step,
     make_paged_serve_multistep,
     make_paged_serve_step,
     make_prefill,
+    top_logprobs,
 )
+from repro.serving.telemetry import EngineTrace, MetricsRegistry
 
 from .cache import PagedKVCache
 from .request import DECODING, PREFILLING, Request, RequestQueue, RequestState
@@ -117,6 +120,19 @@ class EngineConfig:
     prefill_compute_skip: bool = True  # start a shared-prefix request's first
     # chunk past the adopted pages (skip their COMPUTE, not just their storage);
     # effective only with chunked_prefill + prefix_sharing
+    trace: bool = False  # record lifecycle events (serving/telemetry.EngineTrace):
+    # enqueue/admit/chunk/CoW/preempt/fused-window/finish, exportable as Chrome
+    # trace JSON (ServeEngine.trace.export -> Perfetto). Off: every emission
+    # site is one `is None` check. On: host appends at engine EVENTS only —
+    # the per-token D2H budget of the fused step is untouched
+    trace_capacity: int = 65536  # trace ring-buffer events before wrap
+    logprobs_k: int = 0  # compile-time top-k logprob width of the fused step.
+    # 0 compiles the identical step as before the feature; > 0 lets requests
+    # opt in (Request.logprobs <= this) to per-token top-k logprobs that ride
+    # the existing ids fetch
+    slow_step_threshold: float = 2.0  # decode steps slower than this multiple
+    # of the per-token EMA (runtime/health.StragglerPolicy) count as slow:
+    # trace event + `slow_steps` counter
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
@@ -173,6 +189,24 @@ class ServeEngine:
         self.queue = RequestQueue()
         self._pending: List[RequestState] = []  # submitted, not yet arrived
         self._mesh, self._rules = mesh, rules
+        # telemetry: one trace shared by engine/scheduler/allocator (None =
+        # off, every emission site a single check), one metrics registry
+        # backing metrics() with O(1)-memory sketches
+        self.trace = EngineTrace(config.trace_capacity) if config.trace else None
+        self.cache.trace = self.trace
+        self.scheduler.trace = self.trace
+        self.registry = MetricsRegistry()
+        self._h_step = self.registry.histogram("step_time_s")
+        self._h_host = self.registry.histogram("host_overhead_s")
+        self._h_chunk = self.registry.histogram("chunk_time_s")
+        self._c_decode = self.registry.counter("decode_steps")
+        self._c_fused = self.registry.counter("fused_steps")
+        self._c_pf_computed = self.registry.counter("prefill_tokens_computed")
+        self._c_pf_skipped = self.registry.counter("prefill_tokens_skipped")
+        self._c_slow = self.registry.counter("slow_steps")
+        self._last_step_time: Optional[float] = None  # fused-horizon estimate
+        self._straggler = StragglerPolicy(threshold=config.slow_step_threshold)
+        self._lp_k = max(0, int(config.logprobs_k))
         vocab = model.cfg.vocab
         # fused step: sample on device, advance lens on device; donate the page
         # pools, the fed-back token vector and the lens mirror so the step
@@ -182,6 +216,7 @@ class ServeEngine:
             make_paged_serve_step(
                 model, mesh, rules, attn_impl=config.attn_impl,
                 kv_spec=self.cache.kv_spec, vocab=vocab,
+                logprobs_k=self._lp_k,
             ),
             donate_argnums=(1, 2, 4),
         )
@@ -193,8 +228,16 @@ class ServeEngine:
                 make_paged_serve_multistep(
                     model, self._k, mesh, rules, attn_impl=config.attn_impl,
                     kv_spec=self.cache.kv_spec, vocab=vocab,
+                    logprobs_k=self._lp_k,
                 ),
                 donate_argnums=(1, 2, 4),
+            )
+        if self._lp_k:
+            # prefill first tokens sample from a single (Vp,) logits row; the
+            # same row yields its top-k logprobs on device, fetched with the
+            # chosen id (no extra sync — the id fetch already blocks)
+            self._row_logprobs = jax.jit(
+                lambda row: top_logprobs(row[None], vocab, self._lp_k)
             )
         # single-row sampler for prefill first tokens: the (vocab,) logits row
         # stays on device; only the chosen id crosses to the host. Policy rides
@@ -243,18 +286,20 @@ class ServeEngine:
         # Keyed by generated-token index, not step, so preemption/recompute
         # overwrites deterministically and traces align across engines.
         self.logits_of: Dict[int, Dict[int, np.ndarray]] = {}
-        self.step_times: List[float] = []  # per-token device-path time (fused
-        # windows contribute time / K per token): dispatch + execute + ids D2H
-        self.host_overheads: List[float] = []  # per-token (wall - device): the
-        # scheduler tick's slot sync, bookkeeping and Python loop around the step
-        self.chunk_times: List[float] = []
-        self._n_decode_steps = 0
-        self._n_fused_steps = 0  # decode steps executed inside fused windows
-        self._prefill_tokens_computed = 0
-        self._prefill_tokens_skipped = 0
+        # per-token timing lives in the registry histograms (step_time_s:
+        # device dispatch + execute + ids D2H, fused windows contributing
+        # time / K per token; host_overhead_s: the wall the host loop adds
+        # around it; chunk_time_s: one entry per prefill chunk) — O(1) memory
+        # however long the run, metrics() snapshots their sketches
 
     # -- submission -------------------------------------------------------------
     def submit(self, request: Request) -> None:
+        if request.logprobs > self._lp_k:
+            raise ValueError(
+                f"request {request.rid} asks for {request.logprobs} logprobs "
+                f"but the engine compiled logprobs_k={self._lp_k} — raise "
+                f"EngineConfig.logprobs_k"
+            )
         need = self.cache.pages_for(len(request.prompt) + request.max_new_tokens)
         if need > self.config.max_pages_per_seq:
             raise ValueError(
@@ -291,9 +336,13 @@ class ServeEngine:
         return fn
 
     def _admit_and_prefill(self, now: float) -> None:
+        tr = self.trace
         for slot, state in self.scheduler.admit(self.queue, now):
             ctx = state.context
             padded = self.cache.pages_for(len(ctx)) * self.cache.page_size
+            if tr is not None:
+                tr.instant("admit", slot, rid=state.request.rid, context=len(ctx))
+                tr.begin("prefill", slot, rid=state.request.rid, tokens=padded)
             # right-pad to the page bucket so ONE compile serves every context
             # length that rounds to it (preempted re-admissions arrive with
             # arbitrary lengths); logits read at the true last position, the
@@ -304,7 +353,9 @@ class ServeEngine:
             )
             self.cache.write_prefill(slot, caches)
             self.cache.set_len(slot, len(ctx))
-            self._prefill_tokens_computed += padded
+            self._c_pf_computed.inc(padded)
+            if tr is not None:
+                tr.end("prefill", slot)
             self._first_token(state, logits[0, 0])
 
     def _first_token(self, state: RequestState, logits_row) -> None:
@@ -327,6 +378,14 @@ class ServeEngine:
         ))
         state.generated.append(tok)
         self._slots_stale = True  # the slot's next decode input is host-known
+        if state.request.logprobs:
+            vals, ids = self._row_logprobs(logits_row)
+            vals, ids = np.asarray(vals[0]), np.asarray(ids[0])
+            state.logprobs[len(state.generated) - 1] = [
+                (int(i), float(v))
+                for i, v in zip(ids[: state.request.logprobs],
+                                vals[: state.request.logprobs])
+            ]
         if self.config.record_logits:
             self.logits_of.setdefault(state.request.rid, {})[
                 len(state.generated) - 1
@@ -351,7 +410,12 @@ class ServeEngine:
                 skip = min(adopted * ps, ((n_ctx - 1) // ps) * ps)
             state.chunk_cursor = skip
             self.cache.set_len(slot, skip)
-            self._prefill_tokens_skipped += skip
+            self._c_pf_skipped.inc(skip)
+            if self.trace is not None:
+                self.trace.instant(
+                    "admit", slot, rid=state.request.rid, context=n_ctx,
+                    skip=skip,
+                )
 
     def _prefill_chunks(self, now: float) -> None:
         """Advance PREFILLING slots by at most one chunk each, within the
@@ -407,6 +471,12 @@ class ServeEngine:
             toks += [0] * (bucket - c_real)
             read_row = self.cache.tables[slot : slot + 1]
             write_row = self.cache.write_table_row(slot)[None, :]
+            tr = self.trace
+            if tr is not None:
+                tr.begin(
+                    "chunk", slot, rid=state.request.rid, cursor=cursor,
+                    tokens=c_real,
+                )
             t0 = time.perf_counter()
             logits, pools = self._chunk_step(
                 self.params,
@@ -419,8 +489,10 @@ class ServeEngine:
                 jnp.asarray([min(n_ctx - 1 - cursor, c_real - 1)], jnp.int32),
             )
             self.cache.pools = pools
-            self.chunk_times.append(time.perf_counter() - t0)
-            self._prefill_tokens_computed += c_real
+            self._h_chunk.observe(time.perf_counter() - t0)
+            if tr is not None:
+                tr.end("chunk", slot)
+            self._c_pf_computed.inc(c_real)
             if cursor + c_real >= n_ctx:  # this chunk covered the last position
                 state.chunk_cursor = None
                 self.cache.set_len(slot, n_ctx)
@@ -472,7 +544,7 @@ class ServeEngine:
         if self.scheduler.event_free_horizon(self.queue) < self._k:
             return 1
         if self._pending:
-            est = self.step_times[-1] if self.step_times else 2e-3
+            est = self._last_step_time if self._last_step_time else 2e-3
             if self._pending[0].request.arrival_time <= now + self._k * est:
                 return 1
         return self._k
@@ -492,21 +564,39 @@ class ServeEngine:
         self._sync_slot_state()
         tables, lens = self.cache.device_state()
         record = self.config.record_logits
+        tr = self.trace
+        if tr is not None:
+            tr.begin("fused_window" if k > 1 else "decode", -1, k=k,
+                     batch=len(decoding))
+        # requests riding the per-token fetch for logprobs (opt-in per request;
+        # with nobody opted in the (B, k) pair is computed but never fetched)
+        want_lp = self._lp_k and any(
+            st.request.logprobs for st in decoding.values()
+        )
+        lp_vals = lp_ids = None
         t0 = time.perf_counter()
         if k > 1:
-            toks, last, new_lens, pools = self._multistep(
+            out = self._multistep(
                 self.params, self.cache.pools, self._tokens_dev, tables, lens,
                 self._slot_f32, self._slot_i32,
             )
+            toks, last, new_lens, pools = out[:4]
             ids = np.asarray(toks)  # (K, B) — the fused window's only D2H
+            if want_lp:
+                lp_vals = np.asarray(out[4][0])  # (K, B, k) — same round as ids
+                lp_ids = np.asarray(out[4][1])
             logits_rows = None
-            self._n_fused_steps += k
+            self._c_fused.inc(k)
         else:
-            last, logits, new_lens, pools = self._step(
+            out = self._step(
                 self.params, self.cache.pools, self._tokens_dev, tables, lens,
                 self._slot_f32, self._slot_i32,
             )
+            last, logits, new_lens, pools = out[:4]
             ids = np.asarray(last)[None]  # (1, B)
+            if want_lp:
+                lp_vals = np.asarray(out[4][0])[None]  # (1, B, k)
+                lp_ids = np.asarray(out[4][1])[None]
             logits_rows = (
                 np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
                 if record else None
@@ -515,26 +605,57 @@ class ServeEngine:
         self.cache.pools = pools
         self.cache.adopt_lens_device(new_lens)
         self._tokens_dev = last
-        self.step_times.extend([t_dev / k] * k)
-        self._n_decode_steps += k
+        per_tok = t_dev / k
+        for _ in range(k):
+            self._h_step.observe(per_tok)
+        self._last_step_time = per_tok
+        self._c_decode.inc(k)
+        verdict = self._straggler.observe(per_tok)
+        if verdict != "ok":
+            self._c_slow.inc()
+            if tr is not None:
+                tr.instant(
+                    "slow_step", -1, verdict=verdict,
+                    step_ms=per_tok * 1e3,
+                    ema_ms=(self._straggler.ema or 0.0) * 1e3,
+                )
         for i in range(k):
             for slot, state in decoding.items():
                 if state.done:
                     continue  # finished mid-window (EOS): overrun ids discarded
                 state.generated.append(int(ids[i, slot]))
                 self.cache.bump_len(slot)
+                n_lp = state.request.logprobs
+                if n_lp and lp_vals is not None:
+                    state.logprobs[len(state.generated) - 1] = [
+                        (int(t), float(v))
+                        for t, v in zip(lp_ids[i, slot, :n_lp],
+                                        lp_vals[i, slot, :n_lp])
+                    ]
                 if logits_rows is not None:
                     self.logits_of.setdefault(state.request.rid, {})[
                         len(state.generated) - 1
                     ] = logits_rows[slot].copy()
+        if tr is not None:
+            tr.end("fused_window" if k > 1 else "decode", -1)
         wall = time.perf_counter() - wall0
-        self.host_overheads.append((wall - t_dev) / k)
+        self._h_host.observe((wall - t_dev) / k)
 
     def _sweep_finished(self) -> None:
         for slot in list(self.scheduler.running):
             state = self.scheduler.running[slot]
             if state.done:
                 state.finish_time = time.perf_counter() - self._t0
+                if self.trace is not None:
+                    eos = state.request.eos_id
+                    reason = (
+                        "eos" if eos is not None and state.generated
+                        and state.generated[-1] == eos else "max_tokens"
+                    )
+                    self.trace.instant(
+                        "finish", slot, rid=state.request.rid, reason=reason,
+                        generated=len(state.generated),
+                    )
                 self.scheduler.finish(slot)
                 self.results[state.request.rid] = state
 
@@ -552,7 +673,10 @@ class ServeEngine:
         while self._pending or self.queue or self.scheduler.running:
             now = time.perf_counter() - self._t0
             while self._pending and self._pending[0].request.arrival_time <= now:
-                self.queue.push(self._pending.pop(0))
+                state = self._pending.pop(0)
+                if self.trace is not None:
+                    self.trace.instant("enqueue", rid=state.request.rid)
+                self.queue.push(state)
             for state in self.scheduler.reject_impossible(self.queue):
                 state.finish_time = time.perf_counter() - self._t0
                 self.results[state.request.rid] = state
@@ -592,25 +716,35 @@ class ServeEngine:
 
     def reset_metrics(self) -> None:
         """Drop finished-request records and timing state (benchmarks rehearse a
-        warmup trace on the same engine so jit caches stay hot, then reset)."""
+        warmup trace on the same engine so jit caches stay hot, then reset):
+        zero every registry instrument, clear the trace ring, restart the
+        straggler EMA, and reset allocator stats."""
         self.results = {}
         self.logits_of = {}
-        self.step_times = []
-        self.host_overheads = []
-        self.chunk_times = []
-        self._n_decode_steps = 0
-        self._n_fused_steps = 0
-        self._prefill_tokens_computed = 0
-        self._prefill_tokens_skipped = 0
+        self.registry.reset()
+        if self.trace is not None:
+            self.trace.clear()
+        self._last_step_time = None
+        self._straggler = StragglerPolicy(
+            threshold=self.config.slow_step_threshold
+        )
         self.cache.reset_stats()
 
     # -- metrics ------------------------------------------------------------------
     def metrics(self) -> Dict[str, float]:
+        """Flat snapshot over the registry + per-request records + allocator
+        stats — same keys the bench suite always consumed, now backed by
+        O(1)-memory sketches (histogram percentiles are within one log-bucket
+        of exact, ~7.5% relative)."""
         failed = [s for s in self.results.values() if s.error is not None]
         states = [s for s in self.results.values() if s.error is None]
         if not states:
             return {"failed": len(failed)} if failed else {}
         wall = max(s.finish_time for s in states)
+        # throughput over the SPAN the engine was actually serving: replayed
+        # traces with offset arrivals used to divide by max(finish) alone,
+        # under-reporting whenever the first arrival wasn't at epoch 0
+        span = wall - min(s.request.arrival_time for s in states)
         e2e = np.array([s.finish_time - s.request.arrival_time for s in states])
         ttft = np.array(
             [s.first_token_time - s.request.arrival_time for s in states]
@@ -621,25 +755,26 @@ class ServeEngine:
             "failed": len(failed),
             "generated_tokens": n_tok,
             "wall_s": float(wall),
-            "tokens_per_s": float(n_tok / wall) if wall > 0 else float("inf"),
-            "decode_steps": self._n_decode_steps,
-            "fused_steps": self._n_fused_steps,
-            "step_ms_p50": float(np.percentile(self.step_times, 50) * 1e3) if self.step_times else 0.0,
+            "tokens_per_s": float(n_tok / span) if span > 0 else float("inf"),
+            "decode_steps": self._c_decode.value,
+            "fused_steps": self._c_fused.value,
             # device-path tail + the host-vs-device breakdown: step_ms_* times
             # dispatch + device execute + the (B,)/(K, B) ids fetch per token;
             # host_overhead_ms_p50 is the wall-clock the host loop adds around
             # it (slot sync, scheduler bookkeeping) — what the device-resident
             # refactor squeezed out, and what the bench's breakdown proves
-            "step_ms_p95": float(np.percentile(self.step_times, 95) * 1e3) if self.step_times else 0.0,
-            "host_overhead_ms_p50": float(np.percentile(self.host_overheads, 50) * 1e3) if self.host_overheads else 0.0,
-            "chunk_ms_p50": float(np.percentile(self.chunk_times, 50) * 1e3) if self.chunk_times else 0.0,
+            "step_ms_p50": self._h_step.percentile(50) * 1e3,
+            "step_ms_p95": self._h_step.percentile(95) * 1e3,
+            "host_overhead_ms_p50": self._h_host.percentile(50) * 1e3,
+            "chunk_ms_p50": self._h_chunk.percentile(50) * 1e3,
             "latency_s_p50": float(np.percentile(e2e, 50)),
             "latency_s_p99": float(np.percentile(e2e, 99)),
             "ttft_s_p50": float(np.percentile(ttft, 50)),
             "ttft_s_p95": float(np.percentile(ttft, 95)),
             "ttft_s_p99": float(np.percentile(ttft, 99)),
             "preemptions": sum(s.n_preemptions for s in states),
-            "prefill_tokens_computed": self._prefill_tokens_computed,
-            "prefill_tokens_skipped": self._prefill_tokens_skipped,
+            "slow_steps": self._c_slow.value,
+            "prefill_tokens_computed": self._c_pf_computed.value,
+            "prefill_tokens_skipped": self._c_pf_skipped.value,
             **self.cache.stats(),
         }

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.sampling import GREEDY, SamplingParams
 
@@ -44,6 +44,10 @@ class Request:
     # token-selection policy, executed on device inside the fused serve step
     # (serving/sampling.py). Default: greedy argmax — the exact-match oracle.
     sampling: SamplingParams = GREEDY
+    # top-k logprobs to return per generated token (0 = none). The engine
+    # computes them on device and they ride the existing per-token ids fetch;
+    # must not exceed EngineConfig.logprobs_k, the compiled width.
+    logprobs: int = 0
 
     def __post_init__(self):
         self.prompt = [int(t) for t in self.prompt]
@@ -51,6 +55,8 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.logprobs < 0:
+            raise ValueError(f"logprobs must be >= 0, got {self.logprobs}")
         if self.sampling is None:
             self.sampling = GREEDY
 
@@ -70,6 +76,13 @@ class RequestState:
 
     request: Request
     generated: List[int] = dataclasses.field(default_factory=list)
+    # generated-token index -> [(token_id, logprob), ...] of the top
+    # request.logprobs candidates at that position (empty unless requested).
+    # Keyed like logits_of — by token index, not step — so preemption-recompute
+    # overwrites deterministically.
+    logprobs: Dict[int, List[Tuple[int, float]]] = dataclasses.field(
+        default_factory=dict
+    )
     slot: Optional[int] = None  # batch slot while running, None while queued
     # chunked prefill: tokens of context whose KV is computed AND resident for
     # the current residency (page-aligned except at completion); None once the

@@ -40,6 +40,10 @@ class Scheduler:
         self.config = config
         # slot -> state, in admission order (dict preserves insertion order)
         self.running: Dict[int, RequestState] = {}
+        # lifecycle trace (serving/telemetry.EngineTrace), attached by the
+        # engine; preemption and rejection decisions are emitted here, at the
+        # point the policy makes them
+        self.trace = None
 
     # -- admission -----------------------------------------------------------------
     def _chain_of(self, state: RequestState):
@@ -97,6 +101,11 @@ class Scheduler:
                 f"{len(state.context)}-token context but the pool only has "
                 f"{self.cache.num_pages - 1} — raise num_pages or shorten the request"
             )
+            if self.trace is not None:
+                self.trace.instant(
+                    "reject", rid=state.request.rid,
+                    context=len(state.context),
+                )
             failed.append(state)
         return failed
 
@@ -132,6 +141,11 @@ class Scheduler:
             return None
         slot = victims[-1]  # most recently admitted
         state = self.running.pop(slot)
+        if self.trace is not None:
+            self.trace.instant(
+                "preempt", slot, rid=state.request.rid,
+                n_preemptions=state.n_preemptions + 1, keep_slot=keep_slot,
+            )
         self.cache.free_slot(slot)
         state.release()  # drops the slot AND any mid-prefill chunk cursor
         state.n_preemptions += 1

@@ -28,6 +28,15 @@ def make_serve_step(model, mesh=None, rules=None):
     return serve_step
 
 
+def top_logprobs(logits, vocab: int, k: int):
+    """(vals (B, k), ids (B, k)): the top-k log-probabilities of each row's
+    next-token distribution, computed ON DEVICE from the same logits the
+    sampler consumes (pad columns excluded). The (B, k) pair rides the same
+    per-step D2H fetch as the sampled ids — no extra sync point."""
+    lp = jax.nn.log_softmax(logits[:, :vocab].astype(jnp.float32), axis=-1)
+    return jax.lax.top_k(lp, k)
+
+
 def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
                   tokens, block_tables, context_lens, slot_f32, slot_i32):
     """One fused decode iteration: append -> attend -> sample, all on device.
@@ -58,7 +67,7 @@ def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
 
 
 def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
-                          kv_spec=None, vocab=None):
+                          kv_spec=None, vocab=None, logprobs_k=0):
     shard = Sharder(mesh, rules)
 
     if vocab is None:
@@ -87,17 +96,26 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
         them. ``context_lens`` is the engine's device-resident lens mirror
         (donated); ``new_lens`` is its successor — the LayoutPaged
         index->offset state advances beside the pool it indexes, no host
-        round-trip."""
-        return _fused_decode(
+        round-trip. With ``logprobs_k > 0`` the step additionally returns the
+        per-slot (vals, ids) top-k logprob pair (compile-time width: k = 0
+        compiles the identical program as before the feature existed)."""
+        out = _fused_decode(
             model, shard, attn_impl, kv_spec, vocab, params, caches,
             tokens, block_tables, context_lens, slot_f32, slot_i32,
+        )
+        if not logprobs_k:
+            return out
+        nxt, logits, new_lens, caches_out = out
+        return nxt, logits, new_lens, caches_out, top_logprobs(
+            logits, vocab, logprobs_k
         )
 
     return fused_serve_step
 
 
 def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
-                               attn_impl="auto", kv_spec=None, vocab=None):
+                               attn_impl="auto", kv_spec=None, vocab=None,
+                               logprobs_k=0):
     """K fused decode iterations in one on-device loop (jax.lax.scan).
 
     Legal only over an event-free horizon (Scheduler.event_free_horizon): no
@@ -107,7 +125,9 @@ def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
     sampled token into the next iteration's embedding lookup; lengths advance
     on device. Returns (tokens_per_step (K, B) i32, last_tokens (B,),
     new_lens (B,), caches) — one dispatch and one (K, B) ids fetch per K
-    generated tokens.
+    generated tokens. With ``logprobs_k > 0`` the scan additionally stacks the
+    per-step top-k logprob pair ((K, B, k) vals + ids), fetched in the same
+    round as the ids.
     """
     shard = Sharder(mesh, rules)
 
@@ -115,16 +135,22 @@ def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
                         slot_f32, slot_i32):
         def body(carry, _):
             toks, lens, cs = carry
-            nxt, _, new_lens, cs = _fused_decode(
+            nxt, logits, new_lens, cs = _fused_decode(
                 model, shard, attn_impl, kv_spec, vocab, params, cs,
                 toks, block_tables, lens, slot_f32, slot_i32,
             )
-            return (nxt, new_lens, cs), nxt
+            y = nxt if not logprobs_k else (
+                nxt, top_logprobs(logits, vocab, logprobs_k)
+            )
+            return (nxt, new_lens, cs), y
 
-        (last, new_lens, caches), toks = jax.lax.scan(
+        (last, new_lens, caches), ys = jax.lax.scan(
             body, (tokens, context_lens, caches), None, length=k_steps
         )
-        return toks, last, new_lens, caches
+        if not logprobs_k:
+            return ys, last, new_lens, caches
+        toks, lp = ys
+        return toks, last, new_lens, caches, lp
 
     return fused_multistep
 

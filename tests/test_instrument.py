@@ -1,0 +1,229 @@
+"""CountingAccessor: the accessor customization point used for observability.
+
+Two layers of law:
+
+*Pricing laws* — each accessor's ``bytes_for_offsets`` must charge the bytes
+its representation actually moves: dense = one storage element per offset;
+quantized = intN payload plus one f32 scale per DISTINCT block touched (the
+scale is reused inside a block); bit-packed = distinct bytes touched.
+
+*Agreement law* — driving the paged-decode twin through a counted accessor
+over the flat LayoutPaged codomain must (a) reproduce the kernel twin's
+output exactly and (b) measure byte traffic that matches
+``benchmarks/roofline.py``'s analytic model within 10% for the f32 and int8
+paths — the formula and the measurement derive the same number from opposite
+ends, so a drift in either is a bug.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.roofline import paged_decode_analytic_bytes
+from repro.core.accessors import (
+    BasicAccessor, BitPackedAccessor, QuantizedAccessor,
+)
+from repro.core.instrument import (
+    CountingAccessor, TrafficTally, counted_paged_decode, flat_pool_offsets,
+)
+from repro.kernels.paged_attention import (
+    paged_decode_attention_jnp, paged_decode_attention_quant_jnp,
+)
+from repro.serving.engine.kvquant import KV_DTYPES
+
+
+# =====================================================================================
+# bytes_for_offsets — the per-representation pricing laws
+# =====================================================================================
+def test_dense_bytes_one_element_per_offset():
+    acc = BasicAccessor()
+    assert acc.bytes_for_offsets(np.arange(10)) == 10 * 4
+    assert acc.bytes_for_offsets(3) == 4
+    acc16 = BasicAccessor(element_type=jnp.bfloat16)
+    assert acc16.bytes_for_offsets(np.arange(10)) == 10 * 2
+
+
+def test_quantized_int8_bytes_payload_plus_distinct_block_scales():
+    acc = QuantizedAccessor(bits=8, block=16)
+    # 10 offsets inside one block: 10 int8 payload bytes + one f32 scale
+    assert acc.bytes_for_offsets(np.arange(10)) == 10 + 4
+    # two offsets in two blocks: 2 payload + 2 scales
+    assert acc.bytes_for_offsets(np.array([0, 16])) == 2 + 8
+    # revisiting a block does NOT recharge its scale
+    assert acc.bytes_for_offsets(np.array([0, 1, 15, 16])) == 4 + 8
+
+
+def test_quantized_int4_bytes_distinct_bytes_plus_scales():
+    acc = QuantizedAccessor(bits=4, block=16)
+    # two nibbles of the same byte cost that byte once
+    assert acc.bytes_for_offsets(np.array([0, 1])) == 1 + 4
+    # nibbles of different bytes cost each byte
+    assert acc.bytes_for_offsets(np.array([0, 2])) == 2 + 4
+
+
+def test_bitpacked_bytes_distinct_bytes_touched():
+    acc = BitPackedAccessor()
+    assert acc.bytes_for_offsets(np.arange(8)) == 1
+    assert acc.bytes_for_offsets(np.arange(16)) == 2
+    assert acc.bytes_for_offsets(np.array([0, 8, 64])) == 3
+
+
+# =====================================================================================
+# CountingAccessor — transparent delegation + tallying
+# =====================================================================================
+def test_counting_accessor_delegates_and_tallies():
+    acc = CountingAccessor(BasicAccessor())
+    buffers = acc.from_codomain(np.arange(16.0))  # encode is not an access
+    assert acc.tally.loads == 0 and acc.tally.bytes_moved == 0
+    offs = np.array([1, 3, 5])
+    np.testing.assert_allclose(np.asarray(acc.access(buffers, offs)),
+                               [1.0, 3.0, 5.0])
+    assert acc.tally.loads == 3
+    assert acc.tally.bytes_loaded == 3 * 4
+    buffers = acc.store(buffers, np.array([0, 2]), jnp.asarray([9.0, 9.0]))
+    assert np.asarray(buffers)[0] == 9.0
+    assert acc.tally.stores == 2
+    assert acc.tally.bytes_stored == 2 * 4
+    assert acc.tally.bytes_moved == 12 + 8
+    # rebased views keep counting into the SAME tally
+    assert acc.offset_policy is acc
+    acc.tally.reset()
+    assert acc.tally.loads == acc.tally.bytes_moved == 0
+
+
+def test_counting_accessor_shared_tally():
+    tally = TrafficTally()
+    k_acc = CountingAccessor(BasicAccessor(), tally)
+    v_acc = CountingAccessor(BasicAccessor(), tally)
+    kb = k_acc.from_codomain(np.zeros(8))
+    vb = v_acc.from_codomain(np.zeros(8))
+    k_acc.access(kb, np.arange(4))
+    v_acc.access(vb, np.arange(4))
+    assert tally.loads == 8
+    assert tally.bytes_loaded == 8 * 4
+
+
+def test_flat_pool_offsets_matches_layout_formula():
+    hkv, ps, d = 2, 4, 3
+    pages = np.array([5, 0, 2])
+    offs = flat_pool_offsets(pages, hkv, ps, d)
+    assert offs.shape == (3, hkv, ps, d)
+    for pi, page in enumerate(pages):
+        for h in range(hkv):
+            for s in range(ps):
+                for dd in range(d):
+                    want = ((page * hkv + h) * ps + s) * d + dd
+                    assert offs[pi, h, s, dd] == want
+    # whole-page offsets never alias
+    assert np.unique(offs).size == offs.size
+
+
+# =====================================================================================
+# counted paged decode vs the kernel twin + the roofline analytic model
+# =====================================================================================
+def _paged_case(rng, *, b, hq, hkv, d, ps, num_pages, max_pages, lens):
+    q = rng.standard_normal((b, hq, 1, d)).astype(np.float32)
+    pool_k = rng.standard_normal((num_pages, hkv, ps, d)).astype(np.float32)
+    pool_v = rng.standard_normal((num_pages, hkv, ps, d)).astype(np.float32)
+    # disjoint physical pages per row, scattered through the pool
+    perm = rng.permutation(num_pages)[: b * max_pages]
+    tables = perm.reshape(b, max_pages).astype(np.int32)
+    return (jnp.asarray(q), pool_k, pool_v, jnp.asarray(tables),
+            jnp.asarray(np.asarray(lens, np.int32)))
+
+
+def test_counted_paged_decode_f32_matches_twin_and_analytic():
+    rng = np.random.default_rng(0)
+    b, hq, hkv, d, ps = 4, 4, 2, 16, 8
+    lens = [29, 0, 9, 17]  # a zero-length row must produce exact zeros
+    q, pool_k, pool_v, tables, ctx = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, num_pages=16, max_pages=4,
+        lens=lens,
+    )
+    acc = CountingAccessor(BasicAccessor())
+    kb = acc.from_codomain(pool_k.reshape(-1))
+    vb = acc.from_codomain(pool_v.reshape(-1))
+    out, tally = counted_paged_decode(
+        q, kb, vb, acc, tables, ctx, pool_shape=(16, hkv, ps, d),
+    )
+    ref = paged_decode_attention_jnp(
+        q, jnp.asarray(pool_k), jnp.asarray(pool_v), tables, ctx,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.any(np.asarray(out)[1])  # ctx 0: kernel-parity zeros
+    analytic = paged_decode_analytic_bytes(
+        lens, page_size=ps, n_kv_heads=hkv, head_dim=d, kv_dtype="f32",
+    )
+    assert analytic > 0
+    assert abs(tally.bytes_moved - analytic) / analytic <= 0.10
+    # live whole pages only: ceil(len/ps) pages per row, K and V
+    live = sum(-(-n // ps) for n in lens)
+    assert tally.loads == 2 * live * hkv * ps * d
+    assert tally.stores == 0
+
+
+def test_counted_paged_decode_int8_matches_twin_and_analytic():
+    rng = np.random.default_rng(1)
+    b, hq, hkv, d, ps = 3, 4, 2, 16, 8
+    num_pages, max_pages = 12, 4
+    lens = [29, 9, 17]
+    q, pool_k, pool_v, tables, ctx = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, num_pages=num_pages,
+        max_pages=max_pages, lens=lens,
+    )
+    flat = KV_DTYPES["int8"].as_flat_accessor(ps, d)
+    assert flat.block == ps * d  # one scale per (page, head), kvquant's law
+    acc = CountingAccessor(flat)
+    kb = flat.from_codomain(jnp.asarray(pool_k.reshape(-1)))
+    vb = flat.from_codomain(jnp.asarray(pool_v.reshape(-1)))
+    out, tally = counted_paged_decode(
+        q, kb, vb, acc, tables, ctx, pool_shape=(num_pages, hkv, ps, d),
+    )
+    # the SAME buffers, reshaped to the paged pool the quant kernel twin eats:
+    # flat block i == (page, head) i, so q/scale reshape directly
+    ref = paged_decode_attention_quant_jnp(
+        q,
+        jnp.asarray(kb["q"]).reshape(num_pages, hkv, ps, d),
+        jnp.asarray(kb["scale"]).reshape(num_pages, hkv),
+        jnp.asarray(vb["q"]).reshape(num_pages, hkv, ps, d),
+        jnp.asarray(vb["scale"]).reshape(num_pages, hkv),
+        tables, ctx, bits=8,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    analytic = paged_decode_analytic_bytes(
+        lens, page_size=ps, n_kv_heads=hkv, head_dim=d, kv_dtype="int8",
+    )
+    assert abs(tally.bytes_moved - analytic) / analytic <= 0.10
+    # int8 traffic must be ~4x lighter than the f32 pages it replaces (scales
+    # add hkv * 4 bytes per live page against ps * d payload bytes per head)
+    f32_bytes = paged_decode_analytic_bytes(
+        lens, page_size=ps, n_kv_heads=hkv, head_dim=d, kv_dtype="f32",
+    )
+    assert f32_bytes / analytic > 3.5
+
+
+def test_int4_has_no_flat_accessor():
+    """int4 pages pack nibbles split-half; the flat QuantizedAccessor packs
+    adjacent pairs — kvquant refuses the composition, so the instrument path
+    is f32 + int8 only (what the acceptance pins)."""
+    with pytest.raises(NotImplementedError):
+        KV_DTYPES["int4"].as_flat_accessor(8, 16)
+
+
+def test_analytic_bytes_model():
+    # one 9-token sequence, ps=8: 2 live pages, K+V, f32
+    assert paged_decode_analytic_bytes(
+        [9], page_size=8, n_kv_heads=2, head_dim=4, kv_dtype="f32",
+    ) == 2 * (2 * 8 * 2 * 4 * 4)
+    # int8 adds one f32 scale per (page, head) per pool
+    assert paged_decode_analytic_bytes(
+        [9], page_size=8, n_kv_heads=2, head_dim=4, kv_dtype="int8",
+    ) == 2 * (2 * 8 * 2 * 4 + 2 * 2 * 4)
+    # zero-length sequences move nothing
+    assert paged_decode_analytic_bytes(
+        [0, 0], page_size=8, n_kv_heads=2, head_dim=4,
+    ) == 0
+    with pytest.raises(ValueError):
+        paged_decode_analytic_bytes([1], page_size=8, n_kv_heads=2,
+                                    head_dim=4, kv_dtype="fp8")
