@@ -54,6 +54,16 @@ trace-event JSON (open in Perfetto / chrome://tracing), schema-validated
 in-process, and the per-event-name counts are reported so the trace can be
 cross-checked against the engine's own metrics counters.
 
+A seventh section is PARALLEL GENERATION: branch groups as layout forks.
+Best-of-n (n=8) replays one group against n serial engines and records the
+group's peak pages against the one-prompt-plus-n-tails page model (the CI
+gate bounds the prompt-KV ratio at 1.25x) plus per-branch token exactness
+against serial same-seed runs. Beam search (width 4) records survivor
+reorders, CoW copies, and the compile-cache delta of the measured run — the
+reorder is a device-mirror row permutation, so the gate requires reorders > 0
+with ZERO new compiles. Constrained decoding runs a JSON-array token DFA and
+gates on 100% of outputs parsing.
+
   PYTHONPATH=src python -m benchmarks.run --only serving
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke   # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only serving --smoke --kv-dtype int8
@@ -68,6 +78,9 @@ import jax
 import numpy as np
 
 from repro.models import ModelConfig, Model
+from repro.serving import (
+    JSON_ARRAY_CHARS, GenerationParams, fixed_json_array_dfa,
+)
 from repro.serving.engine import (
     EngineConfig, Request, SamplingParams, ServeEngine, aligned_max_logit_err,
     validate_chrome_trace,
@@ -135,6 +148,22 @@ STEADY_MAX_BATCH = 4
 STEADY_PAGE_SIZE = 16
 MULTI_STEP_KS = (1, 2, 4, 8)
 
+# parallel generation: branch groups as layout forks. Best-of-n forks the
+# prompt's block-table rows so all n branches alias one prompt's pages (the
+# page gate below: group peak ≈ one prompt + n decode tails, NOT n prompts);
+# beam search reorders block-table rows between steps (a device-mirror
+# permutation — no page copies, no recompiles); constrained decoding masks
+# logits on device through a host-compiled token DFA.
+BRANCH_N = 8
+BRANCH_PROMPT_LEN = 24
+BRANCH_NEW_TOKENS = 6
+BRANCH_PAGE_SIZE = 4
+BEAM_WIDTH = 4
+BEAM_PROMPT_LEN = 8
+BEAM_NEW_TOKENS = 8
+GRAMMAR_N_REQUESTS = 4
+GRAMMAR_NEW_TOKENS = 12
+
 
 def burst_config() -> ModelConfig:
     return ModelConfig(
@@ -155,7 +184,8 @@ def bench_config(smoke: bool = False) -> ModelConfig:
     )
 
 
-def make_requests(rng: np.random.Generator, vocab: int, n: int) -> list:
+def make_requests(rng: np.random.Generator, vocab: int, n: int,
+                  max_new: int = MAX_NEW_TOKENS) -> list:
     gaps = rng.exponential(scale=MEAN_ARRIVAL_GAP_S, size=n)
     arrivals = np.cumsum(gaps)
     reqs = []
@@ -163,8 +193,12 @@ def make_requests(rng: np.random.Generator, vocab: int, n: int) -> list:
         length = int(rng.choice(PROMPT_BUCKETS))
         prompt = rng.integers(0, vocab, size=length).tolist()
         reqs.append(
-            Request(rid=i, prompt=prompt, max_new_tokens=MAX_NEW_TOKENS,
-                    arrival_time=float(arrivals[i]))
+            Request(
+                    rid=i,
+                    prompt=prompt,
+                    params=GenerationParams(max_new_tokens=max_new),
+                    arrival_time=float(arrivals[i]),
+                )
         )
     return reqs
 
@@ -177,11 +211,11 @@ def make_shared_prefix_requests(rng: np.random.Generator, vocab: int, n: int,
     tails = [SHARED_TAIL_BUCKETS[i % len(SHARED_TAIL_BUCKETS)] for i in range(n)]
     return [
         Request(
-            rid=i,
-            prompt=prefix + rng.integers(0, vocab, size=tails[i]).tolist(),
-            max_new_tokens=max_new,
-            arrival_time=0.0,  # burst: the whole batch contends for pages at once
-        )
+                rid=i,
+                prompt=prefix + rng.integers(0, vocab, size=tails[i]).tolist(),
+                params=GenerationParams(max_new_tokens=max_new),
+                arrival_time=0.0,
+            )
         for i in range(n)
     ]
 
@@ -300,15 +334,18 @@ def make_long_burst_requests(rng: np.random.Generator, vocab: int, n_long: int,
     reqs = []
     for i in range(n_long):
         reqs.append(Request(
-            rid=i, prompt=rng.integers(0, vocab, size=LONG_PROMPT_LEN).tolist(),
-            max_new_tokens=max_new, arrival_time=0.0,
-        ))
+                rid=i,
+                prompt=rng.integers(0, vocab, size=LONG_PROMPT_LEN).tolist(),
+                params=GenerationParams(max_new_tokens=max_new),
+                arrival_time=0.0,
+            ))
     for i in range(n_short):
         reqs.append(Request(
-            rid=n_long + i,
-            prompt=rng.integers(0, vocab, size=SHORT_PROMPT_LEN).tolist(),
-            max_new_tokens=max_new, arrival_time=0.0,
-        ))
+                rid=n_long + i,
+                prompt=rng.integers(0, vocab, size=SHORT_PROMPT_LEN).tolist(),
+                params=GenerationParams(max_new_tokens=max_new),
+                arrival_time=0.0,
+            ))
     return reqs
 
 
@@ -319,14 +356,30 @@ def make_skip_requests(rng: np.random.Generator, vocab: int, max_new: int) -> li
     exercises prefill compute skip without wall-clock staging."""
     prefix = rng.integers(0, vocab, size=32).tolist()
     return [
-        Request(rid=0, prompt=prefix + rng.integers(0, vocab, size=4).tolist(),
-                max_new_tokens=3 * max_new, arrival_time=0.0),
-        Request(rid=1, prompt=rng.integers(0, vocab, size=5).tolist(),
-                max_new_tokens=2, arrival_time=0.0),
-        Request(rid=2, prompt=prefix + rng.integers(0, vocab, size=3).tolist(),
-                max_new_tokens=max_new, arrival_time=0.0),
-        Request(rid=3, prompt=list(prefix), max_new_tokens=max_new,
-                arrival_time=0.0),
+        Request(
+                rid=0,
+                prompt=prefix + rng.integers(0, vocab, size=4).tolist(),
+                params=GenerationParams(max_new_tokens=3 * max_new),
+                arrival_time=0.0,
+            ),
+        Request(
+                rid=1,
+                prompt=rng.integers(0, vocab, size=5).tolist(),
+                params=GenerationParams(max_new_tokens=2),
+                arrival_time=0.0,
+            ),
+        Request(
+                rid=2,
+                prompt=prefix + rng.integers(0, vocab, size=3).tolist(),
+                params=GenerationParams(max_new_tokens=max_new),
+                arrival_time=0.0,
+            ),
+        Request(
+                rid=3,
+                prompt=list(prefix),
+                params=GenerationParams(max_new_tokens=max_new),
+                arrival_time=0.0,
+            ),
     ]
 
 
@@ -422,8 +475,9 @@ def run_steady_decode(model, params, vocab: int, n_new: int, ks) -> dict:
             prompt=np.random.default_rng(50 + i).integers(
                 0, vocab, size=STEADY_PROMPT_LEN
             ).tolist(),
-            max_new_tokens=n_new,
-            **({"sampling": sampling} if sampling else {}),
+            params=GenerationParams.from_legacy(
+                max_new_tokens=n_new, sampling=sampling
+            ),
         )
         for i in range(STEADY_MAX_BATCH)
     ]
@@ -499,12 +553,12 @@ def run_telemetry(model, params, vocab: int, n_new: int) -> dict:
     JSON, schema-validated, and summarized as per-name event counts."""
     make = lambda: [
         Request(
-            rid=i,
-            prompt=np.random.default_rng(90 + i).integers(
-                0, vocab, size=STEADY_PROMPT_LEN
-            ).tolist(),
-            max_new_tokens=n_new,
-        )
+                rid=i,
+                prompt=np.random.default_rng(90 + i).integers(
+                    0, vocab, size=STEADY_PROMPT_LEN
+                ).tolist(),
+                params=GenerationParams(max_new_tokens=n_new),
+            )
         for i in range(STEADY_MAX_BATCH)
     ]
     conf = EngineConfig.sized_for(
@@ -554,6 +608,168 @@ def run_telemetry(model, params, vocab: int, n_new: int) -> dict:
     }
 
 
+def _jit_cache_sizes(eng: ServeEngine) -> dict:
+    """Compile-cache entry counts of the engine's jitted steps — the beam
+    section pins 'reorders never retrace' on these staying flat."""
+    sizes = {}
+    for name in ("_step", "_multistep", "_chunk_step", "_row_logprobs",
+                 "_sample_row", "_sample_row_masked"):
+        fn = getattr(eng, name, None)
+        if fn is not None and hasattr(fn, "_cache_size"):
+            sizes[name] = fn._cache_size()
+    return sizes
+
+
+def run_parallel_generation(model, params, vocab: int) -> dict:
+    """Branch groups as layout forks, measured three ways.
+
+    best_of_n: an n-branch group vs n serial runs — the group's peak pages
+    must be ~one prompt plus n decode tails (the fork aliases every prompt
+    page), and each branch's tokens must exactly match a serial engine run
+    at seed + branch with the same request id (the branch seed law).
+
+    beam: a beam_width-wide search — per-step survivor reordering is a pure
+    block-table-row permutation, so the measured run must show reorders > 0
+    with ZERO new compile-cache entries (content uploads, never retraces),
+    and resubmitting the identical request must reproduce every sequence.
+
+    constrained: grammar-masked sampling through a host-compiled token DFA —
+    every output must parse as the JSON the automaton encodes."""
+    # --- best-of-n: page sharing + serial exactness --------------------------
+    n, plen, n_new = BRANCH_N, BRANCH_PROMPT_LEN, BRANCH_NEW_TOKENS
+    conf = EngineConfig.sized_for(
+        plen + n_new + 1, page_size=BRANCH_PAGE_SIZE, max_batch=n,
+    )
+    prompt = np.random.default_rng(21).integers(0, vocab, size=plen).tolist()
+    gp = lambda nn, seed: GenerationParams(
+        max_new_tokens=n_new, temperature=0.8, top_k=8, seed=seed, n=nn,
+    )
+    eng = ServeEngine(model, params, conf)
+    eng.submit(list(prompt), gp(n, 123), rid=0)
+    eng.run()  # rehearsal: compile prefill + decode + fork/patch paths
+    eng.reset_metrics()
+    h = eng.submit(list(prompt), gp(n, 123), rid=0)
+    eng.run()
+    m_group = eng.metrics()
+    group_tokens = [s.tokens for s in h.sequences]
+    # one serial engine, reused across branches (jit caches are per-engine);
+    # the branch seed law folds (seed + b, SAME rid), so rid stays 0
+    serial = ServeEngine(model, params, conf)
+    serial_tokens = []
+    for b in range(n):
+        hb = serial.submit(list(prompt), gp(1, 123 + b), rid=0)
+        serial.run()
+        serial_tokens.append(hb.sequences[0].tokens)
+    serial.reset_metrics()
+    h1 = serial.submit(list(prompt), gp(1, 123), rid=0)
+    serial.run()
+    peak_n1 = serial.metrics()["peak_pages_in_use"]
+    # page accounting: the group shares ceil(plen / page) prompt pages once and
+    # pays a private decode tail per branch; the gate bounds the PROMPT-KV cost
+    prompt_pages = -(-plen // BRANCH_PAGE_SIZE)
+    tail_pages = -(-(n_new + plen % BRANCH_PAGE_SIZE) // BRANCH_PAGE_SIZE)
+    peak_n8 = m_group["peak_pages_in_use"]
+    prompt_pages_ratio = (peak_n8 - n * tail_pages) / max(prompt_pages, 1)
+    best_of_n = {
+        "n": n,
+        "prompt_len": plen,
+        "new_tokens": n_new,
+        "page_size": BRANCH_PAGE_SIZE,
+        "peak_pages_group": peak_n8,
+        "peak_pages_serial_each": peak_n1,
+        "peak_pages_serial_total": n * peak_n1,
+        "prompt_pages": prompt_pages,
+        "tail_pages_per_branch": tail_pages,
+        "prompt_pages_ratio": round(prompt_pages_ratio, 3),
+        "branch_forks": m_group["branch_forks"],
+        "tokens_per_s_group": m_group["tokens_per_s"],
+        "tokens_exact_vs_serial": group_tokens == serial_tokens,
+    }
+    # --- beam search: reorders without copies or recompiles ------------------
+    bconf = EngineConfig.sized_for(
+        BEAM_PROMPT_LEN + BEAM_NEW_TOKENS + 1, page_size=BRANCH_PAGE_SIZE,
+        max_batch=BEAM_WIDTH, max_beam_width=BEAM_WIDTH,
+    )
+    bprompt = np.random.default_rng(22).integers(
+        0, vocab, size=BEAM_PROMPT_LEN
+    ).tolist()
+    bp = GenerationParams(max_new_tokens=BEAM_NEW_TOKENS, beam_width=BEAM_WIDTH, n=2)
+    beng = ServeEngine(model, params, bconf)
+    beng.submit(list(bprompt), bp, rid=0)
+    beng.run()  # rehearsal compiles the whole beam path, reorders included
+    beng.reset_metrics()
+    sizes_before = _jit_cache_sizes(beng)
+    hb = beng.submit(list(bprompt), bp, rid=0)
+    beng.run()
+    m_beam = beng.metrics()
+    new_compiles = sum(
+        _jit_cache_sizes(beng)[k] - v for k, v in sizes_before.items()
+    )
+    beam_seqs = [(s.tokens, s.cumulative_logprob) for s in hb.sequences]
+    rerun = ServeEngine(model, params, bconf)
+    hr = rerun.submit(list(bprompt), bp, rid=0)
+    rerun.run()
+    beam = {
+        "beam_width": BEAM_WIDTH,
+        "n_returned": len(beam_seqs),
+        "prompt_len": BEAM_PROMPT_LEN,
+        "new_tokens": BEAM_NEW_TOKENS,
+        "beam_reorders": m_beam["beam_reorders"],
+        "cow_copies": m_beam["cow_copies"],
+        "new_compiles_in_measured_run": new_compiles,
+        "tokens_per_s": m_beam["tokens_per_s"],
+        "best_cumulative_logprob": round(beam_seqs[0][1], 4),
+        "deterministic": [
+            (s.tokens, s.cumulative_logprob) for s in hr.sequences
+        ] == beam_seqs,
+    }
+    # --- constrained decoding: every output parses ---------------------------
+    charmap = {ch: i for i, ch in enumerate(JSON_ARRAY_CHARS)}
+    eos = len(JSON_ARRAY_CHARS)
+    dfa = fixed_json_array_dfa(charmap, eos, vocab, n_items=3)
+    gconf = EngineConfig.sized_for(
+        8 + GRAMMAR_NEW_TOKENS + 1, page_size=BRANCH_PAGE_SIZE,
+        max_batch=GRAMMAR_N_REQUESTS, grammar_states=dfa.n_states,
+    )
+    geng = ServeEngine(model, params, gconf)
+    grng = np.random.default_rng(23)
+    submit_all = lambda: [
+        geng.submit(
+            grng.integers(0, vocab, size=5).tolist(),
+            GenerationParams(
+                max_new_tokens=GRAMMAR_NEW_TOKENS, temperature=0.9,
+                seed=i, eos_id=eos, grammar=dfa,
+            ),
+            rid=i,
+        )
+        for i in range(GRAMMAR_N_REQUESTS)
+    ]
+    submit_all()
+    geng.run()  # rehearsal: compile the masked fused step
+    geng.reset_metrics()
+    handles = submit_all()
+    geng.run()
+    inv = {i: ch for ch, i in charmap.items()}
+    texts, n_valid = [], 0
+    for hg in handles:
+        seq = hg.sequences[0]
+        text = "".join(inv[t] for t in seq.tokens if t != eos)
+        texts.append(text)
+        try:
+            val = json.loads(text)
+            n_valid += isinstance(val, list)
+        except ValueError:
+            pass
+    constrained = {
+        "n_requests": GRAMMAR_N_REQUESTS,
+        "grammar": f"fixed_json_array(n_items=3), {dfa.n_states} states",
+        "outputs": texts,
+        "valid_json_frac": n_valid / GRAMMAR_N_REQUESTS,
+        "tokens_per_s": geng.metrics()["tokens_per_s"],
+    }
+    return {"best_of_n": best_of_n, "beam": beam, "constrained": constrained}
+
+
 def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> dict:
     if out_path is None:
         out_path = SMOKE_OUT_PATH if smoke else OUT_PATH
@@ -574,16 +790,16 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
         # measured no-share trace to compile inside the timed region
         eng = engine_for(model, params, max_batch, page_size, max_new)
         eng.run([
-            Request(rid=i, prompt=list(range(1 + 100 * i, 1 + 100 * i + L)),
-                    max_new_tokens=2)
+            Request(
+                    rid=i,
+                    prompt=list(range(1 + 100 * i, 1 + 100 * i + L)),
+                    params=GenerationParams(max_new_tokens=2),
+                )
             for i, L in enumerate(PROMPT_BUCKETS)
         ])
         eng.reset_metrics()
         rng = np.random.default_rng(0)
-        reqs = make_requests(rng, cfg.vocab, n_requests)
-        for r in reqs:
-            r.max_new_tokens = max_new
-        eng.run(reqs)
+        eng.run(make_requests(rng, cfg.vocab, n_requests, max_new))
         m = eng.metrics()
         point = {"max_batch": max_batch, "page_size": page_size, **m}
         report["points"].append(point)
@@ -618,6 +834,18 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
         f"({tel['trace_overhead_pct']:+.1f}%), "
         f"{tel['trace_events']} trace events -> {tel['trace_path']} "
         f"(validated={tel['validated']}) exact={tel['tokens_exact']}"
+    )
+    pg = run_parallel_generation(model, params, cfg.vocab)
+    report["parallel_generation"] = pg
+    bo, bm, cd = pg["best_of_n"], pg["beam"], pg["constrained"]
+    print(
+        f"serving/parallel_generation,best_of_n n={bo['n']}: peak "
+        f"{bo['peak_pages_group']} pages vs {bo['peak_pages_serial_total']} "
+        f"serial (prompt_pages_ratio {bo['prompt_pages_ratio']}x, "
+        f"exact={bo['tokens_exact_vs_serial']}) | beam w={bm['beam_width']}: "
+        f"{bm['beam_reorders']} reorders, {bm['new_compiles_in_measured_run']} "
+        f"new compiles, deterministic={bm['deterministic']} | constrained: "
+        f"{cd['valid_json_frac']:.0%} valid JSON {cd['outputs']}"
     )
     sp = run_shared_prefix(model, params, cfg.vocab, shared_n, max_new)
     report["shared_prefix"] = sp

@@ -13,10 +13,11 @@ outputs are bit-identical to running each request alone.
     PYTHONPATH=src python examples/serve_engine.py --requests 6 --tokens 8
 
     # engine in five lines:
-    from repro.serving.engine import EngineConfig, Request, ServeEngine
+    from repro.serving import GenerationParams
+    from repro.serving.engine import EngineConfig, ServeEngine
     engine = ServeEngine(model, params, EngineConfig(num_pages=64, page_size=16))
-    engine.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=32))
-    results = engine.run()            # rid -> state; tokens in state.generated
+    handle = engine.submit([1, 2, 3], GenerationParams(max_new_tokens=32), rid=0)
+    engine.run()                      # handle.sequences -> per-branch Sequence list
     print(engine.metrics())           # tokens/sec, p50/p99 latency, preemptions
 
 Prefix sharing (on by default): requests whose prompts open with the same
@@ -46,8 +47,8 @@ prefix sharing, a request whose prompt prefix is already resident skips the
 shared pages' prefill COMPUTE (not just their storage) and the demo reports
 the skipped tokens.
 
-On-device sampling: ``--temperature/--top-k/--top-p/--seed`` attach a
-SamplingParams policy to every request — token selection (greedy included)
+On-device sampling: ``--temperature/--top-k/--top-p/--seed`` set the
+GenerationParams sampling policy on every request — token selection (greedy included)
 runs INSIDE the fused serve step, so logits never leave the device and the
 decode loop's only per-token transfer is the (B,) chosen ids. Sampling is
 seeded per (seed, request id, position): the demo re-runs the sampled trace
@@ -83,9 +84,8 @@ import jax
 import numpy as np
 
 from repro.models import build_model, get_config
-from repro.serving.engine import (
-    EngineConfig, Request, SamplingParams, ServeEngine,
-)
+from repro.serving import GenerationParams
+from repro.serving.engine import EngineConfig, Request, ServeEngine
 
 
 def main():
@@ -153,13 +153,13 @@ def main():
             rng.integers(0, cfg.vocab, size=long_len).tolist() for _ in range(2)
         ] + prompts
         arrivals = np.concatenate([[0.0, 0.0], arrivals])
-    sampling = SamplingParams(
-        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        seed=args.seed,
+    gen_params = GenerationParams(
+        max_new_tokens=args.tokens, temperature=args.temperature,
+        top_k=args.top_k, top_p=args.top_p, seed=args.seed,
     )
     make_requests = lambda: [
-        Request(rid=i, prompt=list(p), max_new_tokens=args.tokens,
-                arrival_time=float(arrivals[i]), sampling=sampling)
+        Request(rid=i, prompt=list(p), params=gen_params,
+                arrival_time=float(arrivals[i]))
         for i, p in enumerate(prompts)
     ]
     econf = EngineConfig.sized_for(

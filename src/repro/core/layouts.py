@@ -588,7 +588,32 @@ class LayoutPaged(LayoutMapping):
             phys0 - first_page * self.page_size,
         )
 
-    # -- prefix sharing / copy-on-write -------------------------------------------
+    # -- prefix sharing / copy-on-write / parallel generation ----------------------
+    #
+    # Parallel generation as layout forks (the serving engine's n-best / beam
+    # regime, serving/engine/*): the paper's thesis is that a layout is a
+    # CUSTOMIZATION POINT — new storage policies are new mappings, not new
+    # special cases in every consumer. Parallel decoding is exactly such a
+    # policy, and it needs no new kernel:
+    #
+    #   - best-of-n: ``fork_group(seq, n)`` adds n rows aliasing row ``seq``'s
+    #     pages — N decode branches read one prompt's KV at ~1x storage cost.
+    #     The aliasing is VISIBLE in the observers: ``is_unique()`` goes False
+    #     the moment two rows reference one page, and flips back exactly when
+    #     ``cow_slice`` has privatized every doubly-referenced page (the
+    #     allocator's copy-on-write discharge of the write obligation).
+    #   - beam search: a beam step that keeps every hypothesis alive exactly
+    #     once is ``permute_rows`` — a pure relabeling of which sequence index
+    #     owns which row. The offset image of the mapping is unchanged (no
+    #     page is copied, no entry rewritten), which is why the engine can
+    #     realize a beam reorder as row patches of its device-resident table
+    #     mirror and nothing else. Only a DIVERGING step (one parent, two
+    #     children) re-enters the fork/cow regime above.
+    #
+    # The laws tests pin down (tests/test_parallel_generation.py): fork_group
+    # conserves the set of referenced pages; permute_rows composes like the
+    # permutation group and preserves the offset image; is_unique() is False
+    # on a forked layout and True again after cow_slice resolves each alias.
     def fork(self, seq: int, fresh_pages: Sequence[int] = ()) -> "LayoutPaged":
         """A new layout with one more sequence row that shares row ``seq``'s
         leading pages (prefix sharing). The forked row reuses row ``seq``'s first
@@ -611,6 +636,48 @@ class LayoutPaged(LayoutMapping):
         return LayoutPaged(
             Extents.fully_dynamic(sizes[0] + 1, *sizes[1:]),
             tuple(rows),
+            self.page_size,
+            self.num_pages,
+            self.shared_pages,
+            self.pos_offset,
+        )
+
+    def fork_group(self, seq: int, n: int,
+                   fresh_pages: Sequence[Sequence[int]] = ()) -> "LayoutPaged":
+        """``n`` forks of row ``seq`` in one step — the branch-group fork of
+        best-of-n / beam-search admission. Each new row shares row ``seq``'s
+        leading pages; ``fresh_pages`` (optional, one tuple per branch) gives
+        branch ``i`` its private tail where it will diverge. Equivalent to
+        ``n`` successive ``fork(seq, ...)`` calls; a single helper because the
+        engine admits and preempts a branch group as a UNIT, and the layout
+        algebra should state the group operation the allocator performs."""
+        if n < 1:
+            raise ValueError(f"fork_group needs n >= 1, got {n}")
+        fresh = list(fresh_pages) or [()] * n
+        if len(fresh) != n:
+            raise ValueError(f"{len(fresh)} fresh-page tails for {n} branches")
+        out = self
+        for tail in fresh:
+            out = out.fork(seq, tail)
+        return out
+
+    def permute_rows(self, perm: Sequence[int]) -> "LayoutPaged":
+        """The layout after a beam-search reorder step: row ``i`` of the result
+        is row ``perm[i]`` of this layout. ``perm`` must be a permutation of
+        ``range(n_seq)`` — every hypothesis keeps exactly one owner — so the
+        mapping's OFFSET IMAGE is unchanged: no page is copied, no entry
+        rewritten, uniqueness/contiguity observers are invariant. This is the
+        formal statement of the engine's zero-copy beam reorder (a device-
+        mirror row patch); a non-permutation beam step (a parent with two
+        children) must go through fork + cow_slice instead."""
+        rows = self.block_table
+        if sorted(int(p) for p in perm) != list(range(len(rows))):
+            raise ValueError(
+                f"perm {tuple(perm)} is not a permutation of range({len(rows)})"
+            )
+        return LayoutPaged(
+            self.extents,
+            tuple(rows[int(p)] for p in perm),
             self.page_size,
             self.num_pages,
             self.shared_pages,

@@ -228,7 +228,8 @@ def paged_prefill_chunk_attention_quant(
 # ---------------------------------------------------------------------------------
 # on-device token sampling (the serving hot path's logits consumer)
 # ---------------------------------------------------------------------------------
-def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int):
+def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int,
+                  mask=None):
     """Batched token selection on device: greedy / temperature / top-k / top-p.
 
     logits: (B, Vp) with Vp >= vocab (pad columns masked off); temperature (B,)
@@ -237,6 +238,15 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int):
     (1 = off; non-positive values are treated as off); seed (B,) uint32 per-slot
     stream ids; pos (B,) int32 the absolute sequence index of the token being
     sampled. Returns (B,) int32 token ids.
+
+    ``mask`` (optional, (B, vocab) f32) is an ADDITIVE logit mask applied before
+    every filter and both selection paths — the constrained-decoding stage:
+    grammar-disallowed tokens carry a large negative value (serving/grammar.py
+    precomputes one row per grammar state on the host; the engine gathers the
+    per-slot rows on device), allowed tokens carry 0, and an all-zero row is an
+    exact no-op, so unconstrained slots in the same batch are unaffected. The
+    mask composes BEFORE top-k/top-p: the filters then act on the constrained
+    distribution, and greedy picks the best ALLOWED token.
 
     Determinism: the per-slot key is ``fold_in(PRNGKey(seed[b]), pos[b])`` — a
     pure function of (stream seed, position). A preempted-and-recomputed request
@@ -256,6 +266,9 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int):
     b, vp = logits.shape
     col = jnp.arange(vp)[None, :]
     x = jnp.where(col < vocab, logits.astype(jnp.float32), -jnp.inf)
+    if mask is not None:
+        # pad columns are already -inf; the mask only ever biases real tokens
+        x = x + jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, vp - vocab)))
     greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)
 
     def _sampled(_):

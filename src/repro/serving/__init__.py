@@ -1,3 +1,18 @@
+from .grammar import (
+    JSON_ARRAY_CHARS,
+    MASK_OFF,
+    TokenDFA,
+    fixed_json_array_dfa,
+    json_array_dfa,
+)
+from .params import (
+    FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_LENGTH,
+    GenerationParams,
+    RequestHandle,
+    Sequence,
+)
 from .sampling import GREEDY, SamplingParams, stream_seed
 from .step import (
     make_paged_serve_multistep,
@@ -7,8 +22,19 @@ from .step import (
 )
 
 __all__ = [
+    "FINISH_EOS",
+    "FINISH_ERROR",
+    "FINISH_LENGTH",
     "GREEDY",
+    "GenerationParams",
+    "JSON_ARRAY_CHARS",
+    "MASK_OFF",
+    "RequestHandle",
     "SamplingParams",
+    "Sequence",
+    "TokenDFA",
+    "fixed_json_array_dfa",
+    "json_array_dfa",
     "make_paged_serve_multistep",
     "make_paged_serve_step",
     "make_prefill",

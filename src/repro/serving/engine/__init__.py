@@ -1,10 +1,20 @@
 """Continuous-batching serving engine over a paged (LayoutPaged) KV cache.
 
     engine = ServeEngine(model, params, EngineConfig(num_pages=64, page_size=16))
-    engine.submit(Request(rid=0, prompt=[...], max_new_tokens=32))
-    results = engine.run()          # rid -> RequestState (tokens in .generated)
+    h = engine.submit(Request(rid=0, prompt=[...],
+                              params=GenerationParams(max_new_tokens=32)))
+    results = engine.run()          # rid -> RequestState
+    seqs = h.sequences              # per-branch Sequence list (n=1: one entry)
     print(engine.metrics())         # tokens/sec, p50/p99 latency, preemptions
 """
+from repro.serving.params import (
+    FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_LENGTH,
+    GenerationParams,
+    RequestHandle,
+    Sequence,
+)
 from repro.serving.sampling import GREEDY, SamplingParams
 
 from .cache import PagedKVCache
@@ -14,6 +24,7 @@ from .request import (
     DECODING,
     PREFILLING,
     QUEUED,
+    BranchGroup,
     Request,
     RequestQueue,
     RequestState,
@@ -34,6 +45,13 @@ __all__ = [
     "MetricsRegistry",
     "SamplingParams",
     "aligned_max_logit_err",
+    "BranchGroup",
+    "FINISH_EOS",
+    "FINISH_ERROR",
+    "FINISH_LENGTH",
+    "GenerationParams",
+    "RequestHandle",
+    "Sequence",
     "validate_chrome_trace",
     "KV_DTYPES",
     "PagedQuantSpec",

@@ -152,6 +152,8 @@ class PagedKVCache:
         self.pages_shared_total = 0
         self.cow_copies = 0
         self.peak_pages_in_use = 0
+        self.branch_forks = 0    # fork_slot calls (parallel-generation groups)
+        self.beam_reorders = 0   # reorder_rows calls that changed any row
         # lifecycle trace (serving/telemetry.EngineTrace), attached by the
         # engine when EngineConfig.trace is set. Allocator events — allocate,
         # append_page, CoW, free_slot — are exactly the device-delta emission
@@ -340,6 +342,84 @@ class PagedKVCache:
         self.lens[slot] = 0
         self._dirty_slots.add(slot)
 
+    # -- parallel generation: layout forks ---------------------------------------
+    def fork_slot(self, src: int, dst: int, n_tokens: int) -> List[int]:
+        """Bind ``dst`` as a FORK of ``src`` at context length ``n_tokens``: the
+        pages covering those tokens are adopted by reference (incref — this is
+        LayoutPaged.fork_group made physical: N branches of one prompt cost ~1x
+        its KV pages), padded with fresh pages to the usual +1-token decode
+        headroom. The first divergent write into a shared page goes through the
+        ordinary CoW path (needs_cow/cow_page) — fork itself copies nothing.
+        Raises when the headroom pages don't exist (caller checks ``fits``)."""
+        src_pages = self.pages_of[src]
+        n_alias = min(self.pages_for(n_tokens), len(src_pages))
+        n_total = max(self.pages_for(n_tokens + 1), n_alias)
+        if n_total > self.max_pages_per_seq:
+            raise RuntimeError(
+                f"fork needs {n_total} pages > max_pages_per_seq {self.max_pages_per_seq}"
+            )
+        if n_total - n_alias > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: fork wants {n_total - n_alias} fresh pages, "
+                f"free {len(self._free)}"
+            )
+        shared = src_pages[:n_alias]
+        for p in shared:
+            self.ref[p] += 1
+        self.pages_shared_total += len(shared)
+        pages = list(shared) + [self._take_free() for _ in range(n_total - n_alias)]
+        self.pages_of[dst] = pages
+        self._shared_upto[dst] = n_alias
+        self.tables[dst, :] = 0
+        self.tables[dst, : len(pages)] = pages
+        self.lens[dst] = n_tokens
+        self._dirty_slots.add(dst)
+        self.branch_forks += 1
+        if self.trace is not None:
+            self.trace.instant(
+                "fork", dst, src=src, shared=n_alias, free=len(self._free)
+            )
+        return pages
+
+    def reorder_rows(self, assignment: Dict[int, int]) -> None:
+        """Rebind each child slot's row to a SNAPSHOT of its parent slot's
+        pages/len — the beam-search step's hypothesis permutation, executed as
+        pure block-table surgery (LayoutPaged.permute_rows over the live
+        mapping): every new reference increfs BEFORE any old page is released,
+        so a page held on both sides never transits refcount zero, and no page
+        is ever copied here — divergence is the NEXT decode write's CoW
+        problem, not the reorder's. Identity entries are skipped; a fully
+        identity assignment is free (no dirty slots, no counter)."""
+        live = {c: p for c, p in assignment.items() if c != p}
+        if not live:
+            return
+        snap = {
+            p: (list(self.pages_of[p]), int(self.lens[p]))
+            for p in set(live.values())
+        }
+        for c, p in live.items():
+            for page in snap[p][0]:
+                self.ref[page] += 1
+        self.pages_shared_total += sum(len(snap[p][0]) for p in live.values())
+        for c in live:
+            for page in self.pages_of.get(c, []):
+                self._release_page(page)
+        for c, p in live.items():
+            pages, length = snap[p]
+            self.pages_of[c] = list(pages)
+            self._shared_upto.pop(c, None)
+            self._deferred.pop(c, None)
+            self._published.pop(c, None)
+            self.tables[c, :] = 0
+            self.tables[c, : len(pages)] = pages
+            self.lens[c] = length
+            self._dirty_slots.add(c)
+        self.beam_reorders += 1
+        if self.trace is not None:
+            self.trace.instant(
+                "beam_reorder", min(live), moves=len(live), free=len(self._free)
+            )
+
     # -- device-resident layout state ---------------------------------------------
     def set_len(self, slot: int, n: int) -> None:
         """Host-side length assignment (admission, chunk landings, prefill
@@ -498,10 +578,14 @@ class PagedKVCache:
             "peak_pages_in_use": self.peak_pages_in_use,
             "pages_shared": self.pages_shared_total,
             "cow_copies": self.cow_copies,
+            "branch_forks": self.branch_forks,
+            "beam_reorders": self.beam_reorders,
             "kv_pool_bytes": kv_pool_bytes(self.pools),
         }
 
     def reset_stats(self) -> None:
         self.pages_shared_total = 0
         self.cow_copies = 0
+        self.branch_forks = 0
+        self.beam_reorders = 0
         self.peak_pages_in_use = self.pages_in_use

@@ -73,6 +73,14 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.runtime.health import StragglerPolicy
+from repro.serving.params import (
+    FINISH_EOS,
+    FINISH_ERROR,
+    FINISH_LENGTH,
+    GenerationParams,
+    RequestHandle,
+    Sequence as SequenceResult,
+)
 from repro.serving.sampling import pack_slot_params, stream_seed
 from repro.serving.step import (
     make_chunked_prefill_step,
@@ -84,7 +92,14 @@ from repro.serving.step import (
 from repro.serving.telemetry import EngineTrace, MetricsRegistry
 
 from .cache import PagedKVCache
-from .request import DECODING, PREFILLING, Request, RequestQueue, RequestState
+from .request import (
+    DECODING,
+    PREFILLING,
+    BranchGroup,
+    Request,
+    RequestQueue,
+    RequestState,
+)
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -130,6 +145,17 @@ class EngineConfig:
     # 0 compiles the identical step as before the feature; > 0 lets requests
     # opt in (Request.logprobs <= this) to per-token top-k logprobs that ride
     # the existing ids fetch
+    max_beam_width: int = 0  # widest beam_width a request may ask for. Beam
+    # candidates come from the fused step's top-k logprob pair, so this widens
+    # the compile-time logprob width to max_beam_width + 1 (the +1 guarantees
+    # enough non-eos continuations even when every branch's top candidate is
+    # eos — eos is ONE token id, so at most one of any row's top entries is it)
+    grammar_states: int = 0  # grammar-table rows reserved for constrained
+    # decoding (sum of TokenDFA.n_states over every grammar registered with
+    # this engine). The mask/transition tables compile at the FIXED shape
+    # (1 + grammar_states, vocab) — row 0 is the reserved unconstrained state —
+    # so registering a grammar never recompiles the fused step; 0 compiles the
+    # identical step as before the feature
     slow_step_threshold: float = 2.0  # decode steps slower than this multiple
     # of the per-token EMA (runtime/health.StragglerPolicy) count as slow:
     # trace event + `slow_steps` counter
@@ -206,19 +232,46 @@ class ServeEngine:
         self._c_slow = self.registry.counter("slow_steps")
         self._last_step_time: Optional[float] = None  # fused-horizon estimate
         self._straggler = StragglerPolicy(threshold=config.slow_step_threshold)
-        self._lp_k = max(0, int(config.logprobs_k))
+        # beam search selects from the fused step's top-k logprob pair, so the
+        # compiled width covers max_beam_width + 1 (+1: eos is one token id, so
+        # at most one top entry per row is eos and W non-eos continuations
+        # always exist)
+        self._lp_k = max(
+            0, int(config.logprobs_k),
+            (config.max_beam_width + 1) if config.max_beam_width else 0,
+        )
         vocab = model.cfg.vocab
+        # constrained decoding: one stacked mask row + transition row per
+        # GLOBAL grammar state, row 0 the reserved unconstrained state (zero
+        # mask, self-loop). FIXED shape (1 + grammar_states, vocab): grammar
+        # registration rewrites table CONTENT (one upload), never the compiled
+        # step. Per-slot states live in a device vector the fused step advances
+        # itself (donated, like the lens mirror); the host replays the same
+        # transitions on its own copy of the tables.
+        self._grammar_on = config.grammar_states > 0
+        if self._grammar_on:
+            n_rows = 1 + config.grammar_states
+            self._gmask_host = np.zeros((n_rows, vocab), np.float32)
+            self._gtrans_host = np.zeros((n_rows, vocab), np.int32)
+            self._gmask_dev = jnp.asarray(self._gmask_host)
+            self._gtrans_dev = jnp.asarray(self._gtrans_host)
+            self._gstate_dev = jnp.zeros((config.max_batch,), jnp.int32)
+            self._grammars: Dict[int, int] = {}  # id(dfa) -> global row offset
+            self._grammar_refs: List[object] = []  # keep registrants alive
+            self._grammar_used = 0
         # fused step: sample on device, advance lens on device; donate the page
-        # pools, the fed-back token vector and the lens mirror so the step
+        # pools, the fed-back token vector, the lens mirror — and the grammar
+        # state vector when constrained decoding is compiled in — so the step
         # mutates them in place. Tables are NOT donated — the device mirror is
         # persistent and only patched by allocator events (cache.device_state).
+        step_donate = (1, 2, 4) + ((7,) if self._grammar_on else ())
         self._step = jax.jit(
             make_paged_serve_step(
                 model, mesh, rules, attn_impl=config.attn_impl,
                 kv_spec=self.cache.kv_spec, vocab=vocab,
-                logprobs_k=self._lp_k,
+                logprobs_k=self._lp_k, grammar=self._grammar_on,
             ),
-            donate_argnums=(1, 2, 4),
+            donate_argnums=step_donate,
         )
         # multi-step fused loop (one compile: only exactly-K windows fuse).
         # record_logits needs per-step rows on the host, so it forces K = 1.
@@ -228,9 +281,9 @@ class ServeEngine:
                 make_paged_serve_multistep(
                     model, self._k, mesh, rules, attn_impl=config.attn_impl,
                     kv_spec=self.cache.kv_spec, vocab=vocab,
-                    logprobs_k=self._lp_k,
+                    logprobs_k=self._lp_k, grammar=self._grammar_on,
                 ),
-                donate_argnums=(1, 2, 4),
+                donate_argnums=step_donate,
             )
         if self._lp_k:
             # prefill first tokens sample from a single (Vp,) logits row; the
@@ -239,15 +292,24 @@ class ServeEngine:
             self._row_logprobs = jax.jit(
                 lambda row: top_logprobs(row[None], vocab, self._lp_k)
             )
+
         # single-row sampler for prefill first tokens: the (vocab,) logits row
-        # stays on device; only the chosen id crosses to the host. Policy rides
-        # in two packed vectors (f32 [temp, top_p], i32 [top_k, seed-bits,
-        # pos]) — two device_puts per prefill token, not five scalar ones
-        self._sample_row = jax.jit(
-            lambda row, f, i: ops.sample_tokens(
+        # stays on device; only the chosen id (+ its unmasked logprob, the
+        # cumulative-score increment) crosses to the host. Policy rides in two
+        # packed vectors (f32 [temp, top_p], i32 [top_k, seed-bits, pos]) —
+        # two device_puts per prefill token, not five scalar ones. The masked
+        # variant adds the slot's grammar mask row (constrained first tokens).
+        def _row_sample(row, f, i, mask=None):
+            tok = ops.sample_tokens(
                 row[None], f[0:1], i[0:1], f[1:2],
-                i[1:2].astype(jnp.uint32), i[2:3], vocab=vocab,
+                i[1:2].astype(jnp.uint32), i[2:3], vocab=vocab, mask=mask,
             )[0]
+            lp = jax.nn.log_softmax(row[:vocab].astype(jnp.float32))
+            return tok, lp[tok]
+
+        self._sample_row = jax.jit(_row_sample)
+        self._sample_row_masked = jax.jit(
+            lambda row, f, i, m: _row_sample(row, f, i, m[None])
         )
         # per-slot device vectors for the fused step: fed-back tokens + the
         # packed policy/phase arrays (slot_f32 (2, B): temperature, top_p;
@@ -282,6 +344,7 @@ class ServeEngine:
                 donate_argnums=(1,),
             )
         self.results: Dict[int, RequestState] = {}
+        self._next_rid = 0  # auto-assigned rids for prompt-form submit()
         # rid -> {n: logits row that produced generated[n]} (config.record_logits).
         # Keyed by generated-token index, not step, so preemption/recompute
         # overwrites deterministically and traces align across engines.
@@ -293,37 +356,134 @@ class ServeEngine:
         # however long the run, metrics() snapshots their sketches
 
     # -- submission -------------------------------------------------------------
-    def submit(self, request: Request) -> None:
-        if request.logprobs > self._lp_k:
+    def _register_grammar(self, dfa) -> int:
+        """Install a TokenDFA's mask/transition rows into the engine's stacked
+        grammar tables; returns the grammar's GLOBAL row offset (its state 0).
+        Idempotent per automaton instance. The tables keep their compiled shape
+        — registration is one content upload, never a recompile."""
+        off = self._grammars.get(id(dfa))
+        if off is not None:
+            return off
+        if dfa.vocab != self.model.cfg.vocab:
             raise ValueError(
-                f"request {request.rid} asks for {request.logprobs} logprobs "
+                f"grammar compiled for vocab {dfa.vocab} but the model's is "
+                f"{self.model.cfg.vocab}"
+            )
+        if self._grammar_used + dfa.n_states > self.config.grammar_states:
+            raise ValueError(
+                f"grammar needs {dfa.n_states} states but only "
+                f"{self.config.grammar_states - self._grammar_used} of "
+                f"EngineConfig.grammar_states={self.config.grammar_states} "
+                f"remain — raise grammar_states"
+            )
+        off = 1 + self._grammar_used
+        self._grammar_used += dfa.n_states
+        self._grammars[id(dfa)] = off
+        self._grammar_refs.append(dfa)  # id() stays unique while referenced
+        self._gmask_host[off : off + dfa.n_states] = dfa.mask
+        self._gtrans_host[off : off + dfa.n_states] = dfa.next_state + off
+        self._gmask_dev = jnp.asarray(self._gmask_host)
+        self._gtrans_dev = jnp.asarray(self._gtrans_host)
+        return off
+
+    def submit(self, request=None, params: Optional[GenerationParams] = None, *,
+               rid: Optional[int] = None, arrival_time: float = 0.0,
+               **legacy) -> RequestHandle:
+        """Enqueue one request; returns its RequestHandle. Two call forms:
+
+          submit(Request(rid, prompt, params))          # explicit identity
+          submit(prompt_tokens, GenerationParams(...))  # rid auto-assigned
+
+        (plus the deprecated legacy kwargs, which Request shims onto
+        GenerationParams). EVERY impossible-combination check lives here or in
+        GenerationParams.__post_init__ — at enqueue — so the mid-step
+        scheduler never meets a request it cannot serve."""
+        if not isinstance(request, Request):
+            if request is None:
+                raise ValueError("submit() needs a Request or a prompt")
+            if rid is None:
+                rid = self._next_rid
+            request = Request(
+                rid, request, params, arrival_time=arrival_time, **legacy
+            )
+        elif params is not None or rid is not None or legacy:
+            raise ValueError(
+                "submit(Request(...)) takes no extra params/rid/legacy kwargs "
+                "— they belong on the Request"
+            )
+        self._next_rid = max(self._next_rid, request.rid + 1)
+        p = request.params
+        if p.logprobs > self._lp_k:
+            raise ValueError(
+                f"request {request.rid} asks for {p.logprobs} logprobs "
                 f"but the engine compiled logprobs_k={self._lp_k} — raise "
                 f"EngineConfig.logprobs_k"
             )
-        need = self.cache.pages_for(len(request.prompt) + request.max_new_tokens)
+        if p.beam_width > self.config.max_beam_width:
+            raise ValueError(
+                f"request {request.rid} asks for beam_width={p.beam_width} but "
+                f"the engine compiled max_beam_width="
+                f"{self.config.max_beam_width} — raise "
+                f"EngineConfig.max_beam_width"
+            )
+        if p.n_branches > self.config.max_batch:
+            raise ValueError(
+                f"request {request.rid} needs {p.n_branches} batch slots "
+                f"(admitted as a unit) > max_batch {self.config.max_batch}"
+            )
+        if p.record_logits and not self.config.record_logits:
+            raise ValueError(
+                f"request {request.rid} asks for record_logits but the engine "
+                f"was built with record_logits=False"
+            )
+        if p.n_branches > 1 and self.config.record_logits:
+            raise ValueError(
+                "record_logits keys rows by rid — unsupported for parallel "
+                "generation (n > 1 / beam_width > 0)"
+            )
+        grammar_off = None
+        if p.grammar is not None:
+            if not self._grammar_on:
+                raise ValueError(
+                    f"request {request.rid} carries a grammar but the engine "
+                    f"was built with grammar_states=0 — set "
+                    f"EngineConfig.grammar_states"
+                )
+            grammar_off = self._register_grammar(p.grammar)
+        need = self.cache.pages_for(len(request.prompt) + p.max_new_tokens)
         if need > self.config.max_pages_per_seq:
             raise ValueError(
                 f"request {request.rid} will need {need} pages "
-                f"(prompt {len(request.prompt)} + up to {request.max_new_tokens} new) "
+                f"(prompt {len(request.prompt)} + up to {p.max_new_tokens} new) "
                 f"> max_pages_per_seq {self.config.max_pages_per_seq}"
             )
         # a prompt whose admission floor exceeds the whole pool can never run,
         # even against an empty cache — fail loudly at enqueue instead of
         # letting it wedge the queue head forever (Scheduler.impossible covers
         # the runtime variant: a preempted request whose context GREW past the
-        # pool)
-        floor = self.cache.pages_for(len(request.prompt) + 1)
+        # pool). A branch group's floor adds one fork-headroom page per sibling.
+        floor = self.cache.pages_for(len(request.prompt) + 1) + (p.n_branches - 1)
         if floor > self.config.num_pages - 1:
             raise ValueError(
                 f"request {request.rid} needs {floor} pages just to admit its "
-                f"{len(request.prompt)}-token prompt, but the pool only has "
-                f"{self.config.num_pages - 1} usable pages — raise num_pages"
+                f"{len(request.prompt)}-token prompt"
+                + (f" across {p.n_branches} branches" if p.n_branches > 1 else "")
+                + f", but the pool only has {self.config.num_pages - 1} usable "
+                f"pages — raise num_pages"
             )
-        self._pending.append(RequestState(request))
+        if p.n_branches > 1:
+            group = BranchGroup(request)
+            for st in group.branches:
+                st.grammar_state = grammar_off
+            self._pending.append(group.primary)  # siblings ride the primary
+        else:
+            state = RequestState(request)
+            state.grammar_state = grammar_off
+            self._pending.append(state)
+        return RequestHandle(self, request.rid)
 
-    def submit_all(self, requests: Sequence[Request]) -> None:
-        for r in requests:
-            self.submit(r)
+    def submit_all(self, requests: Sequence[Request]) -> List[RequestHandle]:
+        return [self.submit(r) for r in requests]
 
     # -- prefill path -----------------------------------------------------------
     def _prefill_fn(self, padded_len: int):
@@ -337,7 +497,18 @@ class ServeEngine:
 
     def _admit_and_prefill(self, now: float) -> None:
         tr = self.trace
-        for slot, state in self.scheduler.admit(self.queue, now):
+        # fresh branch-group siblings FORK the primary's pages once ITS
+        # prefill completes (_first_token), which also CLEARS their
+        # await_fork flag — snapshot the flag at admission so a sibling
+        # admitted alongside its primary isn't prefilled a second time in
+        # this same pass (that ghost prefill writes no KV — every page is
+        # shared — but would sample a duplicate first token)
+        to_prefill = [
+            (slot, state)
+            for slot, state in self.scheduler.admit(self.queue, now)
+            if not state.await_fork
+        ]
+        for slot, state in to_prefill:
             ctx = state.context
             padded = self.cache.pages_for(len(ctx)) * self.cache.page_size
             if tr is not None:
@@ -361,37 +532,191 @@ class ServeEngine:
     def _first_token(self, state: RequestState, logits_row) -> None:
         """Sample the token a completed prefill produced (either regime), ON
         DEVICE: ``logits_row`` is the (Vp,) device array; only the chosen id
-        crosses to the host (the full row only under record_logits). The PRNG
-        fold position is len(context) — the length of the context the token
-        extends — identical to what the decode path would fold for the same
-        token, so preemption-recompute re-samples it bit-for-bit."""
-        sp = state.request.sampling
+        (and its logprob — the cumulative-score increment) crosses to the host
+        (the full row only under record_logits). The PRNG fold position is
+        len(context) — the length of the context the token extends — identical
+        to what the decode path would fold for the same token, so
+        preemption-recompute re-samples it bit-for-bit.
+
+        This is also the parallel-generation FORK HOOK, shared by both prefill
+        regimes: when a sample-mode group's primary takes its first token, each
+        awaiting sibling's block-table row forks the primary's pages
+        (cache.fork_slot) and samples its own first token from the SAME logits
+        row under its branch seed; a beam-mode branch instead stashes its row's
+        top candidates and the joint selection runs once every live branch has
+        reported (_beam_advance)."""
+        grp = state.group
+        if grp is not None and grp.mode == "beam":
+            vals, ids = self._row_logprobs(logits_row)
+            grp.pending_rows[state.branch] = (
+                np.asarray(vals[0]), np.asarray(ids[0])
+            )
+            state.hold = True  # masked from decode until the joint selection
+            if state.first_token_time is None:
+                state.first_token_time = time.perf_counter() - self._t0
+            started = [
+                st for st in grp.branches if not st.await_fork and not st.done
+            ]
+            if all(st.branch in grp.pending_rows for st in started):
+                self._beam_advance(grp)
+            return
+        sp = state.sampling  # branch-aware: branch b draws from seed + b
         seed_bits = np.uint32(
             stream_seed(sp.seed, state.request.rid)
         ).astype(np.int32)
-        tok = int(self._sample_row(
-            logits_row,
-            jnp.asarray(np.array([sp.temperature, sp.top_p], np.float32)),
-            jnp.asarray(np.array(
-                [sp.top_k, seed_bits, len(state.context)], np.int32
-            )),
+        f = jnp.asarray(np.array([sp.temperature, sp.top_p], np.float32))
+        i = jnp.asarray(np.array(
+            [sp.top_k, seed_bits, len(state.context)], np.int32
         ))
+        if state.grammar_state is not None:
+            tok_dev, lp_dev = self._sample_row_masked(
+                logits_row, f, i,
+                jnp.asarray(self._gmask_host[state.grammar_state]),
+            )
+        else:
+            tok_dev, lp_dev = self._sample_row(logits_row, f, i)
+        tok = int(tok_dev)
         state.generated.append(tok)
+        state.cum_logprob += float(lp_dev)
+        if state.grammar_state is not None:
+            state.grammar_state = int(self._gtrans_host[state.grammar_state, tok])
         self._slots_stale = True  # the slot's next decode input is host-known
         if state.request.logprobs:
             vals, ids = self._row_logprobs(logits_row)
             vals, ids = np.asarray(vals[0]), np.asarray(ids[0])
             state.logprobs[len(state.generated) - 1] = [
-                (int(i), float(v))
-                for i, v in zip(ids[: state.request.logprobs],
-                                vals[: state.request.logprobs])
+                (int(i_), float(v))
+                for i_, v in zip(ids[: state.request.logprobs],
+                                 vals[: state.request.logprobs])
             ]
-        if self.config.record_logits:
+        if self._records(state):
             self.logits_of.setdefault(state.request.rid, {})[
                 len(state.generated) - 1
             ] = np.asarray(logits_row[: self.model.cfg.vocab], np.float32)
         if state.first_token_time is None:
             state.first_token_time = time.perf_counter() - self._t0
+        if grp is not None and state.branch == 0:
+            # fork the awaiting siblings onto the primary's prompt pages: each
+            # aliases the resident KV (incref, zero copies — CoW privatizes on
+            # first divergent write) and samples its own first token from the
+            # same row under its branch seed
+            n_resident = int(self.cache.lens[state.slot])
+            for sib in grp.branches[1:]:
+                if sib.await_fork and not sib.done:
+                    self.cache.fork_slot(state.slot, sib.slot, n_resident)
+                    sib.await_fork = False
+                    self._first_token(sib, logits_row)
+
+    def _records(self, state: RequestState) -> bool:
+        rl = state.request.params.record_logits
+        return self.config.record_logits and rl is not False
+
+    # -- beam search (host-side selection, device-layout reorder) -----------------
+    def _beam_advance(self, group: BranchGroup) -> None:
+        """One joint beam step over a group's stashed candidate rows.
+
+        Pure HOST-side selection — the candidates already rode the step's
+        existing top-k logprob fetch — followed by block-table surgery only:
+        every surviving hypothesis is (parent branch, token); a branch that
+        keeps continuing itself keeps its slot untouched (the common,
+        non-diverging case — NO allocator event at all), a hypothesis hopping
+        parents rebinds its slot's row to a snapshot of the parent's
+        (cache.reorder_rows: incref'd aliasing, zero page copies — the next
+        divergent write CoWs), and a first-step sibling forks the primary
+        (cache.fork_slot). Candidates ending in eos move to the finished pool;
+        the group completes at >= beam_width finished hypotheses or the length
+        cap, returning the best n by cumulative logprob."""
+        params = group.request.params
+        w = params.beam_width
+        eos = group.request.eos_id
+        live = [st for st in group.branches if not st.done]
+        started = [st for st in live if not st.await_fork]
+        by_branch = {st.branch: st for st in started}
+        cands = []
+        for st in started:
+            vals, ids = group.pending_rows[st.branch]
+            for v, t in zip(vals[: w + 1], ids[: w + 1]):
+                cands.append((st.cum_logprob + float(v), st.branch, int(t)))
+        group.pending_rows.clear()
+        # deterministic total order: score desc, then branch, then token —
+        # replays identically across engines/preemptions
+        cands.sort(key=lambda c: (-c[0], c[1], c[2]))
+        cont = []
+        for score, b, t in cands:
+            if eos is not None and t == eos:
+                group.finished.append(SequenceResult(
+                    tokens=list(by_branch[b].generated) + [t], logprobs={},
+                    cumulative_logprob=score, finish_reason=FINISH_EOS,
+                ))
+                continue
+            if len(cont) < w:
+                cont.append((score, b, t))
+        if len(group.finished) >= w or not cont:
+            self._finish_beam(group, live, survivors=False)
+            return
+        # slot assignment, identity-greedy: each parent's best continuation
+        # keeps the parent's own slot, so a step where every branch follows
+        # itself is a pure host append — no reorder, no allocator event
+        base = {st.branch: list(st.generated) for st in started}
+        carriers = list(live)
+        assign, spill = [], []
+        for score, b, t in cont:
+            st = by_branch[b]
+            if st in carriers:
+                carriers.remove(st)
+                assign.append((st, st, t, score))
+            else:
+                spill.append((score, b, t))
+        for (score, b, t), carrier in zip(spill, carriers):
+            assign.append((carrier, by_branch[b], t, score))
+        now = time.perf_counter() - self._t0
+        forks = [
+            (c, p) for c, p, _, _ in assign if c is not p and c.await_fork
+        ]
+        reorder = {
+            c.slot: p.slot for c, p, _, _ in assign
+            if c is not p and not c.await_fork
+        }
+        for carrier, parent in forks:
+            self.cache.fork_slot(
+                parent.slot, carrier.slot, int(self.cache.lens[parent.slot])
+            )
+            carrier.await_fork = False
+        self.cache.reorder_rows(reorder)
+        for carrier, parent, t, score in assign:
+            carrier.generated = base[parent.branch] + [t]
+            carrier.cum_logprob = score
+            carrier.hold = False
+            if carrier.first_token_time is None:
+                carrier.first_token_time = now
+        self._slots_stale = True
+        if self.trace is not None:
+            self.trace.instant(
+                "beam_step", group.primary.slot, rid=group.request.rid,
+                moves=len(reorder), forks=len(forks),
+                finished=len(group.finished),
+            )
+        if len(assign[0][0].generated) >= params.max_new_tokens:
+            self._finish_beam(group, live, survivors=True)
+
+    def _finish_beam(self, group: BranchGroup, live, *, survivors: bool) -> None:
+        """Retire a beam group: at the length cap the live hypotheses join the
+        finished pool as FINISH_LENGTH survivors; every live branch gets its
+        finish_reason stamped so the group sweeps out as a unit (the branch
+        states' own reasons never surface — group.sequences() ranks the
+        finished pool)."""
+        if survivors:
+            for st in live:
+                if not st.await_fork and not st.hold:
+                    group.finished.append(SequenceResult(
+                        tokens=list(st.generated), logprobs={},
+                        cumulative_logprob=st.cum_logprob,
+                        finish_reason=FINISH_LENGTH,
+                    ))
+        for st in live:
+            if st.finish_reason is None:
+                st.finish_reason = FINISH_LENGTH
+            st.hold = False
 
     # -- chunked prefill path ----------------------------------------------------
     def _admit_chunked(self, now: float) -> None:
@@ -403,6 +728,8 @@ class ServeEngine:
         to compute: the prompt's last position must produce logits)."""
         ps = self.cache.page_size
         for slot, state in self.scheduler.admit(self.queue, now, publish=False):
+            if state.await_fork:
+                continue  # fresh sibling: forks at the primary's first token
             n_ctx = len(state.context)
             skip = 0
             if self.config.prefill_compute_skip and self.cache.prefix_sharing:
@@ -428,7 +755,11 @@ class ServeEngine:
         monolithic engine imposes, at chunk granularity instead of
         whole-prompt granularity)."""
         running = self.scheduler.running
-        prefilling = [s for s in sorted(running) if running[s].phase == PREFILLING]
+        # chunk-cursor holders only: await_fork and beam-hold slots are
+        # PREFILLING (masked from decode) but have no chunk to advance
+        prefilling = [
+            s for s in sorted(running) if running[s].chunk_cursor is not None
+        ]
         if not prefilling:
             return
         ps = self.cache.page_size
@@ -532,6 +863,15 @@ class ServeEngine:
         self._tokens_dev = jnp.asarray(tokens)
         self._slot_f32 = jnp.asarray(f32p)
         self._slot_i32 = jnp.asarray(np.vstack([active, i32p]))
+        if self._grammar_on:
+            # per-slot grammar states re-seed from the host mirror on the same
+            # trigger as the other vectors; in steady state the step's own
+            # (donated) output flows back and the host just replays transitions
+            gstate = np.zeros((b,), np.int32)
+            for slot, state in decoding.items():
+                if state.grammar_state is not None:
+                    gstate[slot] = state.grammar_state
+            self._gstate_dev = jnp.asarray(gstate)
         self._slots_stale = False
         self._slot_sig = sig
 
@@ -569,38 +909,50 @@ class ServeEngine:
             tr.begin("fused_window" if k > 1 else "decode", -1, k=k,
                      batch=len(decoding))
         # requests riding the per-token fetch for logprobs (opt-in per request;
-        # with nobody opted in the (B, k) pair is computed but never fetched)
+        # with nobody opted in the (B, k) pair is computed but never fetched) —
+        # beam groups always ride it: the top-k pair IS their candidate set
         want_lp = self._lp_k and any(
-            st.request.logprobs for st in decoding.values()
+            st.request.logprobs
+            or (st.group is not None and st.group.mode == "beam")
+            for st in decoding.values()
         )
         lp_vals = lp_ids = None
+        g_args = (
+            (self._gstate_dev, self._gmask_dev, self._gtrans_dev)
+            if self._grammar_on else ()
+        )
+        lp_i = 6 if self._grammar_on else 5  # top-k pair's output index
         t0 = time.perf_counter()
         if k > 1:
             out = self._multistep(
                 self.params, self.cache.pools, self._tokens_dev, tables, lens,
-                self._slot_f32, self._slot_i32,
+                self._slot_f32, self._slot_i32, *g_args,
             )
             toks, last, new_lens, pools = out[:4]
             ids = np.asarray(toks)  # (K, B) — the fused window's only D2H
+            lps = np.asarray(out[4])  # (K, B) chosen logprobs, same round
             if want_lp:
-                lp_vals = np.asarray(out[4][0])  # (K, B, k) — same round as ids
-                lp_ids = np.asarray(out[4][1])
+                lp_vals = np.asarray(out[lp_i][0])  # (K, B, k)
+                lp_ids = np.asarray(out[lp_i][1])
             logits_rows = None
             self._c_fused.inc(k)
         else:
             out = self._step(
                 self.params, self.cache.pools, self._tokens_dev, tables, lens,
-                self._slot_f32, self._slot_i32,
+                self._slot_f32, self._slot_i32, *g_args,
             )
             last, logits, new_lens, pools = out[:4]
             ids = np.asarray(last)[None]  # (1, B)
+            lps = np.asarray(out[4])[None]  # (1, B)
             if want_lp:
-                lp_vals = np.asarray(out[4][0])[None]  # (1, B, k)
-                lp_ids = np.asarray(out[4][1])[None]
+                lp_vals = np.asarray(out[lp_i][0])[None]  # (1, B, k)
+                lp_ids = np.asarray(out[lp_i][1])[None]
             logits_rows = (
                 np.asarray(logits[:, : self.model.cfg.vocab], np.float32)
                 if record else None
             )
+        if self._grammar_on:
+            self._gstate_dev = out[5]  # donated input's successor
         t_dev = time.perf_counter() - t0
         self.cache.pools = pools
         self.cache.adopt_lens_device(new_lens)
@@ -619,11 +971,30 @@ class ServeEngine:
                     step_ms=per_tok * 1e3,
                     ema_ms=(self._straggler.ema or 0.0) * 1e3,
                 )
+        beam_groups = []
         for i in range(k):
             for slot, state in decoding.items():
                 if state.done:
                     continue  # finished mid-window (EOS): overrun ids discarded
-                state.generated.append(int(ids[i, slot]))
+                grp = state.group
+                if grp is not None and grp.mode == "beam":
+                    # the KV write happened (bump the mirror), but the DEVICE
+                    # sample is not the branch's next token — the top-k pair
+                    # is this branch's candidate row, selection is joint
+                    self.cache.bump_len(slot)
+                    grp.pending_rows[state.branch] = (
+                        lp_vals[i, slot], lp_ids[i, slot]
+                    )
+                    if grp not in beam_groups:
+                        beam_groups.append(grp)
+                    continue
+                tok = int(ids[i, slot])
+                state.generated.append(tok)
+                state.cum_logprob += float(lps[i, slot])
+                if state.grammar_state is not None:
+                    state.grammar_state = int(
+                        self._gtrans_host[state.grammar_state, tok]
+                    )
                 self.cache.bump_len(slot)
                 n_lp = state.request.logprobs
                 if n_lp and lp_vals is not None:
@@ -632,10 +1003,16 @@ class ServeEngine:
                         for t, v in zip(lp_ids[i, slot, :n_lp],
                                         lp_vals[i, slot, :n_lp])
                     ]
-                if logits_rows is not None:
+                if logits_rows is not None and self._records(state):
                     self.logits_of.setdefault(state.request.rid, {})[
                         len(state.generated) - 1
                     ] = logits_rows[slot].copy()
+        for grp in beam_groups:
+            started = [
+                st for st in grp.branches if not st.await_fork and not st.done
+            ]
+            if all(st.branch in grp.pending_rows for st in started):
+                self._beam_advance(grp)
         if tr is not None:
             tr.end("fused_window" if k > 1 else "decode", -1)
         wall = time.perf_counter() - wall0
@@ -646,18 +1023,24 @@ class ServeEngine:
             state = self.scheduler.running[slot]
             if state.done:
                 state.finish_time = time.perf_counter() - self._t0
+                reason = state.finished_reason()
                 if self.trace is not None:
-                    eos = state.request.eos_id
-                    reason = (
-                        "eos" if eos is not None and state.generated
-                        and state.generated[-1] == eos else "max_tokens"
-                    )
                     self.trace.instant(
                         "finish", slot, rid=state.request.rid, reason=reason,
-                        generated=len(state.generated),
+                        generated=len(state.generated), branch=state.branch,
                     )
+                # freeing this branch's pages decrefs — never frees — the
+                # pages its still-running siblings alias (cache.free_slot),
+                # so one branch's EOS neither stalls nor corrupts the rest
                 self.scheduler.finish(slot)
-                self.results[state.request.rid] = state
+                grp = state.group
+                if grp is None:
+                    self.results[state.request.rid] = state
+                elif grp.all_done and state.request.rid not in self.results:
+                    # the group completes as a UNIT: results carry the primary,
+                    # whose .sequences ranks/collects every branch
+                    grp.primary.finish_time = state.finish_time
+                    self.results[state.request.rid] = grp.primary
 
     # -- main loop ----------------------------------------------------------------
     def run(self, requests: Optional[Sequence[Request]] = None) -> Dict[int, RequestState]:
@@ -679,6 +1062,13 @@ class ServeEngine:
                 self.queue.push(state)
             for state in self.scheduler.reject_impossible(self.queue):
                 state.finish_time = time.perf_counter() - self._t0
+                if state.group is not None:
+                    for st in state.group.branches:
+                        if st.finish_reason is None:  # keep earlier finishes
+                            st.error = state.error
+                            st.finish_reason = FINISH_ERROR
+                else:
+                    state.finish_reason = FINISH_ERROR
                 self.results[state.request.rid] = state
             if chunked:
                 self._admit_chunked(now)
@@ -749,7 +1139,13 @@ class ServeEngine:
         ttft = np.array(
             [s.first_token_time - s.request.arrival_time for s in states]
         )
-        n_tok = sum(len(s.generated) for s in states)
+        # decode work done: a branch group's primary stands for the whole
+        # group in results, so count every branch's tokens, not just its own
+        n_tok = sum(
+            sum(len(b.generated) for b in s.group.branches)
+            if s.group is not None else len(s.generated)
+            for s in states
+        )
         return {
             "requests": len(states),
             "failed": len(failed),

@@ -25,7 +25,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from .cache import PagedKVCache
-from .request import DECODING, RequestQueue, RequestState
+from .request import DECODING, BranchGroup, RequestQueue, RequestState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +69,26 @@ class Scheduler:
         # for decode growth to collide with
         watermark = self.config.watermark_pages if self.running else 0
         return need + watermark <= self.cache.num_free
+
+    def _group_need(self, group: BranchGroup) -> int:
+        """Free-list pages a whole branch group needs at admission. Fresh
+        siblings fork the primary's pages, so each costs at most ONE fresh page
+        (the +1-token decode headroom when the prompt fills its last page, or
+        the eventual CoW privatization of a shared partial page — never both at
+        once); re-admitted siblings re-prefill their own diverged contexts and
+        are costed like any request (their chains re-adopt whatever prefix
+        pages survived, including each other's)."""
+        need = 0
+        for st in group.branches:
+            if st.done:
+                continue
+            if st.await_fork:
+                need += 1
+            else:
+                need += self.cache.new_pages_needed(
+                    st.context, chain=self._chain_of(st)
+                )
+        return need
 
     def impossible(self, state: RequestState) -> bool:
         """True when this request can NEVER admit: its context needs more pages
@@ -119,7 +139,35 @@ class Scheduler:
         slots = self.free_slots()
         while queue and slots:
             state = queue.peek()
-            if state.request.arrival_time > now or not self.fits(state):
+            if state.request.arrival_time > now:
+                break
+            group = state.group
+            if group is not None:
+                # a branch group admits AS A UNIT: one slot per live branch,
+                # pages for every re-prefilling member plus fork headroom for
+                # the fresh ones — or not at all (partial groups would let a
+                # sibling's admission preempt its own primary)
+                live = [st for st in group.branches if not st.done]
+                watermark = self.config.watermark_pages if self.running else 0
+                if (len(slots) < len(live)
+                        or self._group_need(group) + watermark > self.cache.num_free):
+                    break
+                queue.pop()
+                group.pending_rows.clear()
+                for st in live:
+                    slot = slots.pop(0)
+                    if not st.await_fork:
+                        ctx = st.context
+                        self.cache.allocate(
+                            slot, self.cache.pages_for(len(ctx) + 1), tokens=ctx,
+                            chain=self._chain_of(st), publish=publish,
+                        )
+                    st.slot = slot
+                    st.admit_time = now
+                    self.running[slot] = st
+                    admitted.append((slot, st))
+                continue
+            if not self.fits(state):
                 break
             queue.pop()
             slot = slots.pop(0)
@@ -136,21 +184,43 @@ class Scheduler:
 
     # -- decode-page guarantee -------------------------------------------------------
     def _preempt_one(self, queue: RequestQueue, keep_slot: int) -> Optional[RequestState]:
-        victims = [s for s in self.running if s != keep_slot]
+        keep_group = (
+            self.running[keep_slot].group if keep_slot in self.running else None
+        )
+        victims = [
+            s for s, st in self.running.items()
+            if s != keep_slot
+            and (keep_group is None or st.group is not keep_group)
+        ]
         if not victims:
             return None
         slot = victims[-1]  # most recently admitted
         state = self.running.pop(slot)
+        group = state.group
+        # a group member's eviction evicts the WHOLE group: its siblings alias
+        # its pages (sample) or advance in lockstep with it (beam), so leaving
+        # them running would either pin the pages eviction was meant to free or
+        # stall the joint step. The group requeues as its primary — re-admission
+        # re-prefills every diverged branch and re-forks the fresh ones.
+        members = [state]
+        if group is not None:
+            for s in [s for s, st in list(self.running.items()) if st.group is group]:
+                members.append(self.running.pop(s))
+            group.pending_rows.clear()
         if self.trace is not None:
             self.trace.instant(
                 "preempt", slot, rid=state.request.rid,
                 n_preemptions=state.n_preemptions + 1, keep_slot=keep_slot,
+                group_size=len(members),
             )
-        self.cache.free_slot(slot)
-        state.release()  # drops the slot AND any mid-prefill chunk cursor
-        state.n_preemptions += 1
-        queue.requeue_front(state)
-        return state
+        for st in members:
+            if st.slot is not None:
+                self.cache.free_slot(st.slot)
+            st.release()  # drops the slot AND any mid-prefill chunk cursor
+        head = state if group is None else group.primary
+        head.n_preemptions += 1
+        queue.requeue_front(head)
+        return head
 
     def ensure_decode_page(self, slot: int, queue: RequestQueue) -> None:
         """Make sure ``slot`` owns a WRITABLE page covering position lens[slot]
@@ -194,6 +264,10 @@ class Scheduler:
         k = 1 << 30
         for slot, state in self.running.items():
             if state.phase != DECODING or self.cache.needs_cow(slot):
+                return 0
+            if state.group is not None and state.group.mode == "beam":
+                # beam steps interleave host-side candidate selection and
+                # block-table reorders between decodes — never fusable
                 return 0
             capacity = (
                 len(self.cache.pages_of[slot]) * self.cache.page_size

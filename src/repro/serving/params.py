@@ -1,0 +1,184 @@
+"""GenerationParams / Sequence / RequestHandle — the generation API.
+
+One validated record replaces the per-request surface that accreted across
+PRs 1-6 (``Request.max_new_tokens``, ``.eos_id``, ``.sampling``, ``.logprobs``)
+and carries the parallel-generation axes it was redesigned for:
+
+  - ``n`` > 1: best-of-n parallel sampling. The engine admits N branches as a
+    group whose block-table rows FORK the prompt's pages (LayoutPaged.fork_group
+    — ~1x prompt KV cost, copy-on-write privatizes on divergence). Branch ``b``
+    draws from the stream of ``seed + b``: branch b of an n-branch request is
+    token-exact with a serial n=1 request using seed+b and the same rid.
+  - ``beam_width`` >= 2: beam search. Deterministic (temperature/top-k/top-p
+    must stay at their defaults — validated HERE, at construction, never
+    mid-step); each step reorders block-table rows (a pure device-mirror
+    permutation when no branch diverges) and hypotheses ending in eos move to
+    the finished pool. The best ``n`` hypotheses come back.
+  - ``grammar``: constrained decoding (serving/grammar.TokenDFA) as an on-device
+    logit-mask stage — see serving/grammar.py.
+
+Results are ``Sequence`` objects — per branch: tokens, logprobs, cumulative
+score, and an explicit ``finish_reason`` ("eos" | "length" | "error") replacing
+the old implicit hit-max-tokens inference. ``n=1`` callers see a one-element
+list. ``submit()`` returns a ``RequestHandle``.
+
+Incompatible combinations fail at ENQUEUE (``GenerationParams.__post_init__``
+plus the engine's capacity checks in ``submit``), so a mid-step scheduler never
+discovers an impossible request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.grammar import TokenDFA
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationParams:
+    """Everything a client says about HOW to generate (the what — the prompt —
+    stays on the Request). Frozen and validated at construction."""
+
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # token selection (device-side, serving/sampling.py): temperature 0 =
+    # greedy argmax; top_k/top_p filter the sampled distribution; seed names
+    # the PRNG stream (branch b of a parallel request uses seed + b)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    # top-k logprobs returned per generated token (<= EngineConfig.logprobs_k)
+    logprobs: int = 0
+    # parallel generation
+    n: int = 1              # sequences to return (sampling: branch count)
+    beam_width: int = 0     # 0 = off; >= 2 = beam search width
+    grammar: Optional[TokenDFA] = None  # constrained decoding automaton
+    # per-request logits recording: None follows EngineConfig.record_logits,
+    # True requires it, False opts this request out of an enabled engine
+    record_logits: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.logprobs < 0:
+            raise ValueError(f"logprobs must be >= 0, got {self.logprobs}")
+        if self.n < 1:
+            raise ValueError(f"n must be >= 1, got {self.n}")
+        # SamplingParams re-validates temperature/top_k/top_p ranges
+        _ = self.sampling
+        if self.beam_width == 1:
+            raise ValueError(
+                "beam_width=1 is greedy decoding — use n=1, temperature=0"
+            )
+        if self.beam_width:
+            if self.beam_width < 0:
+                raise ValueError(f"beam_width must be >= 0, got {self.beam_width}")
+            if self.temperature != 0.0 or self.top_k != 0 or self.top_p != 1.0:
+                raise ValueError(
+                    "beam search is deterministic: temperature/top_k/top_p "
+                    "must stay at their defaults with beam_width > 0"
+                )
+            if self.n > self.beam_width:
+                raise ValueError(
+                    f"n={self.n} sequences from a beam of {self.beam_width} — "
+                    f"n must be <= beam_width"
+                )
+            if self.grammar is not None:
+                raise ValueError(
+                    "grammar-constrained beam search is not supported "
+                    "(beam candidates come from the unmasked top-k)"
+                )
+            if self.logprobs:
+                raise ValueError(
+                    "per-position logprobs are not recorded under beam search "
+                    "(hypothesis histories permute across steps); use the "
+                    "returned cumulative_logprob"
+                )
+        elif self.n > 1 and self.temperature == 0.0:
+            raise ValueError(
+                "n>1 with temperature=0 would generate n identical greedy "
+                "branches — set temperature > 0 or use beam_width"
+            )
+
+    @property
+    def sampling(self) -> SamplingParams:
+        return SamplingParams(
+            temperature=self.temperature, top_k=self.top_k, top_p=self.top_p,
+            seed=self.seed,
+        )
+
+    @property
+    def n_branches(self) -> int:
+        """Batch slots a request of this shape occupies while running."""
+        return self.beam_width if self.beam_width else self.n
+
+    @classmethod
+    def from_legacy(cls, max_new_tokens: Optional[int] = None,
+                    eos_id: Optional[int] = None,
+                    sampling: Optional[SamplingParams] = None,
+                    logprobs: Optional[int] = None) -> "GenerationParams":
+        """Build from the pre-redesign kwarg surface (the Request shim)."""
+        sp = sampling or SamplingParams()
+        return cls(
+            max_new_tokens=16 if max_new_tokens is None else max_new_tokens,
+            eos_id=eos_id,
+            temperature=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
+            seed=sp.seed,
+            logprobs=logprobs or 0,
+        )
+
+
+# finish_reason values (Sequence.finish_reason)
+FINISH_EOS = "eos"
+FINISH_LENGTH = "length"
+FINISH_ERROR = "error"
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One generated branch: what a single RequestState used to be, made
+    first-class so every request — n=1 included — returns a LIST of these
+    instead of the results dict growing ad-hoc parallel fields."""
+
+    tokens: List[int]
+    # generated-token index -> [(token_id, logprob), ...] top-k entries
+    logprobs: Dict[int, List[Tuple[int, float]]]
+    # sum over generated tokens of log P(token | prefix) under the UNMASKED
+    # model distribution (grammar masks constrain selection, not the score);
+    # beam search ranks its hypotheses by exactly this value
+    cumulative_logprob: float
+    finish_reason: Optional[str]  # "eos" | "length" | "error" | None (running)
+
+
+class RequestHandle:
+    """What ``submit()`` returns: the request's identity plus accessors into
+    the engine's results once ``run()`` completes. Deliberately thin — the
+    engine stays a run-to-completion batch loop; the handle is the stable
+    client-side name for one request's outcome."""
+
+    def __init__(self, engine, rid: int):
+        self._engine = engine
+        self.rid = rid
+
+    @property
+    def done(self) -> bool:
+        return self.rid in self._engine.results
+
+    def result(self):
+        """The finished request's state record (raises until run() finished
+        it). ``.sequences`` on the result carries the per-branch outputs."""
+        state = self._engine.results.get(self.rid)
+        if state is None:
+            raise RuntimeError(
+                f"request {self.rid} has not finished (run the engine first)"
+            )
+        return state
+
+    @property
+    def sequences(self) -> List[Sequence]:
+        return self.result().sequences
+
+    def __repr__(self):
+        return f"RequestHandle(rid={self.rid}, done={self.done})"

@@ -82,7 +82,10 @@ def pack_slot_params(states_by_slot, max_batch: int):
     f32[1] = 1.0  # top_p off
     i32 = np.zeros((2, max_batch), np.int32)
     for slot, state in states_by_slot.items():
-        sp = state.request.sampling
+        # the state's EFFECTIVE policy — branch b of a parallel-generation
+        # group folds its branch index into the seed (request.py), so packing
+        # reads the state, never request.sampling directly
+        sp = state.sampling
         f32[0, slot] = sp.temperature
         f32[1, slot] = sp.top_p
         i32[0, slot] = sp.top_k

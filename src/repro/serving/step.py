@@ -38,7 +38,8 @@ def top_logprobs(logits, vocab: int, k: int):
 
 
 def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
-                  tokens, block_tables, context_lens, slot_f32, slot_i32):
+                  tokens, block_tables, context_lens, slot_f32, slot_i32,
+                  grammar=None):
     """One fused decode iteration: append -> attend -> sample, all on device.
 
     The per-slot policy rides in TWO packed vectors (device_put on this
@@ -49,25 +50,48 @@ def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
     ``active`` is the phase bitmap (masked slots null-route on device — see
     decode_step_paged); the sampled position folds ``context_lens + 1``, the
     length of the context the new token extends, so sampling is invariant
-    under preemption-recompute and batch recomposition. Returns
-    (next_tokens (B,) i32, logits (B, Vp), new_lens (B,) i32, caches).
+    under preemption-recompute and batch recomposition.
+
+    ``grammar`` (None or (gstate (B,) i32, gmask (S, vocab) f32, gtrans
+    (S, vocab) i32)) is the constrained-decoding stage: each slot's mask row is
+    gathered by its automaton state and ADDED to the logits inside the sampler,
+    and the state advances by the token just sampled — the grammar walks
+    entirely on device, preserving the decode loop's zero-D2H property. Row 0
+    of the tables is the reserved unconstrained state (all-zero mask,
+    self-loops), so ungated slots ride the same program.
+
+    Returns (next_tokens (B,) i32, logits (B, Vp), new_lens (B,) i32, caches,
+    chosen_lp (B,) f32[, new_gstate (B,) i32 when grammar]). ``chosen_lp`` is
+    log P(next_token | prefix) under the UNMASKED distribution — the per-branch
+    cumulative score best-of-n ranks by (a grammar constrains selection, not
+    the score).
     """
     active = slot_i32[0]
     logits, caches = model.decode_step_paged(
         params, caches, tokens, block_tables, context_lens,
         shard=shard, attn_impl=attn_impl, kv_spec=kv_spec, active=active,
     )
+    mask = None
+    if grammar is not None:
+        gstate, gmask, gtrans = grammar
+        mask = gmask[gstate]  # (B, vocab) per-slot additive penalty rows
     nxt = ops.sample_tokens(
         logits, slot_f32[0], slot_i32[1], slot_f32[1],
         slot_i32[2].astype(jnp.uint32),  # i32 -> u32 wraps: bit-identical
-        context_lens + 1, vocab=vocab,
+        context_lens + 1, vocab=vocab, mask=mask,
     )
     new_lens = context_lens + jnp.where(active > 0, 1, 0).astype(context_lens.dtype)
-    return nxt, logits, new_lens, caches
+    lp = jax.nn.log_softmax(logits[:, :vocab].astype(jnp.float32), axis=-1)
+    chosen_lp = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+    if grammar is None:
+        return nxt, logits, new_lens, caches, chosen_lp
+    new_gstate = jnp.where(active > 0, gtrans[gstate, nxt], gstate)
+    return nxt, logits, new_lens, caches, chosen_lp, new_gstate
 
 
 def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
-                          kv_spec=None, vocab=None, logprobs_k=0):
+                          kv_spec=None, vocab=None, logprobs_k=0,
+                          grammar=False):
     shard = Sharder(mesh, rules)
 
     if vocab is None:
@@ -87,7 +111,7 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
         return paged_serve_step
 
     def fused_serve_step(params, caches, tokens, block_tables, context_lens,
-                         slot_f32, slot_i32):
+                         slot_f32, slot_i32, *g):
         """The device-resident decode step: one batched token per active slot,
         SAMPLED on device (greedy/temperature/top-k/top-p per slot, packed in
         slot_f32/slot_i32 — see _fused_decode). The only per-token D2H traffic
@@ -96,26 +120,28 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
         them. ``context_lens`` is the engine's device-resident lens mirror
         (donated); ``new_lens`` is its successor — the LayoutPaged
         index->offset state advances beside the pool it indexes, no host
-        round-trip. With ``logprobs_k > 0`` the step additionally returns the
-        per-slot (vals, ids) top-k logprob pair (compile-time width: k = 0
-        compiles the identical program as before the feature existed)."""
+        round-trip. ``chosen_lp`` always rides the output pytree (same fetch
+        round as the ids; free when the host ignores it). With ``logprobs_k >
+        0`` the step additionally returns the per-slot (vals, ids) top-k
+        logprob pair (compile-time width). With ``grammar`` the factory adds
+        three positional args — gstate (B,) i32 (donated, like the lens
+        mirror), gmask (S, vocab) f32, gtrans (S, vocab) i32 — and returns the
+        advanced gstate after chosen_lp."""
         out = _fused_decode(
             model, shard, attn_impl, kv_spec, vocab, params, caches,
             tokens, block_tables, context_lens, slot_f32, slot_i32,
+            grammar=tuple(g) if grammar else None,
         )
         if not logprobs_k:
             return out
-        nxt, logits, new_lens, caches_out = out
-        return nxt, logits, new_lens, caches_out, top_logprobs(
-            logits, vocab, logprobs_k
-        )
+        return out + (top_logprobs(out[1], vocab, logprobs_k),)
 
     return fused_serve_step
 
 
 def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
                                attn_impl="auto", kv_spec=None, vocab=None,
-                               logprobs_k=0):
+                               logprobs_k=0, grammar=False):
     """K fused decode iterations in one on-device loop (jax.lax.scan).
 
     Legal only over an event-free horizon (Scheduler.event_free_horizon): no
@@ -124,33 +150,44 @@ def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
     iteration appends the current token's KV, attends, samples, and feeds the
     sampled token into the next iteration's embedding lookup; lengths advance
     on device. Returns (tokens_per_step (K, B) i32, last_tokens (B,),
-    new_lens (B,), caches) — one dispatch and one (K, B) ids fetch per K
-    generated tokens. With ``logprobs_k > 0`` the scan additionally stacks the
-    per-step top-k logprob pair ((K, B, k) vals + ids), fetched in the same
-    round as the ids.
+    new_lens (B,), caches, chosen_lps (K, B) f32) — one dispatch and one
+    (K, B) fetch round per K generated tokens. With ``grammar`` the per-slot
+    automaton state rides the scan CARRY exactly like the lengths do (the K
+    masks and transitions all happen inside the loop — constrained decoding
+    costs zero extra host round-trips even fused), and the advanced gstate is
+    returned after the chosen_lps. With ``logprobs_k > 0`` the scan
+    additionally stacks the per-step top-k logprob pair ((K, B, k) vals +
+    ids), fetched in the same round as the ids.
     """
     shard = Sharder(mesh, rules)
 
     def fused_multistep(params, caches, tokens, block_tables, context_lens,
-                        slot_f32, slot_i32):
+                        slot_f32, slot_i32, *g):
         def body(carry, _):
-            toks, lens, cs = carry
-            nxt, logits, new_lens, cs = _fused_decode(
+            toks, lens, gs, cs = carry
+            out = _fused_decode(
                 model, shard, attn_impl, kv_spec, vocab, params, cs,
                 toks, block_tables, lens, slot_f32, slot_i32,
+                grammar=(gs, g[1], g[2]) if grammar else None,
             )
-            y = nxt if not logprobs_k else (
-                nxt, top_logprobs(logits, vocab, logprobs_k)
+            nxt, logits, new_lens, cs, chosen_lp = out[:5]
+            new_gs = out[5] if grammar else gs
+            y = (nxt, chosen_lp) if not logprobs_k else (
+                nxt, chosen_lp, top_logprobs(logits, vocab, logprobs_k)
             )
-            return (nxt, new_lens, cs), y
+            return (nxt, new_lens, new_gs, cs), y
 
-        (last, new_lens, caches), ys = jax.lax.scan(
-            body, (tokens, context_lens, caches), None, length=k_steps
+        gs0 = g[0] if grammar else jnp.zeros_like(context_lens)
+        (last, new_lens, gs, caches), ys = jax.lax.scan(
+            body, (tokens, context_lens, gs0, caches), None, length=k_steps
         )
-        if not logprobs_k:
-            return ys, last, new_lens, caches
-        toks, lp = ys
-        return toks, last, new_lens, caches, lp
+        toks, lps = ys[0], ys[1]
+        out = (toks, last, new_lens, caches, lps)
+        if grammar:
+            out = out + (gs,)
+        if logprobs_k:
+            out = out + (ys[2],)
+        return out
 
     return fused_multistep
 

@@ -1,0 +1,573 @@
+"""Parallel generation as layout forks: n-best sampling, beam search,
+constrained decoding, and the GenerationParams API.
+
+Three layers, matching where each law lives:
+  - core/layouts.py: fork_group / permute_rows are pure layout algebra
+    (property-based where hypothesis is installed, example-based everywhere);
+  - engine/cache.py: fork_slot / reorder_rows are the allocator's physical
+    counterparts — refcount conservation, zero-copy reorders, device-mirror
+    agreement (FakeModel pools, no transformer);
+  - engine/engine.py: the end-to-end laws — branch b of an n-branch request is
+    token-exact with a serial request at seed+b, forked branches share prompt
+    pages, one branch's EOS never stalls its siblings, beam search is
+    deterministic and ranked, every grammar-constrained output parses.
+"""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.extents import Extents
+from repro.core.layouts import LayoutPaged
+from repro.models import build_model, get_config
+from repro.serving import (
+    JSON_ARRAY_CHARS,
+    GenerationParams,
+    RequestHandle,
+    TokenDFA,
+    fixed_json_array_dfa,
+    json_array_dfa,
+)
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine.cache import PagedKVCache
+from repro.serving.sampling import SamplingParams
+
+
+# =====================================================================================
+# layout algebra — fork_group / permute_rows (core/layouts.py)
+# =====================================================================================
+def paged(rows, page_size=4, num_pages=32, shared=()):
+    n_seq = len(rows)
+    return LayoutPaged(
+        Extents.fully_dynamic(n_seq, 2, max(len(r) for r in rows) * page_size, 3),
+        tuple(tuple(r) for r in rows),
+        page_size,
+        num_pages,
+        tuple(shared),
+    )
+
+
+def test_fork_group_shares_leading_pages_and_flips_uniqueness():
+    lay = paged([[1, 2, 3]])
+    assert lay.is_unique()
+    forked = lay.fork_group(0, 3, fresh_pages=[(4,), (5,), (6,)])
+    assert forked.extents.sizes[0] == 4
+    for b, tail in enumerate([4, 5, 6]):
+        row = forked.block_table[1 + b]
+        assert row[:2] == (1, 2)  # leading pages aliased, not copied
+        assert row[2] == tail
+    assert not forked.is_unique()  # internal aliasing until CoW resolves it
+
+
+def test_fork_group_equals_successive_forks():
+    lay = paged([[1, 2]])
+    grouped = lay.fork_group(0, 2, fresh_pages=[(7,), (8,)])
+    serial = lay.fork(0, (7,)).fork(0, (8,))
+    assert grouped.block_table == serial.block_table
+
+
+def test_fork_group_validates():
+    lay = paged([[1, 2]])
+    with pytest.raises(ValueError, match="n >= 1"):
+        lay.fork_group(0, 0)
+    with pytest.raises(ValueError, match="fresh-page tails"):
+        lay.fork_group(0, 2, fresh_pages=[(3,)])
+
+
+def test_permute_rows_identity_and_roundtrip():
+    lay = paged([[1, 2], [3, 4], [5, 6]])
+    assert lay.permute_rows([0, 1, 2]).block_table == lay.block_table
+    perm = [2, 0, 1]
+    inv = [perm.index(i) for i in range(3)]
+    assert lay.permute_rows(perm).permute_rows(inv).block_table == lay.block_table
+
+
+def test_permute_rows_preserves_offset_image():
+    lay = paged([[1, 2], [3, 4]])
+    before = sorted(np.asarray(lay.offsets_dense()).reshape(-1).tolist())
+    after = sorted(
+        np.asarray(lay.permute_rows([1, 0]).offsets_dense()).reshape(-1).tolist()
+    )
+    assert before == after  # no page copied, no entry rewritten
+
+
+def test_permute_rows_rejects_non_permutations():
+    lay = paged([[1], [2]])
+    with pytest.raises(ValueError, match="not a permutation"):
+        lay.permute_rows([0, 0])
+    with pytest.raises(ValueError, match="not a permutation"):
+        lay.permute_rows([0])
+
+
+# hypothesis leg: the same laws over random tables (skipped without hypothesis,
+# mirroring test_layouts.py)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @st.composite
+    def paged_layouts(draw):
+        n_seq = draw(st.integers(1, 4))
+        n_pages = draw(st.integers(1, 4))
+        rows = [
+            draw(
+                st.lists(
+                    st.integers(1, 31), min_size=n_pages, max_size=n_pages
+                )
+            )
+            for _ in range(n_seq)
+        ]
+        return paged(rows)
+
+    @settings(max_examples=50, deadline=None)
+    @given(paged_layouts(), st.randoms(use_true_random=False))
+    def test_permute_rows_is_a_group_action(lay, rnd):
+        n = len(lay.block_table)
+        perm = list(range(n))
+        rnd.shuffle(perm)
+        permuted = lay.permute_rows(perm)
+        # row i of the result is row perm[i] of the source
+        for i in range(n):
+            assert permuted.block_table[i] == lay.block_table[perm[i]]
+        inv = [perm.index(i) for i in range(n)]
+        assert permuted.permute_rows(inv).block_table == lay.block_table
+
+    @settings(max_examples=50, deadline=None)
+    @given(paged_layouts(), st.integers(1, 3), st.integers(0, 100))
+    def test_fork_group_only_appends_aliased_rows(lay, n, seed):
+        rnd = np.random.default_rng(seed)
+        src = int(rnd.integers(0, len(lay.block_table)))
+        width = len(lay.block_table[src])
+        tails = [
+            tuple(int(p) for p in rnd.integers(1, 31, size=min(1, width)))
+            for _ in range(n)
+        ]
+        out = lay.fork_group(src, n, fresh_pages=tails)
+        assert out.block_table[: len(lay.block_table)] == lay.block_table
+        for b in range(n):
+            row = out.block_table[len(lay.block_table) + b]
+            upto = width - len(tails[b])
+            assert row[:upto] == lay.block_table[src][:upto]
+            assert row[upto:] == tails[b]
+
+except ImportError:  # pragma: no cover - hypothesis not installed
+    pass
+
+
+# =====================================================================================
+# allocator — fork_slot / reorder_rows (engine/cache.py, FakeModel pools)
+# =====================================================================================
+@dataclasses.dataclass
+class FakeCfg:
+    n_kv_heads: int = 2
+    head_dim: int = 4
+
+
+class FakeModel:
+    cfg = FakeCfg()
+
+    def init_paged_cache(self, num_pages, page_size):
+        shape = (1, num_pages, self.cfg.n_kv_heads, page_size, self.cfg.head_dim)
+        return [{"k": jnp.zeros(shape), "v": jnp.zeros(shape)}]
+
+
+def make_cache(num_pages=16, page_size=4, max_pages_per_seq=8, max_batch=4):
+    return PagedKVCache(
+        FakeModel(), num_pages=num_pages, page_size=page_size,
+        max_batch=max_batch, max_pages_per_seq=max_pages_per_seq,
+    )
+
+
+def ref_invariant(cache):
+    """Every page's refcount equals the number of block-table rows holding it
+    (plus prefix-index pins counted by the allocator the same way)."""
+    counts = {}
+    for pages in cache.pages_of.values():
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+    for p, n in counts.items():
+        assert cache.ref[p] == n, (p, cache.ref[p], n)
+
+
+def test_fork_slot_aliases_and_conserves_refcounts():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(7)))  # 7 tokens: page 2 is partial
+    free_before = c.num_free
+    pages = c.fork_slot(0, 1, 7)
+    assert pages[:2] == c.pages_of[0][:2]  # both pages aliased
+    assert int(c.lens[1]) == 7
+    assert all(c.ref[p] == 2 for p in c.pages_of[0])
+    assert c.num_free == free_before  # pages_for(8) == 2: no fresh page needed
+    ref_invariant(c)
+    assert c.stats()["branch_forks"] == 1
+
+
+def test_fork_slot_adds_headroom_page_on_aligned_prompts():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(8)))  # page-aligned: +1 headroom page
+    free_before = c.num_free
+    pages = c.fork_slot(0, 1, 8)
+    assert len(pages) == 3 and pages[:2] == c.pages_of[0][:2]
+    assert c.ref[pages[2]] == 1  # the private decode tail
+    assert c.num_free == free_before - 1
+    ref_invariant(c)
+
+
+def test_fork_slot_sibling_free_leaves_primary_intact():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(7)))
+    c.fork_slot(0, 1, 7)
+    c.free_slot(1)
+    assert all(c.ref[p] == 1 for p in c.pages_of[0])
+    assert c.pages_of[0] == [int(x) for x in c.tables[0][: len(c.pages_of[0])]]
+    ref_invariant(c)
+
+
+def test_fork_slot_exhaustion_raises():
+    c = make_cache(num_pages=4)  # 3 usable
+    c.allocate(0, 3, tokens=list(range(12)))
+    with pytest.raises(RuntimeError, match="pool exhausted"):
+        c.fork_slot(0, 1, 12)  # aligned fork needs a headroom page; none free
+
+
+def test_reorder_rows_is_zero_copy_and_conserves_refcounts():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(8)))
+    c.fork_slot(0, 1, 8)
+    c.fork_slot(0, 2, 8)
+    copies_before = c.cow_copies
+    free_before = c.num_free
+    # beam step: slot 1 and 2 both rebind to slot 0's hypothesis, 0 keeps its own
+    c.reorder_rows({1: 0, 2: 0})
+    assert c.cow_copies == copies_before  # table surgery only
+    # each child's private headroom tail is released (no other holder), but the
+    # shared pages never transit refcount zero — only frees, never copies
+    assert c.num_free == free_before + 2
+    assert c.pages_of[1][:2] == c.pages_of[0][:2] == c.pages_of[2][:2]
+    assert int(c.lens[1]) == int(c.lens[0])
+    ref_invariant(c)
+    assert c.stats()["beam_reorders"] == 1
+
+
+def test_reorder_rows_swap_never_transits_refcount_zero():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(8)))
+    c.allocate(1, 2, tokens=list(range(100, 108)))
+    a, b = list(c.pages_of[0]), list(c.pages_of[1])
+    free_before = c.num_free
+    c.reorder_rows({0: 1, 1: 0})  # full swap: every page released AND re-held
+    assert c.pages_of[0] == b and c.pages_of[1] == a
+    assert c.num_free == free_before  # no page ever hit the free list
+    ref_invariant(c)
+
+
+def test_reorder_rows_identity_is_free():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(8)))
+    c.fork_slot(0, 1, 8)
+    n = c.stats()["beam_reorders"]
+    c.reorder_rows({0: 0, 1: 1})
+    assert c.stats()["beam_reorders"] == n  # skipped entirely, no dirty rows
+
+
+def test_reorder_rows_device_mirror_matches_host():
+    c = make_cache()
+    c.allocate(0, 2, tokens=list(range(8)))
+    c.fork_slot(0, 1, 8)
+    c.fork_slot(0, 2, 8)
+    c.reorder_rows({1: 2, 2: 1})
+    tables_dev, lens_dev = c.device_state()
+    np.testing.assert_array_equal(np.asarray(tables_dev), c.tables)
+    np.testing.assert_array_equal(np.asarray(lens_dev), c.lens)
+
+
+# =====================================================================================
+# GenerationParams — validation at construction, legacy shims
+# =====================================================================================
+def test_params_validation():
+    with pytest.raises(ValueError, match="beam_width=1"):
+        GenerationParams(beam_width=1)
+    with pytest.raises(ValueError, match="deterministic"):
+        GenerationParams(beam_width=2, temperature=0.7)
+    with pytest.raises(ValueError, match="n must be <= beam_width"):
+        GenerationParams(beam_width=2, n=3)
+    with pytest.raises(ValueError, match="identical greedy"):
+        GenerationParams(n=2)  # n>1 needs temperature > 0
+    with pytest.raises(ValueError, match="not supported"):
+        GenerationParams(
+            beam_width=2, grammar=TokenDFA(4, [{0: 0}])
+        )
+    with pytest.raises(ValueError, match="cumulative_logprob"):
+        GenerationParams(beam_width=2, logprobs=3)
+    assert GenerationParams(n=4, temperature=0.5).n_branches == 4
+    assert GenerationParams(beam_width=4, n=2).n_branches == 4
+
+
+def test_request_legacy_kwargs_warn_and_delegate():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r = Request(
+            1, [1, 2], max_new_tokens=7, eos_id=3,
+            sampling=SamplingParams(temperature=0.5, seed=9), logprobs=0,
+        )
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert r.params.max_new_tokens == 7 and r.params.eos_id == 3
+    assert r.max_new_tokens == 7 and r.eos_id == 3  # delegating properties
+    assert r.sampling == SamplingParams(temperature=0.5, seed=9)
+
+
+def test_request_rejects_mixing_params_and_legacy_kwargs():
+    with pytest.raises(ValueError, match="either"):
+        Request(1, [1, 2], GenerationParams(max_new_tokens=4), max_new_tokens=8)
+
+
+# =====================================================================================
+# engine — end-to-end laws (real model)
+# =====================================================================================
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def fresh_engine(model, params, **kw):
+    base = dict(num_pages=64, page_size=4, max_batch=8, max_pages_per_seq=8)
+    base.update(kw)
+    return ServeEngine(model, params, EngineConfig(**base))
+
+
+def serial_tokens(model, params, prompt, seed, rid, n_gen=6, **cfg_kw):
+    eng = fresh_engine(model, params, **cfg_kw)
+    h = eng.submit(
+        prompt,
+        GenerationParams(
+            max_new_tokens=n_gen, temperature=0.8, top_k=8, seed=seed
+        ),
+        rid=rid,
+    )
+    eng.run()
+    return h.sequences[0].tokens
+
+
+@pytest.mark.parametrize("prompt_len", [7, 8])  # partial AND aligned last page
+def test_best_of_n_token_exact_vs_serial(small_model, prompt_len):
+    """Branch b of an n-branch request == a serial n=1 request at seed+b with
+    the SAME rid — the branch-seed law, on both page geometries (the partial-
+    page case exercises fork + CoW of the shared last prompt page)."""
+    cfg, model, params = small_model
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, prompt_len).tolist()
+    eng = fresh_engine(model, params)
+    h = eng.submit(
+        prompt,
+        GenerationParams(max_new_tokens=6, temperature=0.8, top_k=8, seed=123, n=4),
+        rid=7,
+    )
+    eng.run()
+    group = [s.tokens for s in h.sequences]
+    assert len(group) == 4
+    for b in range(4):
+        assert group[b] == serial_tokens(model, params, prompt, 123 + b, rid=7), b
+    assert eng.cache.stats()["branch_forks"] == 3
+
+
+def test_best_of_n_shares_prompt_pages(small_model):
+    """n=8 branches of one prompt cost ~1x its KV pages: peak page usage stays
+    under prompt_pages * 1.25 + n * decode_tail — far below n full copies."""
+    cfg, model, params = small_model
+    prompt = np.random.default_rng(4).integers(0, cfg.vocab, 24).tolist()
+    n, gen, ps = 8, 4, 4
+    eng = fresh_engine(model, params, num_pages=128, max_pages_per_seq=16)
+    eng.submit(
+        prompt,
+        GenerationParams(max_new_tokens=gen, temperature=0.7, top_k=8, seed=5, n=n),
+        rid=3,
+    )
+    eng.run()
+    st = eng.cache.stats()
+    prompt_pages = eng.cache.pages_for(len(prompt))
+    tail_pages = eng.cache.pages_for(gen + ps)  # decode growth + partial slack
+    assert st["branch_forks"] == n - 1
+    assert st["peak_pages_in_use"] <= prompt_pages * 1.25 + n * tail_pages
+    # the naive footprint (every branch re-prefilled) would be n * prompt_pages
+    assert st["peak_pages_in_use"] < n * prompt_pages
+
+
+def test_branch_eos_does_not_stall_or_corrupt_siblings(small_model):
+    """Stop branch 0 early via eos and check branch 1 still exactly matches its
+    serial twin — per-branch finish must neither stall the group nor free the
+    shared pages under the survivor."""
+    cfg, model, params = small_model
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab, 7).tolist()
+    base = serial_tokens(model, params, prompt, seed=50, rid=9)
+    eos = base[2]  # force branch 0 (seed 50) to finish after 3 tokens
+    sib = serial_tokens(model, params, prompt, seed=51, rid=9)
+    if eos in sib:
+        sib = sib[: sib.index(eos) + 1]
+    eng = fresh_engine(model, params)
+    h = eng.submit(
+        prompt,
+        GenerationParams(
+            max_new_tokens=6, temperature=0.8, top_k=8, seed=50, n=2, eos_id=eos
+        ),
+        rid=9,
+    )
+    eng.run()
+    seqs = h.sequences
+    assert seqs[0].tokens == base[:3] and seqs[0].finish_reason == "eos"
+    assert seqs[1].tokens == sib  # survivor unaffected, token-exact
+    assert seqs[1].finish_reason == ("eos" if sib and sib[-1] == eos else "length")
+
+
+def test_impossible_group_rejected_at_enqueue(small_model):
+    """A branch group the pool can never hold fails at submit() with a clear
+    error — enqueue-time validation, never a mid-step scheduler discovery."""
+    cfg, model, params = small_model
+    prompt = np.random.default_rng(6).integers(0, cfg.vocab, 40).tolist()
+    eng = fresh_engine(model, params, num_pages=8, max_pages_per_seq=16)
+    with pytest.raises(ValueError, match="across 2 branches"):
+        eng.submit(
+            prompt,
+            GenerationParams(max_new_tokens=4, temperature=0.5, seed=0, n=2),
+            rid=1,
+        )
+
+
+def test_beam_search_deterministic_ranked_and_reorders_in_place(small_model):
+    cfg, model, params = small_model
+    prompt = np.random.default_rng(7).integers(0, cfg.vocab, 6).tolist()
+
+    def run():
+        eng = fresh_engine(model, params, max_beam_width=4)
+        h = eng.submit(
+            prompt, GenerationParams(max_new_tokens=5, beam_width=4, n=2), rid=11
+        )
+        eng.run()
+        return eng, h.sequences
+
+    eng, seqs = run()
+    assert len(seqs) == 2
+    assert seqs[0].cumulative_logprob >= seqs[1].cumulative_logprob
+    assert all(len(s.tokens) <= 5 for s in seqs)
+    assert eng.cache.stats()["beam_reorders"] >= 1
+    _, again = run()
+    assert [s.tokens for s in again] == [s.tokens for s in seqs]
+    assert [s.cumulative_logprob for s in again] == pytest.approx(
+        [s.cumulative_logprob for s in seqs]
+    )
+
+
+def test_beam_rejects_width_above_engine_cap(small_model):
+    cfg, model, params = small_model
+    eng = fresh_engine(model, params, max_beam_width=2)
+    with pytest.raises(ValueError, match="beam"):
+        eng.submit([1, 2, 3], GenerationParams(beam_width=4, max_new_tokens=2))
+
+
+def grammar_setup(vocab, n_items=3):
+    charmap = {ch: i for i, ch in enumerate(JSON_ARRAY_CHARS)}
+    eos = len(JSON_ARRAY_CHARS)
+    return charmap, eos, fixed_json_array_dfa(charmap, eos, vocab, n_items=n_items)
+
+
+def test_constrained_decoding_always_parses(small_model):
+    """The 100%-valid law: every generation under fixed_json_array_dfa with
+    enough budget terminates at eos and json-parses, at ANY temperature/seed —
+    the mask, not luck, guarantees it."""
+    cfg, model, params = small_model
+    charmap, eos, dfa = grammar_setup(cfg.vocab)
+    inv = {i: ch for ch, i in charmap.items()}
+    eng = fresh_engine(model, params, grammar_states=dfa.n_states)
+    rng = np.random.default_rng(8)
+    handles = [
+        eng.submit(
+            rng.integers(0, cfg.vocab, 5).tolist(),
+            GenerationParams(
+                max_new_tokens=12, temperature=0.9, seed=i, eos_id=eos, grammar=dfa
+            ),
+            rid=20 + i,
+        )
+        for i in range(4)
+    ]
+    eng.run()
+    for h in handles:
+        seq = h.sequences[0]
+        assert seq.finish_reason == "eos"
+        assert dfa.valid_prefix(seq.tokens)
+        parsed = json.loads("".join(inv[t] for t in seq.tokens if t != eos))
+        assert isinstance(parsed, list) and len(parsed) == 3
+
+
+def test_constrained_decoding_multistep_exact(small_model):
+    """Grammar state rides the fused lax.scan carry: multi_step=4 outputs are
+    bit-identical to single-step outputs."""
+    cfg, model, params = small_model
+    charmap, eos, dfa = grammar_setup(cfg.vocab)
+    prompt = np.random.default_rng(9).integers(0, cfg.vocab, 5).tolist()
+
+    def run(k):
+        eng = fresh_engine(
+            model, params, grammar_states=dfa.n_states, multi_step=k
+        )
+        h = eng.submit(
+            prompt,
+            GenerationParams(
+                max_new_tokens=12, temperature=0.9, seed=2, eos_id=eos, grammar=dfa
+            ),
+            rid=5,
+        )
+        eng.run()
+        return h.sequences[0].tokens
+
+    assert run(1) == run(4)
+
+
+def test_unbounded_grammar_yields_valid_prefixes(small_model):
+    """json_array_dfa is unbounded: a walk may hit the length cap mid-array,
+    but every emitted token was allowed by the state it left — the invariant a
+    masked sampler can never violate."""
+    cfg, model, params = small_model
+    charmap = {ch: i for i, ch in enumerate(JSON_ARRAY_CHARS)}
+    eos = len(JSON_ARRAY_CHARS)
+    dfa = json_array_dfa(charmap, eos, cfg.vocab)
+    eng = fresh_engine(model, params, grammar_states=dfa.n_states)
+    h = eng.submit(
+        np.random.default_rng(10).integers(0, cfg.vocab, 5).tolist(),
+        GenerationParams(
+            max_new_tokens=8, temperature=1.0, seed=3, eos_id=eos, grammar=dfa
+        ),
+        rid=2,
+    )
+    eng.run()
+    assert dfa.valid_prefix(h.sequences[0].tokens)
+
+
+def test_submit_legacy_kwargs_warn_and_run(small_model):
+    cfg, model, params = small_model
+    prompt = [1, 2, 3, 4]
+    eng = fresh_engine(model, params)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        h = eng.submit(Request(0, prompt, max_new_tokens=3))
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert isinstance(h, RequestHandle)
+    eng.run()
+    assert len(h.sequences) == 1 and len(h.sequences[0].tokens) == 3
+    assert h.sequences[0].finish_reason == "length"
+
+
+def test_handle_raises_before_run_and_resolves_after(small_model):
+    cfg, model, params = small_model
+    eng = fresh_engine(model, params)
+    h = eng.submit([1, 2, 3], GenerationParams(max_new_tokens=2))
+    assert not h.done
+    with pytest.raises(RuntimeError, match="not finished"):
+        h.result()
+    eng.run()
+    assert h.done and h.sequences[0].finish_reason == "length"

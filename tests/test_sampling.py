@@ -16,6 +16,7 @@ import pytest
 
 from repro.kernels import ops
 from repro.models import build_model, get_config
+from repro.serving import GenerationParams
 from repro.serving.engine import (
     EngineConfig, Request, SamplingParams, ServeEngine,
 )
@@ -117,7 +118,8 @@ def small_model():
 
 def _mk(prompts, n, **kw):
     return [
-        Request(rid=i, prompt=list(p), max_new_tokens=n, **kw)
+        Request(rid=i, prompt=list(p), params=GenerationParams.from_legacy(
+            max_new_tokens=n, **kw))
         for i, p in enumerate(prompts)
     ]
 

@@ -16,6 +16,7 @@ from repro.kernels.paged_attention import (
     paged_prefill_chunk_jnp,
 )
 from repro.models import build_model, get_config
+from repro.serving import GenerationParams
 from repro.serving.engine import (
     PREFILLING, EngineConfig, Request, ServeEngine, aligned_max_logit_err,
 )
@@ -190,7 +191,11 @@ def test_engine_streams_mixed_lengths_matches_unbatched(small_model):
     lengths = (5, 9, 16, 3, 12)
     prompts = [rng.integers(0, cfg.vocab, size=L).tolist() for L in lengths]
     n_gen = 6
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    reqs = [Request(
+            rid=i,
+            prompt=p,
+            params=GenerationParams(max_new_tokens=n_gen),
+        ) for i, p in enumerate(prompts)]
     eng = ServeEngine(
         model, params,
         EngineConfig(num_pages=32, page_size=4, max_batch=4, max_pages_per_seq=8),
@@ -209,7 +214,11 @@ def test_engine_preempts_under_page_pressure_and_stays_exact(small_model):
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(3)]
     n_gen = 10
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    reqs = [Request(
+            rid=i,
+            prompt=p,
+            params=GenerationParams(max_new_tokens=n_gen),
+        ) for i, p in enumerate(prompts)]
     # 9 usable pages; each sequence grows to ceil(18/4) = 5 pages -> contention
     eng = ServeEngine(
         model, params,
@@ -230,7 +239,11 @@ def test_engine_prefix_sharing_exact_and_saves_pages(small_model):
     prompts = [prefix + rng.integers(0, cfg.vocab, size=4).tolist() for _ in range(4)]
     n_gen = 5
     make_reqs = lambda: [
-        Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)
+        Request(
+                rid=i,
+                prompt=p,
+                params=GenerationParams(max_new_tokens=n_gen),
+            ) for i, p in enumerate(prompts)
     ]
     econf = EngineConfig(num_pages=48, page_size=4, max_batch=4, max_pages_per_seq=8)
     eng_on = ServeEngine(model, params, econf)
@@ -254,7 +267,11 @@ def test_engine_forced_cow_identical_prompts_exact(small_model):
     rng = np.random.default_rng(4)
     prompt = rng.integers(0, cfg.vocab, size=10).tolist()  # 10 % 4 != 0
     n_gen = 6
-    reqs = [Request(rid=i, prompt=list(prompt), max_new_tokens=n_gen) for i in range(3)]
+    reqs = [Request(
+            rid=i,
+            prompt=list(prompt),
+            params=GenerationParams(max_new_tokens=n_gen),
+        ) for i in range(3)]
     eng = ServeEngine(
         model, params,
         EngineConfig(num_pages=32, page_size=4, max_batch=3, max_pages_per_seq=8),
@@ -276,7 +293,11 @@ def test_engine_sharing_stays_exact_under_preemption(small_model):
     prefix = rng.integers(0, cfg.vocab, size=8).tolist()
     prompts = [prefix + rng.integers(0, cfg.vocab, size=2).tolist() for _ in range(3)]
     n_gen = 10
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    reqs = [Request(
+            rid=i,
+            prompt=p,
+            params=GenerationParams(max_new_tokens=n_gen),
+        ) for i, p in enumerate(prompts)]
     # 10 usable pages; the full batch peaks at 2 shared + 3x3 own = 11 -> contention
     eng = ServeEngine(
         model, params,
@@ -305,7 +326,7 @@ def test_engine_quantized_kv_bounded_error_and_smaller_pool(small_model, kv_dtyp
     prompts += [prefix + rng.integers(0, cfg.vocab, size=3).tolist()]
     n_gen = 5
     make_reqs = lambda: [
-        Request(rid=i, prompt=list(p), max_new_tokens=n_gen)
+        Request(rid=i, prompt=list(p), params=GenerationParams(max_new_tokens=n_gen))
         for i, p in enumerate(prompts)
     ]
     econf = EngineConfig(num_pages=32, page_size=4, max_batch=3, max_pages_per_seq=8,
@@ -339,7 +360,7 @@ def test_engine_quant_dense_view_matches_prefill_within_scale_bound(small_model)
         EngineConfig(num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=8,
                      kv_dtype="int8"),
     )
-    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng.submit(Request(rid=0, prompt=prompt, params=GenerationParams(max_new_tokens=1)))
     eng._t0 = 0.0
     eng.queue.push(eng._pending.pop())
     eng._admit_and_prefill(0.0)
@@ -367,7 +388,7 @@ def test_engine_cache_dense_view_matches_layout(small_model):
         model, params,
         EngineConfig(num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=8),
     )
-    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    eng.submit(Request(rid=0, prompt=prompt, params=GenerationParams(max_new_tokens=1)))
     eng._t0 = 0.0
     eng.queue.push(eng._pending.pop())
     eng._admit_and_prefill(0.0)
@@ -399,7 +420,7 @@ def _staggered_shared_requests(cfg, rng):
 
 def _run_pair(model, params, econf, reqs_spec):
     mk = lambda: [
-        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        Request(rid=i, prompt=list(p), params=GenerationParams(max_new_tokens=n))
         for i, (p, n) in enumerate(reqs_spec)
     ]
     eng_m = ServeEngine(model, params, econf)
@@ -438,7 +459,7 @@ def test_engine_chunked_skip_matches_cold_request(small_model):
     reqs_spec = _staggered_shared_requests(cfg, np.random.default_rng(3))
     econf = EngineConfig(num_pages=48, page_size=4, max_batch=2, max_pages_per_seq=9)
     mk = lambda: [
-        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        Request(rid=i, prompt=list(p), params=GenerationParams(max_new_tokens=n))
         for i, (p, n) in enumerate(reqs_spec)
     ]
     warm = ServeEngine(
@@ -486,7 +507,7 @@ def test_engine_chunked_preemption_mid_prefill_stays_exact(small_model):
     reqs_spec = [(long_p, 4), (short_p, 10)]
     econf = EngineConfig(num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=12)
     mk = lambda: [
-        Request(rid=i, prompt=list(p), max_new_tokens=n)
+        Request(rid=i, prompt=list(p), params=GenerationParams(max_new_tokens=n))
         for i, (p, n) in enumerate(reqs_spec)
     ]
     eng_m = ServeEngine(model, params, econf)
@@ -520,7 +541,11 @@ def test_engine_chunked_mixed_lengths_exact_and_single_compile_family(small_mode
     lengths = (5, 9, 16, 3, 12)
     prompts = [rng.integers(0, cfg.vocab, size=L).tolist() for L in lengths]
     n_gen = 6
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=n_gen) for i, p in enumerate(prompts)]
+    reqs = [Request(
+            rid=i,
+            prompt=p,
+            params=GenerationParams(max_new_tokens=n_gen),
+        ) for i, p in enumerate(prompts)]
     eng = ServeEngine(
         model, params,
         EngineConfig(num_pages=32, page_size=4, max_batch=4, max_pages_per_seq=8,
@@ -542,7 +567,11 @@ def test_submit_rejects_prompt_larger_than_pool(small_model):
         EngineConfig(num_pages=4, page_size=4, max_batch=2, max_pages_per_seq=16),
     )
     with pytest.raises(ValueError, match="usable pages"):
-        eng.submit(Request(rid=0, prompt=list(range(1, 40)), max_new_tokens=2))
+        eng.submit(Request(
+                rid=0,
+                prompt=list(range(1, 40)),
+                params=GenerationParams(max_new_tokens=2),
+            ))
 
 
 def test_grown_context_fails_request_and_serves_the_rest(small_model):
@@ -554,10 +583,14 @@ def test_grown_context_fails_request_and_serves_the_rest(small_model):
         model, params,
         EngineConfig(num_pages=6, page_size=4, max_batch=2, max_pages_per_seq=8),
     )
-    ok = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=3)
+    ok = Request(rid=0, prompt=[5, 6, 7], params=GenerationParams(max_new_tokens=3))
     # 18-token prompt fits 5 of 5 usable pages at submit; +8 new tokens can
     # never fit — the scheduler must fail it at (re-)admission, not spin
-    doomed = Request(rid=1, prompt=list(range(1, 19)), max_new_tokens=8)
+    doomed = Request(
+            rid=1,
+            prompt=list(range(1, 19)),
+            params=GenerationParams(max_new_tokens=8),
+        )
     eng.submit_all([ok, doomed])
     # simulate the grown-context state preemption would produce
     eng._pending[1].generated.extend([9, 9, 9])

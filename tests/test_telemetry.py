@@ -17,6 +17,7 @@ import numpy as np
 import pytest
 
 from repro.models import build_model, get_config
+from repro.serving import GenerationParams
 from repro.serving.engine import (
     EngineConfig, Request, RequestState, ServeEngine, validate_chrome_trace,
 )
@@ -181,8 +182,11 @@ def test_trace_off_by_default(small_model):
     )
     assert eng.trace is None
     rng = np.random.default_rng(0)
-    eng.run([Request(rid=0, prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
-                     max_new_tokens=3)])
+    eng.run([Request(
+            rid=0,
+            prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
+            params=GenerationParams(max_new_tokens=3),
+        )])
     m = eng.metrics()
     assert m["requests"] == 1
     assert "slow_steps" in m
@@ -197,8 +201,11 @@ def test_preemption_run_trace_is_valid_and_matches_metrics(small_model, tmp_path
         num_pages=10, page_size=4, max_batch=3, max_pages_per_seq=6, trace=True,
     ))
     rng = np.random.default_rng(3)
-    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8).tolist(),
-                    max_new_tokens=10) for i in range(3)]
+    reqs = [Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=8).tolist(),
+            params=GenerationParams(max_new_tokens=10),
+        ) for i in range(3)]
     results = eng.run(reqs)
     m = eng.metrics()
     assert m["preemptions"] >= 1  # the pool is sized to make this certain
@@ -232,10 +239,16 @@ def test_chunked_run_traces_chunk_spans(small_model):
     ))
     rng = np.random.default_rng(5)
     eng.run([
-        Request(rid=0, prompt=rng.integers(0, cfg.vocab, size=30).tolist(),
-                max_new_tokens=4),
-        Request(rid=1, prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
-                max_new_tokens=4),
+        Request(
+                rid=0,
+                prompt=rng.integers(0, cfg.vocab, size=30).tolist(),
+                params=GenerationParams(max_new_tokens=4),
+            ),
+        Request(
+                rid=1,
+                prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
+                params=GenerationParams(max_new_tokens=4),
+            ),
     ])
     tr = eng.trace
     assert tr.count("chunk", ph="B") >= 2  # the 30-token prompt needs several
@@ -250,8 +263,11 @@ def test_fused_window_trace_k_sums_to_fused_steps(small_model):
         8 + 16 + 1, page_size=8, max_batch=2, multi_step=4, trace=True,
     ))
     rng = np.random.default_rng(7)
-    eng.run([Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8).tolist(),
-                     max_new_tokens=16) for i in range(2)])
+    eng.run([Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=8).tolist(),
+            params=GenerationParams(max_new_tokens=16),
+        ) for i in range(2)])
     m = eng.metrics()
     assert m["fused_steps"] > 0
     k_sum = sum(
@@ -276,17 +292,26 @@ def test_metrics_degenerate_paths(small_model):
     rng = np.random.default_rng(1)
     with pytest.raises(ValueError, match="num_pages"):
         eng.submit(Request(
-            rid=0, prompt=rng.integers(0, cfg.vocab, size=12).tolist(),
-            max_new_tokens=2,
-        ))
+                rid=0,
+                prompt=rng.integers(0, cfg.vocab, size=12).tolist(),
+                params=GenerationParams(max_new_tokens=2),
+            ))
     # all-failed snapshot: when every recorded request carries .error (the
     # reject_impossible outcome), metrics reports ONLY the failure count —
     # no throughput/latency keys fabricated from an empty sample
     eng.results[0] = RequestState(
-        Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2), error="too big"
+        Request(
+                rid=0,
+                prompt=[1, 2, 3],
+                params=GenerationParams(max_new_tokens=2),
+            ), error="too big"
     )
     eng.results[1] = RequestState(
-        Request(rid=1, prompt=[4, 5], max_new_tokens=2), error="too big"
+        Request(
+                rid=1,
+                prompt=[4, 5],
+                params=GenerationParams(max_new_tokens=2),
+            ), error="too big"
     )
     assert eng.metrics() == {"failed": 2}
 
@@ -298,9 +323,10 @@ def test_reset_metrics_zeroes_registry_and_trace(small_model):
     ))
     rng = np.random.default_rng(2)
     make = lambda: [Request(
-        rid=0, prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
-        max_new_tokens=4,
-    )]
+            rid=0,
+            prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
+            params=GenerationParams(max_new_tokens=4),
+        )]
     eng.run(make())
     assert eng.metrics()["decode_steps"] > 0
     assert len(eng.trace.events) > 0
@@ -324,8 +350,12 @@ def test_tokens_per_s_spans_arrival_to_finish(small_model):
     )
     rng = np.random.default_rng(4)
     offset = 0.2
-    eng.run([Request(rid=0, prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
-                     max_new_tokens=4, arrival_time=offset)])
+    eng.run([Request(
+            rid=0,
+            prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
+            params=GenerationParams(max_new_tokens=4),
+            arrival_time=offset,
+        )])
     m = eng.metrics()
     span = m["wall_s"] - offset
     assert span > 0
@@ -343,12 +373,21 @@ def test_logprobs_greedy_top1_is_generated_token(small_model):
     ))
     rng = np.random.default_rng(6)
     reqs = [
-        Request(rid=0, prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
-                max_new_tokens=5, logprobs=2),
-        Request(rid=1, prompt=rng.integers(0, cfg.vocab, size=7).tolist(),
-                max_new_tokens=5, logprobs=3),
-        Request(rid=2, prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
-                max_new_tokens=5),  # no opt-in: no logprobs recorded
+        Request(
+                rid=0,
+                prompt=rng.integers(0, cfg.vocab, size=5).tolist(),
+                params=GenerationParams(max_new_tokens=5, logprobs=2),
+            ),
+        Request(
+                rid=1,
+                prompt=rng.integers(0, cfg.vocab, size=7).tolist(),
+                params=GenerationParams(max_new_tokens=5, logprobs=3),
+            ),
+        Request(
+                rid=2,
+                prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
+                params=GenerationParams(max_new_tokens=5),
+            ),  # no opt-in: no logprobs recorded
     ]
     results = eng.run(reqs)
     assert results[2].logprobs == {}
@@ -372,14 +411,22 @@ def test_logprobs_wider_than_engine_rejected(small_model):
         num_pages=16, page_size=4, max_batch=2, logprobs_k=3,
     ))
     with pytest.raises(ValueError, match="logprobs"):
-        eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2, logprobs=5))
+        eng.submit(Request(
+                rid=0,
+                prompt=[1, 2, 3],
+                params=GenerationParams(max_new_tokens=2, logprobs=5),
+            ))
 
 
 def test_logprobs_identical_across_fused_horizons(small_model):
     cfg, model, params = small_model
     rng = np.random.default_rng(8)
     prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(2)]
-    make = lambda: [Request(rid=i, prompt=list(p), max_new_tokens=12, logprobs=3)
+    make = lambda: [Request(
+            rid=i,
+            prompt=list(p),
+            params=GenerationParams(max_new_tokens=12, logprobs=3),
+        )
                     for i, p in enumerate(prompts)]
     conf = EngineConfig.sized_for(8 + 12 + 1, page_size=8, max_batch=2,
                                   logprobs_k=3)
@@ -414,9 +461,10 @@ def test_straggler_flags_slow_steps(small_model):
     ))
     rng = np.random.default_rng(9)
     make = lambda: [Request(
-        rid=0, prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
-        max_new_tokens=8,
-    )]
+            rid=0,
+            prompt=rng.integers(0, cfg.vocab, size=6).tolist(),
+            params=GenerationParams(max_new_tokens=8),
+        )]
     # rehearse first: the compile-laden first dispatch would otherwise seed
     # the EMA ~1000x above steady state and nothing would ever flag.
     # reset_metrics restarts the EMA along with the counters.
