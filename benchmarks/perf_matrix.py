@@ -1,0 +1,495 @@
+"""Roofline-anchored performance matrix: the serving engine swept cell by cell.
+
+Each cell of the (page_size x chunk_tokens x kv_dtype x max_batch x multi_step)
+grid runs a short steady-state decode workload (batch-full, fixed prompt and
+tail lengths, rehearsal first so measurement times compiled code; every cell's
+timing is the min over five measurement passes INTERLEAVED across the whole
+grid — host interference arrives in multi-second bursts, and spreading a
+cell's passes tens of seconds apart lets the min recover its capability) and
+records:
+
+  * step latency p50/p95 and decode tokens/s from the engine's own metrics;
+  * MEASURED KV bytes per decode step — core.instrument's CountingAccessor
+    driven over the cell's steady-state occupancy (same page_size / kv_dtype /
+    context lengths the workload reaches mid-stream), through the flat
+    accessor each representation really stores (BasicAccessor f32,
+    QuantizedAccessor int8, Int4SplitHalfAccessor int4);
+  * ANALYTIC bytes from ``roofline.paged_decode_analytic_bytes`` — the same
+    number derived from the layout formula instead of counted accesses (the
+    two must agree within 10%, recorded per cell);
+  * roofline attainment: achieved GB/s divided by the STREAM-measured machine
+    bandwidth (``roofline.measure_machine_bandwidth``, calibrated once per
+    host and cached under artifacts/). Attainment above 1.0 is a measurement
+    bug by construction and FAILS the run; attainment below the per-dtype
+    floor is flagged in the report and the markdown table.
+
+The matrix is a RATCHET: cells are keyed (``ps8_ck32_f32_b2_k1``) and every
+run compares itself against the committed ``BENCH_perf_matrix.json`` — any
+cell whose step_ms_p50 regresses more than 20% vs its committed twin fails
+the run (CI's perf-matrix-smoke job runs the reduced grid, whose keys are an
+exact subset of the full grid, so smoke cells pair against full baselines).
+Two defenses keep the 20% bound honest on noisy shared hosts: per-cell
+ratios are normalized by the run's median paired ratio (uniform host drift —
+thermal state, co-tenants, a slower CI runner — cancels; one cell regressing
+against its peers still fails), and cells over the ratchet are re-measured
+before the verdict stands (noise only adds time, so a retry at or under the
+bound proves a burst; a real regression repeats).
+Regenerate + commit the baseline when a PR intentionally moves decode perf:
+
+  PYTHONPATH=src python -m benchmarks.run --only perf-matrix           # full, writes BENCH_perf_matrix.json
+  PYTHONPATH=src python -m benchmarks.run --only perf-matrix --smoke   # CI grid -> artifacts/
+
+The matrix also FEEDS the kernel autotuner (kernels/autotune.py): a closing
+section builds one engine with ``EngineConfig.autotune=True`` (page_size=0 —
+the tuner picks page size, decode block shape and chunk width from its
+sweep-once cache) and one engine with fixed defaults, runs the same smoke
+workload through both, and records that the autotuned engine is no slower —
+plus the chosen config as surfaced by ``engine.metrics()``.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks import roofline
+from benchmarks.serving_suite import bench_config
+from repro.core.accessors import BasicAccessor
+from repro.core.instrument import CountingAccessor, counted_paged_decode
+from repro.models import Model
+from repro.serving import GenerationParams
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine.kvquant import KV_DTYPES
+
+SCHEMA_VERSION = 1
+
+OUT_PATH = Path("BENCH_perf_matrix.json")  # COMMITTED: the per-cell ratchet
+# baseline. Smoke runs never clobber it; they pair their cells against it.
+SMOKE_OUT_PATH = Path("artifacts/perf_matrix_smoke.json")
+MD_PATH = Path("artifacts/perf_matrix.md")
+
+# full grid: 2 x 2 x 3 x 2 x 2 = 48 cells
+PAGE_SIZES = (8, 16)
+CHUNKS = (32, 64)
+KV_AXIS = ("f32", "int8", "int4")
+BATCHES = (2, 4)
+KS = (1, 4)
+
+# smoke grid: 2 x 2 x 2 = 8 cells, an EXACT SUBSET of the full grid (chunk and
+# batch pinned to full-grid values) so every smoke cell has a committed twin
+SMOKE_KV_AXIS = ("f32", "int8")
+SMOKE_CHUNK = 32
+SMOKE_BATCH = 2
+
+# per-cell workload — identical in full and smoke runs, so smoke timings pair
+# against full-run baselines apples-to-apples (smoke cuts CELLS, not work)
+PROMPT_LEN = 16
+NEW_TOKENS = 32
+
+REGRESSION_X = 1.20  # any cell's step_ms_p50 beyond this vs baseline fails
+_BUCKET_X = 10 ** (1 / 32)  # measurement-resolution allowance on top of
+# REGRESSION_X: step_ms_p50 comes from the telemetry histogram's log-scale
+# buckets (32 per decade), so the baseline and the current reading are each
+# quantized to ~7.5% — a bucket-low baseline against a bucket-high current
+# run shows a 1.16x "regression" with zero real change. The ratchet bounds
+# TRUE latency at REGRESSION_X; the comparison of two quantized readings
+# gets one bucket of slack so quantization alone can never trip it
+
+# flag floors: fraction of measured machine bandwidth a healthy cell should
+# clear. The bench model is tiny and dispatch-bound on CPU, so floors are
+# sanity floors (~10x under the slowest healthy cell), not HBM targets;
+# quantized pools sit lower than f32 because they move fewer bytes through
+# the same dispatch overhead.
+ATTAINMENT_FLOORS = {"f32": 5e-4, "int8": 1e-4, "int4": 5e-5}
+
+
+def cell_key(ps: int, chunk: int, kv: str, batch: int, k: int) -> str:
+    return f"ps{ps}_ck{chunk}_{kv}_b{batch}_k{k}"
+
+
+def grid(smoke: bool):
+    if smoke:
+        return [
+            (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, k)
+            for ps, kv, k in itertools.product(PAGE_SIZES, SMOKE_KV_AXIS, KS)
+        ]
+    return list(itertools.product(PAGE_SIZES, CHUNKS, KV_AXIS, BATCHES, KS))
+
+
+# -------------------------------------------------------------------------------
+# measured vs analytic bytes for one cell's steady-state occupancy
+# -------------------------------------------------------------------------------
+def measured_step_bytes(cfg, *, page_size: int, kv_dtype: str, batch: int,
+                        context_len: int, seed: int = 0) -> dict:
+    """One decode step's KV traffic, measured AND derived, for the occupancy
+    the cell's workload reaches mid-stream (every slot at ``context_len``).
+
+    Measured: a pool at that occupancy (disjoint scattered physical pages,
+    the allocator's regime) encoded by the cell dtype's flat accessor and
+    read through a CountingAccessor by ``counted_paged_decode`` — the tally
+    prices exactly the live pages the kernel schedules. Analytic: the same
+    state through ``roofline.paged_decode_analytic_bytes``. Both scale by
+    n_layers (every layer moves its own K and V pools)."""
+    rng = np.random.default_rng(seed)
+    hkv, d = cfg.n_kv_heads, cfg.head_dim
+    hq = cfg.n_heads
+    max_pages = -(-context_len // page_size)
+    num_pages = batch * max_pages + 1
+    q = rng.standard_normal((batch, hq, 1, d)).astype(np.float32)
+    pool = rng.standard_normal((2, num_pages, hkv, page_size, d)).astype(np.float32)
+    perm = rng.permutation(num_pages)[: batch * max_pages]
+    tables = perm.reshape(batch, max_pages).astype(np.int32)
+    lens = np.full((batch,), context_len, np.int32)
+    spec = KV_DTYPES[kv_dtype]
+    flat = BasicAccessor() if spec is None else spec.as_flat_accessor(page_size, d)
+    acc = CountingAccessor(flat)
+    kb = flat.from_codomain(pool[0].reshape(-1))
+    vb = flat.from_codomain(pool[1].reshape(-1))
+    _, tally = counted_paged_decode(
+        q, kb, vb, acc, tables, lens,
+        pool_shape=(num_pages, hkv, page_size, d),
+    )
+    analytic = roofline.paged_decode_analytic_bytes(
+        lens, page_size=page_size, n_kv_heads=hkv, head_dim=d,
+        kv_dtype=kv_dtype,
+    )
+    measured = tally.bytes_moved * cfg.n_layers
+    analytic *= cfg.n_layers
+    return {
+        "measured_bytes_per_step": int(measured),
+        "analytic_bytes_per_step": int(analytic),
+        "measured_vs_analytic_rel": round(
+            abs(measured - analytic) / max(analytic, 1), 4
+        ),
+    }
+
+
+# -------------------------------------------------------------------------------
+# one matrix cell: steady-state workload -> latency + bytes + attainment
+# -------------------------------------------------------------------------------
+def _steady_requests(vocab: int, batch: int):
+    return [
+        Request(
+            rid=i,
+            prompt=np.random.default_rng(70 + i).integers(
+                0, vocab, size=PROMPT_LEN
+            ).tolist(),
+            params=GenerationParams(max_new_tokens=NEW_TOKENS),
+        )
+        for i in range(batch)
+    ]
+
+
+def run_cells(model, params, cfg, machine_bw: float, combos,
+              passes: int = 5) -> list:
+    """Measure every cell of the grid, INTERLEAVED: rehearse all engines
+    first (compile + warm), then sweep the whole grid once per measurement
+    pass and keep each cell's min step latency / max throughput across
+    passes. Interleaving matters on a shared host: interference arrives in
+    multi-second bursts, so three back-to-back passes of one cell can all
+    land inside a burst — spreading a cell's passes across the full grid
+    walk puts tens of seconds between them, and the min recovers the cell's
+    capability (host noise only ever ADDS time)."""
+    engines = []
+    for ps, chunk, kv, batch, k in combos:
+        conf = EngineConfig.sized_for(
+            PROMPT_LEN + NEW_TOKENS + 1, page_size=ps, max_batch=batch,
+            multi_step=k, kv_dtype=kv, chunked_prefill=True,
+            chunk_tokens=chunk,
+        )
+        eng = ServeEngine(model, params, conf)
+        eng.run(_steady_requests(cfg.vocab, batch))  # rehearsal
+        engines.append(eng)
+    best = [None] * len(combos)
+    for _ in range(passes):
+        for i, eng in enumerate(engines):
+            batch = combos[i][3]
+            eng.reset_metrics()
+            eng.run(_steady_requests(cfg.vocab, batch))
+            m = eng.metrics()
+            if best[i] is None:
+                best[i] = dict(m)
+            else:
+                best[i]["step_ms_p50"] = min(best[i]["step_ms_p50"],
+                                             m["step_ms_p50"])
+                best[i]["step_ms_p95"] = min(best[i]["step_ms_p95"],
+                                             m["step_ms_p95"])
+                best[i]["tokens_per_s"] = max(best[i]["tokens_per_s"],
+                                              m["tokens_per_s"])
+    cells = []
+    for (ps, chunk, kv, batch, k), m in zip(combos, best):
+        # mid-stream occupancy: every slot half way through its decode tail
+        traffic = measured_step_bytes(
+            cfg, page_size=ps, kv_dtype=kv, batch=batch,
+            context_len=PROMPT_LEN + NEW_TOKENS // 2,
+        )
+        step_s = m["step_ms_p50"] / 1e3  # metrics() reports milliseconds
+        achieved = traffic["measured_bytes_per_step"] / max(step_s, 1e-12)
+        att = roofline.attainment(
+            traffic["measured_bytes_per_step"], step_s, machine_bw
+        )
+        floor = ATTAINMENT_FLOORS[kv]
+        cells.append({
+            "key": cell_key(ps, chunk, kv, batch, k),
+            "page_size": ps,
+            "chunk_tokens": chunk,
+            "kv_dtype": kv,
+            "max_batch": batch,
+            "multi_step": k,
+            "step_ms_p50": m["step_ms_p50"],
+            "step_ms_p95": m["step_ms_p95"],
+            "tokens_per_s": m["tokens_per_s"],
+            "decode_steps": m["decode_steps"],
+            **traffic,
+            "achieved_gb_s": round(achieved / 1e9, 6),
+            "attainment": att,
+            "attainment_floor": floor,
+            "below_floor": att < floor,
+        })
+    return cells
+
+
+# -------------------------------------------------------------------------------
+# the autotuner consumer: matrix numbers -> engine init choices
+# -------------------------------------------------------------------------------
+def run_autotune_comparison(model, params, cfg) -> dict:
+    """Same smoke workload through a fixed-default engine and an autotuned one
+    (page_size=0: the tuner picks page size, decode block shape and chunk
+    width from its sweep-once cache). Records both throughputs, the chosen
+    config as ``engine.metrics()`` surfaces it, and the no-slower gate."""
+    max_len = PROMPT_LEN + NEW_TOKENS + 1
+    batch = 4
+    default_conf = EngineConfig.sized_for(max_len, page_size=16, max_batch=batch)
+    tuned_conf = EngineConfig.sized_for(
+        max_len, page_size=0, max_batch=batch, autotune=True,
+    )
+    engines = {
+        "default": ServeEngine(model, params, default_conf),
+        "autotuned": ServeEngine(model, params, tuned_conf),
+    }
+    stats = {}
+    for mode, eng in engines.items():
+        eng.run(_steady_requests(cfg.vocab, batch))  # rehearsal
+        stats[mode] = None
+    # interleaved min-of-5, the same estimator the matrix cells use: the two
+    # engines' passes alternate so an interference burst hits both equally
+    for _ in range(5):
+        for mode, eng in engines.items():
+            eng.reset_metrics()
+            eng.run(_steady_requests(cfg.vocab, batch))
+            m = eng.metrics()
+            if stats[mode] is None:
+                stats[mode] = dict(m)
+            else:
+                stats[mode]["step_ms_p50"] = min(stats[mode]["step_ms_p50"],
+                                                 m["step_ms_p50"])
+                stats[mode]["tokens_per_s"] = max(stats[mode]["tokens_per_s"],
+                                                  m["tokens_per_s"])
+    tuned = stats["autotuned"]
+    # the gate compares DECODE STEP latency — the quantity the tuner actually
+    # optimizes (tokens_per_s folds in prefill + scheduler time the block
+    # shapes don't touch, and is reported alongside). 1.15x slack absorbs
+    # host-timing noise on a dispatch-bound smoke model; a slowdown beyond
+    # that means the tuning table no longer reflects this host. When the
+    # tuner lands on the default schedule the two engines are IDENTICAL
+    # configs, so the gate holds by construction — it exists to catch a tuner
+    # that picks a worse schedule, not to fail a coin flip between twins.
+    same_schedule = (
+        tuned["tuned_page_size"] == default_conf.page_size
+        and tuned["tuned_block_pages"] <= 1
+    )
+    no_slower = same_schedule or (
+        tuned["step_ms_p50"] <= 1.15 * stats["default"]["step_ms_p50"]
+    )
+    return {
+        "workload": {"prompt_len": PROMPT_LEN, "new_tokens": NEW_TOKENS,
+                     "max_batch": batch},
+        "selected": {
+            key: tuned[key]
+            for key in ("tuned_page_size", "tuned_block_pages",
+                        "tuned_chunk_tokens", "tuned_source")
+        },
+        "tokens_per_s_default": stats["default"]["tokens_per_s"],
+        "tokens_per_s_autotuned": tuned["tokens_per_s"],
+        "step_ms_p50_default": stats["default"]["step_ms_p50"],
+        "step_ms_p50_autotuned": tuned["step_ms_p50"],
+        "no_slower_than_default": bool(no_slower),
+    }
+
+
+# -------------------------------------------------------------------------------
+# ratchet + rendering
+# -------------------------------------------------------------------------------
+def _cell_failures(report: dict, baseline: dict | None) -> dict:
+    """The matrix gate, keyed by cell: roofline-violating cells always fail;
+    each cell with a committed twin (paired by key) fails on >20% step_ms_p50
+    regression — after HOST-DRIFT NORMALIZATION: per-cell ratios are divided
+    by the run's median paired ratio, so a uniform slowdown of every cell
+    (host condition: thermal state, co-tenants, a slower CI runner) cancels,
+    while one cell regressing against its peers — the signature of an actual
+    code regression, which lands in the paths some cells use and others
+    don't — still fails. The median needs a few paired cells to mean
+    anything; below that the raw ratio is used."""
+    failures = {}
+    base = {
+        c["key"]: c for c in (baseline or {}).get("cells", [])
+    }
+    ratios = {
+        c["key"]: c["step_ms_p50"] / max(base[c["key"]]["step_ms_p50"], 1e-12)
+        for c in report["cells"] if c["key"] in base
+    }
+    # clamped at 1.0: normalization only ever FORGIVES a uniform slowdown —
+    # on a faster-than-baseline run raw ratios are already trustworthy, and
+    # dividing by a <1 drift would fail cells that merely didn't improve
+    drift = (
+        max(1.0, float(np.median(list(ratios.values()))))
+        if len(ratios) >= 4 else 1.0
+    )
+    for c in report["cells"]:
+        if c["attainment"] > 1.0:
+            failures[c["key"]] = (
+                f"{c['key']}: attainment {c['attainment']:.3f} > 1.0 — "
+                "achieved bandwidth exceeds the measured machine roof "
+                "(a timing or byte-accounting bug, not a fast kernel)"
+            )
+            continue
+        if c["key"] not in ratios:
+            continue
+        ratio = ratios[c["key"]] / max(drift, 1e-12)
+        if ratio > REGRESSION_X * _BUCKET_X:
+            failures[c["key"]] = (
+                f"{c['key']}: step_ms_p50 {c['step_ms_p50']:.3f}ms is "
+                f"{ratio:.2f}x the committed baseline "
+                f"{base[c['key']]['step_ms_p50']:.3f}ms "
+                f"(limit {REGRESSION_X}x + one histogram bucket, host drift "
+                f"{drift:.2f}x factored out)"
+            )
+    return failures
+
+
+def check_cells(report: dict, baseline: dict | None) -> list:
+    return list(_cell_failures(report, baseline).values())
+
+
+def render_markdown(report: dict) -> str:
+    rows = [
+        "| cell | ps | chunk | kv | batch | K | p50 ms | p95 ms | tok/s "
+        "| measured B/step | vs analytic | GB/s | attainment | flag |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in report["cells"]:
+        flag = "below-floor" if c["below_floor"] else ""
+        rows.append(
+            f"| {c['key']} | {c['page_size']} | {c['chunk_tokens']} "
+            f"| {c['kv_dtype']} | {c['max_batch']} | {c['multi_step']} "
+            f"| {c['step_ms_p50']:.3f} | {c['step_ms_p95']:.3f} "
+            f"| {c['tokens_per_s']:.1f} | {c['measured_bytes_per_step']} "
+            f"| {c['measured_vs_analytic_rel']:.1%} | {c['achieved_gb_s']:.4f} "
+            f"| {c['attainment']:.2e} | {flag} |"
+        )
+    bw = report["machine_bandwidth_gb_s"]
+    tune = report.get("autotune", {})
+    lines = [
+        f"# Serving perf matrix ({len(report['cells'])} cells)",
+        "",
+        f"Machine bandwidth (STREAM, cached per host): {bw:.1f} GB/s. "
+        "Attainment = achieved GB/s / machine bandwidth; cells above 1.0 "
+        "fail the run, cells below their per-dtype floor are flagged.",
+        "",
+        *rows,
+    ]
+    if tune:
+        sel = tune["selected"]
+        lines += [
+            "",
+            f"Autotuned engine: page_size={sel['tuned_page_size']} "
+            f"block_pages={sel['tuned_block_pages']} "
+            f"chunk_tokens={sel['tuned_chunk_tokens']} "
+            f"({sel['tuned_source']}) — "
+            f"{tune['tokens_per_s_autotuned']:.1f} tok/s vs "
+            f"{tune['tokens_per_s_default']:.1f} default "
+            f"(no_slower={tune['no_slower_than_default']}).",
+        ]
+    return "\n".join(lines) + "\n"
+
+
+def run(smoke: bool = False, out_path: Path = None, ratchet: bool = True) -> dict:
+    baseline = json.loads(OUT_PATH.read_text()) if OUT_PATH.exists() else None
+    cfg = bench_config(smoke=True)  # the smoke model for BOTH modes: cells
+    # must pair across full and smoke runs, so the model never changes
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    machine_bw = roofline.measure_machine_bandwidth()
+    report = {
+        "schema_version": SCHEMA_VERSION,
+        "model": cfg.name,
+        "smoke": smoke,
+        "workload": {"prompt_len": PROMPT_LEN, "new_tokens": NEW_TOKENS},
+        "machine_bandwidth_gb_s": round(machine_bw / 1e9, 3),
+        "cells": [],
+    }
+    combos = grid(smoke)
+    report["cells"] = run_cells(model, params, cfg, machine_bw, combos)
+    # ratchet retries: a cell failing its committed twin is re-measured (up to
+    # twice) before the verdict stands. Host noise only ever ADDS time, so a
+    # retry landing at or under the ratchet is PROOF the first reading was an
+    # interference burst, not a regression — while a real regression repeats
+    # on every retry and still fails. Only the failing cells re-run, so the
+    # happy path pays nothing.
+    if ratchet:
+        by_key = {c["key"]: i for i, c in enumerate(report["cells"])}
+        for _ in range(2):
+            failing = set(_cell_failures(report, baseline)) & set(by_key)
+            if not failing:
+                break
+            retry = [c for c in combos if cell_key(*c) in failing]
+            print(f"perf_matrix/retrying {len(retry)} cells over the ratchet")
+            for cell in run_cells(model, params, cfg, machine_bw, retry):
+                i = by_key[cell["key"]]
+                if cell["step_ms_p50"] < report["cells"][i]["step_ms_p50"]:
+                    report["cells"][i] = cell
+    for cell in report["cells"]:
+        print(
+            f"perf_matrix/{cell['key']},{cell['step_ms_p50'] * 1e3:.2f},"
+            f"tokens_per_s={cell['tokens_per_s']:.1f} "
+            f"bytes={cell['measured_bytes_per_step']} "
+            f"(analytic {cell['measured_vs_analytic_rel']:.1%} off) "
+            f"att={cell['attainment']:.2e}"
+            + (" BELOW-FLOOR" if cell["below_floor"] else "")
+        )
+    report["autotune"] = run_autotune_comparison(model, params, cfg)
+    tune = report["autotune"]
+    print(
+        f"perf_matrix/autotune,{tune['step_ms_p50_autotuned'] * 1e3:.2f},"
+        f"selected={tune['selected']} "
+        f"tokens_per_s={tune['tokens_per_s_autotuned']:.1f} vs "
+        f"{tune['tokens_per_s_default']:.1f} default "
+        f"no_slower={tune['no_slower_than_default']}"
+    )
+    out = out_path or (SMOKE_OUT_PATH if smoke else OUT_PATH)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    MD_PATH.parent.mkdir(parents=True, exist_ok=True)
+    MD_PATH.write_text(render_markdown(report))
+    print(f"perf matrix written to {out} (table: {MD_PATH})")
+    failures = check_cells(report, baseline) if ratchet else []
+    if not tune["no_slower_than_default"]:
+        failures.append(
+            "autotune: tuned engine step_ms_p50 "
+            f"{tune['step_ms_p50_autotuned']:.3f}ms exceeds 1.15x the default "
+            f"engine's {tune['step_ms_p50_default']:.3f}ms — the tuning table "
+            "no longer reflects this host (clear artifacts/autotune_cache.json "
+            "and re-run)"
+        )
+    for f in failures:
+        print(f"perf_matrix/RATCHET-FAIL: {f}")
+    if failures:
+        raise SystemExit(1)
+    return report
+
+
+if __name__ == "__main__":
+    run()

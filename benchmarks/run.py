@@ -5,6 +5,7 @@ roofline reader. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --only paper
   PYTHONPATH=src python -m benchmarks.run --only roofline
   PYTHONPATH=src python -m benchmarks.run --only serving   # writes BENCH_serving.json
+  PYTHONPATH=src python -m benchmarks.run --only perf-matrix  # writes BENCH_perf_matrix.json
 """
 import argparse
 import sys
@@ -16,11 +17,19 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
-        "--only", default="all", choices=["all", "paper", "roofline", "serving"]
+        "--only", default="all",
+        choices=["all", "paper", "roofline", "serving", "perf-matrix"],
     )
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI-sized serving run: one sweep point, tiny model, few requests",
+        help="CI-sized runs: serving = one sweep point, tiny model, few "
+             "requests; perf-matrix = the reduced 8-cell grid",
+    )
+    ap.add_argument(
+        "--no-ratchet", action="store_true",
+        help="perf-matrix only: skip the per-cell comparison against the "
+             "committed BENCH_perf_matrix.json (use when intentionally "
+             "regenerating the baseline after a perf-moving change)",
     )
     ap.add_argument(
         "--kv-dtype", default="all", choices=["all", "f32", "int8", "int4"],
@@ -43,6 +52,10 @@ def main() -> None:
         from benchmarks import serving_suite
 
         serving_suite.run(smoke=args.smoke, kv_dtype=args.kv_dtype)
+    if args.only in ("all", "perf-matrix"):
+        from benchmarks import perf_matrix
+
+        perf_matrix.run(smoke=args.smoke, ratchet=not args.no_ratchet)
 
 
 if __name__ == "__main__":

@@ -86,6 +86,11 @@ from repro.serving.engine import (
     validate_chrome_trace,
 )
 
+# bumped whenever a report key is added/renamed/retyped; CI validates it and
+# the smoke/full reports carry the IDENTICAL schema (same keys, same shapes —
+# smoke only shrinks sizes), so any consumer can read either file
+SCHEMA_VERSION = 2
+
 OUT_PATH = Path("BENCH_serving.json")
 TRACE_PATH = Path("artifacts/serving_trace.json")  # gitignored; CI uploads it
 SMOKE_OUT_PATH = Path("BENCH_serving_smoke.json")  # COMMITTED: the CI
@@ -780,7 +785,12 @@ def run(out_path: Path = None, smoke: bool = False, kv_dtype: str = "all") -> di
     n_requests = 4 if smoke else N_REQUESTS
     max_new = 4 if smoke else MAX_NEW_TOKENS
     shared_n = 4 if smoke else SHARED_N_REQUESTS
-    report = {"model": cfg.name, "smoke": smoke, "points": []}
+    report = {
+        "schema_version": SCHEMA_VERSION,
+        "model": cfg.name,
+        "smoke": smoke,
+        "points": [],
+    }
     for max_batch, page_size in points:
         # rehearsal on the same engine: compile every prefill bucket + the decode
         # step for these shapes (jit caches are per-engine), then reset and

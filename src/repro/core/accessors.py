@@ -389,6 +389,106 @@ class QuantizedAccessor(Accessor):
         return payload + scales
 
 
+@dataclasses.dataclass(frozen=True)
+class Int4SplitHalfAccessor(QuantizedAccessor):
+    """int4 storage packed SPLIT-HALF per fixed-width row (the KV-page order).
+
+    ``QuantizedAccessor`` at 4 bits packs ADJACENT offset pairs into a byte;
+    quantized KV pages pack each width-``row`` span (a token's head vector)
+    with byte ``b`` holding element ``b`` in the lo nibble and element
+    ``b + row/2`` in the hi nibble (kernels/paged_attention.py:
+    pack_int4_splithalf — the order that makes in-kernel dequant a lane
+    concat). This accessor speaks that byte layout over the flat codomain, so
+    ``kvquant.PagedQuantSpec.as_flat_accessor`` can return a real accessor for
+    int4 pools too and the CountingAccessor instrumentation path covers all
+    three kv dtypes: element offset ``o`` lives at byte
+    ``(o // row) * row/2 + (o % row) % (row/2)``, hi nibble iff
+    ``o % row >= row/2``. The scale algebra is untouched (inherited block
+    scales; ``block`` must cover whole rows).
+    """
+
+    row: int = 2  # split-half span width; head_dim for KV pages
+
+    def __post_init__(self):
+        if self.bits != 4:
+            raise ValueError("Int4SplitHalfAccessor is the 4-bit packing")
+        if self.row % 2:
+            raise ValueError("split-half packing needs an even row width")
+        if self.block % self.row:
+            raise ValueError(
+                f"block {self.block} must cover whole rows of {self.row} "
+                "(a block scale may not split a packed row)"
+            )
+
+    def _byte_and_hi(self, i):
+        half = self.row // 2
+        d = jnp.asarray(i) % self.row
+        return (jnp.asarray(i) // self.row) * half + d % half, d >= half
+
+    def alloc(self, span_size: int):
+        if span_size % self.row:
+            raise ValueError("span must be a whole number of rows")
+        nb = self._nblocks(span_size)
+        return {
+            "q": jnp.zeros((span_size // 2,), dtype=jnp.int8),
+            "scale": jnp.ones((nb,), dtype=jnp.float32),
+        }
+
+    def from_codomain(self, dense):
+        dense = jnp.asarray(dense, dtype=jnp.float32)
+        span = dense.shape[0]
+        if span % self.row:
+            raise ValueError("span must be a whole number of rows")
+        nb = self._nblocks(span)
+        blocked = dense.reshape(nb, self.block)
+        absmax = jnp.max(jnp.abs(blocked), axis=1)
+        scale = jnp.where(absmax > 0, absmax / self.qmax, 1.0).astype(jnp.float32)
+        q = jnp.clip(
+            jnp.round(blocked / scale[:, None]), -self.qmax, self.qmax
+        ).astype(jnp.int8)
+        rows = q.reshape(-1, self.row)
+        half = self.row // 2
+        packed = ((rows[:, :half] & 0x0F) | ((rows[:, half:] & 0x0F) << 4))
+        return {"q": packed.astype(jnp.int8).reshape(-1), "scale": scale}
+
+    def _load_q(self, buffers, i):
+        self._check_offset(i)
+        byte_idx, hi = self._byte_and_hi(i)
+        byte = buffers["q"][byte_idx]
+        nib = jnp.where(hi, (byte >> 4) & 0x0F, byte & 0x0F)
+        return jnp.where(nib >= 8, nib - 16, nib).astype(jnp.int8)
+
+    def store(self, buffers, i, value):
+        self._check_offset(i)
+        s = buffers["scale"][jnp.asarray(i) // self.block]
+        q = jnp.clip(
+            jnp.round(jnp.asarray(value, jnp.float32) / s), -self.qmax, self.qmax
+        ).astype(jnp.int8)
+        byte_idx, hi = self._byte_and_hi(i)
+        old = buffers["q"][byte_idx]
+        qn = (q & 0x0F).astype(jnp.int8)
+        new = jnp.where(
+            hi, (old & 0x0F) | (qn << 4), (old & ~0x0F) | qn
+        ).astype(jnp.int8)
+        return {**buffers, "q": buffers["q"].at[byte_idx].set(new)}
+
+    # offset(): inherited — block-aligned i is row-aligned (block % row == 0),
+    # and a row-aligned element offset's byte is exactly i // 2 because rows
+    # pack contiguously at row/2 bytes each.
+
+    def bytes_for_offsets(self, i) -> int:
+        """Distinct PACKED bytes touched (split-half indexing) + one f32 scale
+        per distinct block — same pricing law as the adjacent-pair int4, but
+        byte identity follows this accessor's own layout."""
+        self._check_offset(i)
+        arr = np.asarray(i)
+        half = self.row // 2
+        byte = (arr // self.row) * half + (arr % self.row) % half
+        payload = int(np.unique(byte).size)
+        scales = int(np.unique(arr // self.block).size) * 4
+        return payload + scales
+
+
 class MemorySpace(enum.Enum):
     """Strong memory-space types (paper: strong pointer types for heterogeneous
     memory). ANY/HBM/VMEM/SMEM map to Pallas memory spaces; HOST maps to

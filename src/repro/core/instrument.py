@@ -17,14 +17,16 @@ offset formula
 through a counted accessor and replays the paged-decode jnp twin's math on
 the gathered values — same output as ``kernels.ops.paged_decode_attention``,
 plus a measured bytes-moved figure that ``benchmarks/roofline.py``'s analytic
-model must reproduce (tests pin agreement within 10% for the f32 and int8
-paths). Page skipping mirrors the kernel: only pages with
+model must reproduce (tests pin agreement within 10% for the f32, int8 and
+int4 paths). Page skipping mirrors the kernel: only pages with
 ``j * page_size < context_len`` are gathered, so the tally reflects the
 traffic the kernel actually schedules, not the dense worst case.
 
-int4 pages are excluded: their split-half nibble order differs from
-QuantizedAccessor's adjacent pairs (kvquant.as_flat_accessor raises), so
-there is no flat accessor to count through.
+int4 pages count through ``accessors.Int4SplitHalfAccessor`` (row =
+head_dim), the flat accessor that speaks the pages' split-half nibble order —
+``kvquant.as_flat_accessor`` returns it for 4-bit specs, so all three kv
+dtypes (f32, int8, int4) are measurable and tests pin measured-vs-analytic
+agreement for each.
 """
 from __future__ import annotations
 

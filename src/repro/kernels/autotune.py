@@ -1,0 +1,289 @@
+"""Kernel autotuner — sweep-once block-shape selection for the paged decode path.
+
+The paged kernels expose two block-shape knobs (the schedule half of the
+paper's customization points — the layout fixes WHERE bytes live, the schedule
+fixes the order the kernel walks them):
+
+  * ``page_size``    — the LayoutPaged page extent, which is also the decode
+                       kernel's K/V tile height;
+  * ``block_pages``  — pages per compute block of the decode grid
+                       (paged_attention.paged_flash_decode / the blocked jnp
+                       twin's gather granularity);
+  * ``chunk_tokens`` — the prefill block shape (a chunk IS the prefill
+                       kernel's Q tile; the engine buckets widths itself).
+
+Which values win depends on (model geometry, kv dtype, batch) and on the
+machine — exactly the kind of fact that should be measured once and cached,
+not hard-coded. ``resolve()`` consults a JSON tuning table on disk
+(``artifacts/autotune_cache.json`` by default), keyed by
+
+    {model_tag}/{kv_dtype}/b{batch_bucket}[/s{seq_bucket}]
+
+(batch and sequence length bucketed to the next power of two so nearby sizes
+share an entry; the seq component appears when the caller supplies its sized
+max length — block shapes tuned at 16-page contexts are the wrong answer for
+a 3-page engine, so the sweep shapes its pools to the regime the engine will
+actually run). On a miss it runs a short microbenchmark sweep over candidate
+(page_size, block_pages) points — timing the SAME ``ops.paged_decode_attention``
+entry point the serving step traces — picks the fastest, derives
+``chunk_tokens`` from the winning page size, writes the table back, and
+returns. Every later engine init with the same key is a pure table lookup
+(the warm path: no sweep, no device work).
+
+``EngineConfig(autotune=True)`` is the consumer: ServeEngine.__init__ calls
+``resolve()`` before sizing the page pool, applies the tuned values to any
+field the user left at its auto sentinel (page_size=0 via
+``EngineConfig.sized_for``, decode_block_pages=0, chunk_tokens=0), surfaces
+the decision in ``engine.metrics()`` and as a ``tuning_selected`` trace
+instant, and never overrides a value the user pinned explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_CACHE_PATH = Path("artifacts/autotune_cache.json")
+CACHE_SCHEMA = 1
+
+# candidate grids — small on purpose: the sweep runs at engine init on a
+# cache miss, so it must stay a sub-second affair on the smoke models
+PAGE_SIZE_CANDIDATES = (8, 16, 32)
+BLOCK_PAGES_CANDIDATES = (1, 2, 4, 8)
+
+# sweep workload shape (per candidate): enough pages that blocking matters,
+# small enough that jit + a few reps stays cheap
+_SWEEP_SEQ_PAGES = 16   # logical pages per sequence in the microbench
+_SWEEP_REPS = 15
+_SWEEP_WARMUP = 2
+
+# candidates within this factor of the fastest measurement count as TIES, and
+# ties break toward the simplest schedule (largest page_size, then smallest
+# block_pages — fewer grid steps, no blocking machinery). On dispatch-bound
+# hosts every candidate lands inside the noise band and the raw argmin is a
+# coin flip; without the band the "winner" flips run to run and can land on a
+# schedule that is measurably worse at the engine level.
+_SWEEP_TIE_X = 1.10
+
+# ...and even the tie-broken winner only DISPLACES the default schedule
+# (page_size 16, unblocked) when it measures at least this much faster than
+# it. Kernel microbenches are the noisiest timing in the repo; a tuner that
+# moves on a small margin regresses real engines on quiet wins and noisy
+# losses alike, so the bar for leaving the default is a decisive one.
+_SWEEP_DISPLACE_X = 0.7
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedPoint:
+    """One tuning-table entry: the chosen block shapes plus provenance."""
+
+    page_size: int
+    block_pages: int
+    chunk_tokens: int
+    source: str          # "swept" | "default" | "cached"
+    us_per_step: float   # winner's median microbench step time (0 if default)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def batch_bucket(batch: int) -> int:
+    """Next power of two >= batch (min 1): nearby batch sizes share a key."""
+    b = max(1, int(batch))
+    return 1 << (b - 1).bit_length()
+
+
+def seq_bucket(seq_len: int) -> int:
+    """Next power of two >= seq_len (min 1) — same sharing law as batches."""
+    s = max(1, int(seq_len))
+    return 1 << (s - 1).bit_length()
+
+
+def tuning_key(model_tag: str, kv_dtype: str, batch: int,
+               seq_len: int = 0) -> str:
+    key = f"{model_tag}/{kv_dtype}/b{batch_bucket(batch)}"
+    if seq_len:
+        key += f"/s{seq_bucket(seq_len)}"
+    return key
+
+
+def load_cache(path: Path) -> dict:
+    try:
+        raw = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return {}
+    if raw.get("schema") != CACHE_SCHEMA:
+        return {}
+    return raw.get("entries", {})
+
+
+def save_cache(path: Path, entries: dict) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(
+        json.dumps({"schema": CACHE_SCHEMA, "entries": entries}, indent=2,
+                   sort_keys=True)
+        + "\n"
+    )
+
+
+def default_point(page_size: int = 16) -> TunedPoint:
+    """The untuned engine's implicit choices (pre-autotune behavior)."""
+    return TunedPoint(
+        page_size=page_size, block_pages=1, chunk_tokens=2 * page_size,
+        source="default", us_per_step=0.0,
+    )
+
+
+def _time_decode(fn, args, reps: int = _SWEEP_REPS) -> float:
+    """Min wall time (seconds) of a jitted call, post-warmup. Min, not median:
+    host-timing noise only ever ADDS time, so the minimum estimates the
+    schedule's capability — the quantity candidates are compared on."""
+    for _ in range(_SWEEP_WARMUP):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def sweep(
+    model_cfg,
+    *,
+    kv_dtype: str = "f32",
+    batch: int = 8,
+    seq_len: int = 0,
+    page_sizes: Sequence[int] = PAGE_SIZE_CANDIDATES,
+    block_pages: Sequence[int] = BLOCK_PAGES_CANDIDATES,
+) -> TunedPoint:
+    """Microbenchmark the decode kernel over the candidate grid; return the
+    fastest (page_size, block_pages) as a TunedPoint.
+
+    Times ``ops.paged_decode_attention`` (the exact entry the serving step
+    traces) on synthetic pools shaped from the model's real attention geometry
+    (Hq/Hkv/head_dim), one token per sequence, every sequence at full length —
+    the steady-state decode regime the knob exists for. ``seq_len`` shapes the
+    pools to the caller's sized context (pages = ceil(seq_len / page_size));
+    without it the sweep uses a generic 16-page context. Quantized dtypes time
+    the dequantizing path through ``paged_decode_attention_quant``.
+    """
+    from repro.kernels import ops
+    from repro.serving.engine.kvquant import KV_DTYPES
+
+    hq = max(1, int(model_cfg.n_heads))
+    hkv = max(1, int(model_cfg.n_kv_heads or model_cfg.n_heads))
+    d = int(model_cfg.head_dim)
+    b = batch_bucket(batch)
+    spec = KV_DTYPES[kv_dtype]
+
+    points: list[TunedPoint] = []
+    rng = np.random.default_rng(0)
+    for ps in page_sizes:
+        max_pages = -(-seq_len // ps) if seq_len else _SWEEP_SEQ_PAGES
+        num_pages = b * max_pages + 1
+        q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+        tables = jnp.asarray(
+            1 + np.arange(b * max_pages, dtype=np.int32).reshape(b, max_pages)
+        )
+        lens = jnp.full((b,), max_pages * ps, jnp.int32)
+        if spec is None:
+            pool = jnp.asarray(
+                rng.standard_normal((num_pages, hkv, ps, d)), jnp.float32
+            )
+            args = (q, pool, pool, tables, lens)
+
+            def make(bp):
+                return jax.jit(
+                    lambda q, k, v, t, ln, _bp=bp: ops.paged_decode_attention(
+                        q, k, v, t, ln, block_pages=_bp
+                    )
+                )
+        else:
+            enc = spec.encode_pages(
+                jnp.asarray(
+                    rng.standard_normal((num_pages, hkv, ps, d)), jnp.float32
+                )
+            )
+            args = (q, enc["q"], enc["scale"], enc["q"], enc["scale"],
+                    tables, lens)
+
+            def make(bp):
+                return jax.jit(
+                    lambda q, kq, ks, vq, vs, t, ln, _bp=bp:
+                        ops.paged_decode_attention_quant(
+                            q, kq, ks, vq, vs, t, ln, bits=spec.bits,
+                            block_pages=_bp,
+                        )
+                )
+
+        for bp in block_pages:
+            if bp > max_pages:
+                continue
+            t = _time_decode(make(bp), args)
+            points.append(TunedPoint(
+                page_size=ps, block_pages=bp, chunk_tokens=2 * ps,
+                source="swept", us_per_step=t * 1e6,
+            ))
+    if not points:
+        return default_point()
+    t_min = min(p.us_per_step for p in points)
+    ties = [p for p in points if p.us_per_step <= _SWEEP_TIE_X * t_min]
+    best = max(ties, key=lambda p: (p.page_size, -p.block_pages))
+    anchor_ps = 16 if 16 in page_sizes else page_sizes[0]
+    anchor = next(
+        (p for p in points
+         if p.page_size == anchor_ps and p.block_pages == 1),
+        None,
+    )
+    if anchor is not None and best.us_per_step > _SWEEP_DISPLACE_X * anchor.us_per_step:
+        return anchor
+    return best
+
+
+def resolve(
+    model_cfg,
+    *,
+    kv_dtype: str = "f32",
+    batch: int = 8,
+    seq_len: int = 0,
+    page_size: Optional[int] = None,
+    cache_path: Path | str | None = None,
+    allow_sweep: bool = True,
+) -> TunedPoint:
+    """The engine-init entry point: cached lookup, sweep-once on miss.
+
+    ``page_size`` pins the layout extent (an engine whose pool is already
+    sized cannot change it): the sweep then only searches block_pages at that
+    page size, and a cached entry tuned at a different page size is projected
+    onto the pinned one. ``allow_sweep=False`` degrades a miss to the default
+    point (no device work) — CI smoke uses it to test the cold/warm split.
+    """
+    path = Path(cache_path) if cache_path is not None else DEFAULT_CACHE_PATH
+    tag = getattr(model_cfg, "name", "model")
+    key = tuning_key(tag, kv_dtype, batch, seq_len)
+    entries = load_cache(path)
+    hit = entries.get(key)
+    if hit is not None:
+        point = TunedPoint(**{**hit, "source": "cached"})
+        if page_size and point.page_size != page_size:
+            point = dataclasses.replace(
+                point, page_size=page_size, chunk_tokens=2 * page_size
+            )
+        return point
+    if not allow_sweep:
+        return default_point(page_size or 16)
+    point = sweep(
+        model_cfg, kv_dtype=kv_dtype, batch=batch, seq_len=seq_len,
+        page_sizes=(page_size,) if page_size else PAGE_SIZE_CANDIDATES,
+    )
+    entries[key] = dataclasses.replace(point, source="swept").as_dict()
+    save_cache(path, entries)
+    return point

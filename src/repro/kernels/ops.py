@@ -157,34 +157,61 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None, impl:
     )
 
 
+def effective_block_pages(block_pages, max_pages: int) -> int:
+    """Sanitize the decode block-shape knob against a table width.
+
+    Returns the largest divisor of ``max_pages`` that is <= ``block_pages``
+    (the Pallas grid needs an exact factorization of the page axis), or 1 when
+    the knob is unset (None/0) — 1 reproduces the pre-knob schedule exactly.
+    Tuned values therefore degrade gracefully when an engine is sized with a
+    different max_pages than the sweep used.
+    """
+    if not block_pages or max_pages <= 0:
+        return 1
+    bp = min(int(block_pages), max_pages)
+    while max_pages % bp:
+        bp -= 1
+    return bp
+
+
 def paged_decode_attention(
-    q, k_pool, v_pool, block_tables, context_lens, *, scale=None, impl: str = "auto"
+    q, k_pool, v_pool, block_tables, context_lens, *, scale=None,
+    block_pages=None, impl: str = "auto",
 ):
     """One-token GQA decode against a LayoutPaged pool (num_pages, Hkv, ps, D);
-    block_tables (B, max_pages) int32; context_lens (B,) int32 per-sequence."""
+    block_tables (B, max_pages) int32; context_lens (B,) int32 per-sequence.
+    ``block_pages`` (pages per compute block; autotuned) is sanitized here via
+    effective_block_pages, so callers pass the tuned value verbatim."""
+    bp = effective_block_pages(block_pages, block_tables.shape[1])
     if _want_pallas(impl):
         return _paged_flash_decode(
-            q, k_pool, v_pool, block_tables, context_lens, scale=scale
+            q, k_pool, v_pool, block_tables, context_lens, scale=scale,
+            block_pages=bp,
         )
-    return _paged_decode_jnp(q, k_pool, v_pool, block_tables, context_lens, scale=scale)
+    return _paged_decode_jnp(
+        q, k_pool, v_pool, block_tables, context_lens, scale=scale,
+        block_pages=bp if bp > 1 else None,
+    )
 
 
 def paged_decode_attention_quant(
     q, k_q, k_scale, v_q, v_scale, block_tables, context_lens, *,
-    bits: int = 8, scale=None, impl: str = "auto",
+    bits: int = 8, scale=None, block_pages=None, impl: str = "auto",
 ):
     """One-token GQA decode against a QUANTIZED LayoutPaged pool: intN page
     bytes (num_pages, Hkv, ps, Dq) + per-(page, head) f32 scales (num_pages,
     Hkv) — the accessor customization point (PagedQuantSpec) composed with the
-    layout one. Same block-table/length contract as paged_decode_attention."""
+    layout one. Same block-table/length/block_pages contract as
+    paged_decode_attention."""
+    bp = effective_block_pages(block_pages, block_tables.shape[1])
     if _want_pallas(impl):
         return _paged_flash_decode_quant(
             q, k_q, k_scale, v_q, v_scale, block_tables, context_lens,
-            bits=bits, scale=scale,
+            bits=bits, scale=scale, block_pages=bp,
         )
     return _paged_decode_quant_jnp(
         q, k_q, k_scale, v_q, v_scale, block_tables, context_lens,
-        bits=bits, scale=scale,
+        bits=bits, scale=scale, block_pages=bp if bp > 1 else None,
     )
 
 

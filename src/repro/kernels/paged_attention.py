@@ -17,6 +17,15 @@ table, mask by length) used off-TPU and as the differentiable/cheap fallback;
 both are validated against ref.attention on densified pools in
 tests/test_serving_engine.py.
 
+Both decode paths expose one block-shape knob, ``block_pages`` (pages per
+compute block), picked per (model, kv_dtype, batch bucket) by
+kernels/autotune.py: the Pallas grids factor their page axis into
+(compute blocks, pages per block), and the jnp twin switches to a blocked
+gather (lax.scan over page blocks with an online-softmax carry) so the knob
+bounds its peak gathered working set. Chunked prefill has no separate knob —
+its block shape IS the chunk width, already swept by the engine's
+chunk-bucket machinery.
+
 Quantized pools (the accessor axis composed with the layout axis): the
 ``*_quant`` variants consume int8/int4 page pools with one f32 scale per
 (physical page, kv head) — serving/engine/kvquant.PagedQuantSpec's encoding.
@@ -103,10 +112,15 @@ def _paged_decode_kernel(
     *,
     scale: float,
     page_size: int,
+    block_pages: int,
 ):
     b = pl.program_id(0)
-    j = pl.program_id(2)
-    nj = pl.num_programs(2)
+    # the page loop is structured as (compute block jb) x (page-in-block ji):
+    # the pages_per_compute_block schedule knob of production paged kernels,
+    # picked per (model, kv_dtype, batch bucket) by kernels/autotune.py
+    jb, ji = pl.program_id(2), pl.program_id(3)
+    j = jb * block_pages + ji
+    last = (jb == pl.num_programs(2) - 1) & (ji == pl.num_programs(3) - 1)
     g_sz = q_ref.shape[2]
 
     @pl.when(j == 0)
@@ -127,7 +141,7 @@ def _paged_decode_kernel(
         v = v_ref[0].astype(jnp.float32)
         _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
 
-    @pl.when(j == nj - 1)
+    @pl.when(last)
     def _finalize():
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
@@ -142,6 +156,7 @@ def paged_flash_decode(
     context_lens: jax.Array,
     *,
     scale: float | None = None,
+    block_pages: int = 1,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One-token GQA decode against a paged KV pool.
@@ -152,6 +167,15 @@ def paged_flash_decode(
     (entries past the sequence's allocation must still be valid pool indices —
     point them at a reserved null page); context_lens: (B,) int32, positions
     < context_lens[b] attend (the current token's K/V must already be written).
+
+    ``block_pages`` (must divide max_pages; ops.effective_block_pages
+    sanitizes) is the kernel's block-shape knob: the page axis of the grid is
+    factored into (compute blocks, pages per block), the schedule structure
+    production paged kernels use to batch page DMAs per compute block. DMA
+    granularity here stays one page per grid step (scattered physical pages
+    cannot share one BlockSpec window); the knob exists so configurations
+    tuned on the jnp twin — where it sets the real gather granularity — carry
+    through this kernel's grid unchanged.
     """
     interpret = use_interpret() if interpret is None else interpret
     b, hq, tq, d = q.shape
@@ -159,21 +183,31 @@ def paged_flash_decode(
     assert tq == 1 and hq % hkv == 0
     group = hq // hkv
     max_pages = block_tables.shape[1]
+    bp = max(1, int(block_pages))
+    if max_pages % bp:
+        raise ValueError(
+            f"block_pages {bp} must divide max_pages {max_pages} "
+            "(ops.effective_block_pages picks a valid divisor)"
+        )
     scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
     qg = q.reshape(b, hkv, group, d)
 
-    kern = functools.partial(_paged_decode_kernel, scale=scale, page_size=page_size)
+    kern = functools.partial(
+        _paged_decode_kernel, scale=scale, page_size=page_size, block_pages=bp
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, max_pages),
+        grid=(b, hkv, max_pages // bp, bp),
         in_specs=[
-            pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
-            # the LayoutPaged indirection: logical page j of sequence bb DMAs
-            # physical page block_tables[bb, j]
-            pl.BlockSpec((1, None, page_size, d), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)),
-            pl.BlockSpec((1, None, page_size, d), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, jb, ji, bt, ln: (bb, h, 0, 0)),
+            # the LayoutPaged indirection: logical page jb*bp + ji of sequence
+            # bb DMAs physical page block_tables[bb, jb*bp + ji]
+            pl.BlockSpec((1, None, page_size, d),
+                         lambda bb, h, jb, ji, bt, ln: (bt[bb, jb * bp + ji], h, 0, 0)),
+            pl.BlockSpec((1, None, page_size, d),
+                         lambda bb, h, jb, ji, bt, ln: (bt[bb, jb * bp + ji], h, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, jb, ji, bt, ln: (bb, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((group, d), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -197,16 +231,28 @@ def paged_decode_attention_jnp(
     context_lens: jax.Array,
     *,
     scale: float | None = None,
+    block_pages: int | None = None,
 ) -> jax.Array:
     """jnp twin: gather each sequence's pages by table, mask by length.
 
-    Identical semantics to paged_flash_decode; O(B·max_pages·page_size) gather.
+    Identical semantics to paged_flash_decode. With ``block_pages`` unset the
+    whole table is gathered at once — O(B·max_pages·page_size) peak memory.
+    With ``block_pages`` set, the gather is blocked: a lax.scan over page
+    blocks of that width with an online-softmax carry, so peak gathered K/V is
+    O(B·block_pages·page_size) — here the knob really is the working-set
+    granularity, which is what kernels/autotune.py times.
     """
     b, hq, tq, d = q.shape
     _, hkv, page_size, _ = k_pool.shape
     assert tq == 1 and hq % hkv == 0
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    max_pages = block_tables.shape[1]
+    if block_pages and block_pages < max_pages:
+        return _paged_decode_jnp_blocked(
+            q, k_pool, v_pool, block_tables, context_lens,
+            scale=scale, block_pages=int(block_pages),
+        )
     # (B, max_pages, Hkv, ps, D) -> (B, Hkv, max_pages*ps, D)
     k = jnp.moveaxis(k_pool[block_tables], 2, 1)
     v = jnp.moveaxis(v_pool[block_tables], 2, 1)
@@ -223,6 +269,62 @@ def paged_decode_attention_jnp(
     p = jnp.exp(s - m) * live[:, None, None, :]
     l = jnp.sum(p, axis=-1, keepdims=True)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v) / jnp.where(l == 0.0, 1.0, l)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def _paged_decode_jnp_blocked(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    scale: float,
+    block_pages: int,
+) -> jax.Array:
+    """Blocked twin: scan page blocks with an online-softmax (m, l, acc) carry.
+
+    The table is padded to a whole number of blocks with page 0 (the engine's
+    reserved null page — always a valid pool index); padded positions are
+    masked dead, and dead scores are zeroed through the ``* live`` term rather
+    than through exp() (exp(NEG_INF - NEG_INF) == 1 on an all-dead block, so
+    masking must not rely on the exponent alone).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, page_size, _ = k_pool.shape
+    group = hq // hkv
+    max_pages = block_tables.shape[1]
+    nb = -(-max_pages // block_pages)
+    pad = nb * block_pages - max_pages
+    bt = jnp.pad(block_tables, ((0, 0), (0, pad)))  # null page 0 in the tail
+    bt = bt.reshape(b, nb, block_pages)
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    s_blk = block_pages * page_size
+
+    def step(carry, jb):
+        m, l, acc = carry
+        # (B, bp, Hkv, ps, D) -> (B, Hkv, bp*ps, D): one block's working set
+        k = jnp.moveaxis(k_pool[bt[:, jb]], 2, 1).reshape(b, hkv, s_blk, d)
+        v = jnp.moveaxis(v_pool[bt[:, jb]], 2, 1).reshape(b, hkv, s_blk, d)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) * scale
+        pos = jb * s_blk + jnp.arange(s_blk)
+        in_table = pos < max_pages * page_size  # padded tail pages are dead
+        live = (pos[None, :] < context_lens[:, None]) & in_table[None, :]
+        s = jnp.where(live[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * live[:, None, None, :]
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhgk,bhkd->bhgd", p, v.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, group, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
     return out.reshape(b, hq, 1, d).astype(q.dtype)
 
 
@@ -245,10 +347,12 @@ def _paged_quant_decode_kernel(
     scale: float,
     page_size: int,
     bits: int,
+    block_pages: int,
 ):
     b = pl.program_id(0)
-    j = pl.program_id(2)
-    nj = pl.num_programs(2)
+    jb, ji = pl.program_id(2), pl.program_id(3)
+    j = jb * block_pages + ji
+    last = (jb == pl.num_programs(2) - 1) & (ji == pl.num_programs(3) - 1)
     g_sz = q_ref.shape[2]
 
     @pl.when(j == 0)
@@ -273,7 +377,7 @@ def _paged_quant_decode_kernel(
         v = vq.astype(jnp.float32) * vs_ref[0]
         _flash_update(q, k, v, live, acc_ref, m_ref, l_ref, scale=scale)
 
-    @pl.when(j == nj - 1)
+    @pl.when(last)
     def _finalize():
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
@@ -291,6 +395,7 @@ def paged_flash_decode_quant(
     *,
     bits: int = 8,
     scale: float | None = None,
+    block_pages: int = 1,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One-token GQA decode against an intN paged KV pool.
@@ -298,9 +403,10 @@ def paged_flash_decode_quant(
     q: (B, Hq, 1, D); k_q/v_q: (num_pages, Hkv, page_size, Dq) int8 with
     Dq = D (int8) or D // 2 (int4, split-half nibbles); k_scale/v_scale:
     (num_pages, Hkv) f32, one scale per (physical page, kv head) — the
-    PagedQuantSpec encoding. Block table / length semantics are identical to
-    ``paged_flash_decode``: the layout indirection is untouched, the scales
-    ride the same ``bt[bb, j]`` index map as the page tiles.
+    PagedQuantSpec encoding. Block table / length / ``block_pages`` semantics
+    are identical to ``paged_flash_decode``: the layout indirection is
+    untouched, the scales ride the same ``bt[bb, j]`` index map as the page
+    tiles, and the page grid axis is factored (compute blocks, pages/block).
     """
     interpret = use_interpret() if interpret is None else interpret
     b, hq, tq, d = q.shape
@@ -309,27 +415,39 @@ def paged_flash_decode_quant(
     assert dq == (d if bits == 8 else d // 2)
     group = hq // hkv
     max_pages = block_tables.shape[1]
+    bp = max(1, int(block_pages))
+    if max_pages % bp:
+        raise ValueError(
+            f"block_pages {bp} must divide max_pages {max_pages} "
+            "(ops.effective_block_pages picks a valid divisor)"
+        )
     scale = float(scale) if scale is not None else 1.0 / np.sqrt(d)
     qg = q.reshape(b, hkv, group, d)
 
     kern = functools.partial(
-        _paged_quant_decode_kernel, scale=scale, page_size=page_size, bits=bits
+        _paged_quant_decode_kernel, scale=scale, page_size=page_size, bits=bits,
+        block_pages=bp,
     )
     page_spec = pl.BlockSpec(
-        (1, None, page_size, dq), lambda bb, h, j, bt, ln: (bt[bb, j], h, 0, 0)
+        (1, None, page_size, dq),
+        lambda bb, h, jb, ji, bt, ln: (bt[bb, jb * bp + ji], h, 0, 0),
     )
-    scale_spec = pl.BlockSpec((1, None), lambda bb, h, j, bt, ln: (bt[bb, j], h))
+    scale_spec = pl.BlockSpec(
+        (1, None), lambda bb, h, jb, ji, bt, ln: (bt[bb, jb * bp + ji], h)
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, hkv, max_pages),
+        grid=(b, hkv, max_pages // bp, bp),
         in_specs=[
-            pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, jb, ji, bt, ln: (bb, h, 0, 0)),
             page_spec,
             scale_spec,
             page_spec,
             scale_spec,
         ],
-        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, j, bt, ln: (bb, h, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, group, d), lambda bb, h, jb, ji, bt, ln: (bb, h, 0, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((group, d), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -359,13 +477,15 @@ def paged_decode_attention_quant_jnp(
     *,
     bits: int = 8,
     scale: float | None = None,
+    block_pages: int | None = None,
 ) -> jax.Array:
     """jnp twin of paged_flash_decode_quant: dequantize the whole pool, then the
     f32 gather path — manifestly the same semantics, O(pool) extra memory."""
     k_pool = dequantize_pages(k_q, k_scale, bits=bits)
     v_pool = dequantize_pages(v_q, v_scale, bits=bits)
     return paged_decode_attention_jnp(
-        q, k_pool, v_pool, block_tables, context_lens, scale=scale
+        q, k_pool, v_pool, block_tables, context_lens, scale=scale,
+        block_pages=block_pages,
     )
 
 

@@ -360,6 +360,7 @@ def self_attention_decode_paged(
     shard: Sharder = NULL_SHARDER,
     impl: str = "auto",
     kv_spec=None,
+    block_pages: int | None = None,
 ):
     """One-token decode against a paged KV pool (the LayoutPaged cache adapter).
 
@@ -374,6 +375,9 @@ def self_attention_decode_paged(
     representation: cache k/v are then {"q", "scale"} pytrees, the append
     quantizes at scatter time, and attention runs the dequantizing kernel (or
     its jnp twin) — same layout, same block tables, different accessor.
+
+    ``block_pages`` is the autotuned kernel block-shape knob, forwarded
+    verbatim to ops.paged_decode_attention{,_quant} (None = unblocked).
 
     Single-host path: ``shard`` is accepted for API symmetry with
     self_attention_decode but no mesh-aware variant exists yet — on a mesh the
@@ -392,12 +396,14 @@ def self_attention_decode_paged(
         cv = _quant_append(cache["v"], v[:, :, 0, :], page, slot, kv_spec)
         out = ops.paged_decode_attention_quant(
             q, ck["q"], ck["scale"], cv["q"], cv["scale"], block_tables, pos + 1,
-            bits=kv_spec.bits, impl=impl,
+            bits=kv_spec.bits, block_pages=block_pages, impl=impl,
         )
     else:
         ck = cache["k"].at[page, :, slot, :].set(k[:, :, 0, :].astype(cache["k"].dtype))
         cv = cache["v"].at[page, :, slot, :].set(v[:, :, 0, :].astype(cache["v"].dtype))
-        out = ops.paged_decode_attention(q, ck, cv, block_tables, pos + 1, impl=impl)
+        out = ops.paged_decode_attention(
+            q, ck, cv, block_tables, pos + 1, block_pages=block_pages, impl=impl
+        )
     y = _out_proj(p, out, x.dtype)
     return y, {"k": ck, "v": cv}
 

@@ -140,11 +140,11 @@ class DenseBlock:
         return attn.paged_cache_specs(cfg, num_pages, page_size, kv_spec=kv_spec)
 
     def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
-                     impl: str = "auto", kv_spec=None):
+                     impl: str = "auto", kv_spec=None, block_pages=None):
         h = apply_norm(cfg, x, p["ln_attn"])
         y, cache = attn.self_attention_decode_paged(
             cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
-            impl=impl, kv_spec=kv_spec,
+            impl=impl, kv_spec=kv_spec, block_pages=block_pages,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_mlp"])
@@ -197,11 +197,11 @@ class MoEBlock(DenseBlock):
         return x + y, cache
 
     def decode_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
-                     impl: str = "auto", kv_spec=None):
+                     impl: str = "auto", kv_spec=None, block_pages=None):
         h = apply_norm(cfg, x, p["ln_attn"])
         y, cache = attn.self_attention_decode_paged(
             cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
-            impl=impl, kv_spec=kv_spec,
+            impl=impl, kv_spec=kv_spec, block_pages=block_pages,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_moe"])
@@ -643,7 +643,7 @@ class Model:
                           block_tables: jax.Array, context_lens: jax.Array, *,
                           shard: Sharder = NULL_SHARDER, attn_impl: str = "auto",
                           kv_spec=None, write_tables=None, n_new=None,
-                          last_index=None, active=None):
+                          last_index=None, active=None, block_pages=None):
         """The MIXED serving step: decode rows and prefill chunks are the same
         computation at different widths.
 
@@ -698,7 +698,7 @@ class Model:
                     pl, cl = pc
                     return _blk.decode_paged(
                         cfg, pl, xc, cl, block_tables, context_lens, shard,
-                        impl=attn_impl, kv_spec=kv_spec,
+                        impl=attn_impl, kv_spec=kv_spec, block_pages=block_pages,
                     )
 
             x, cache = stack_scan(body, x, (p, cache))

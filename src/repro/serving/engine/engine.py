@@ -159,19 +159,43 @@ class EngineConfig:
     slow_step_threshold: float = 2.0  # decode steps slower than this multiple
     # of the per-token EMA (runtime/health.StragglerPolicy) count as slow:
     # trace event + `slow_steps` counter
+    autotune: bool = False  # consult kernels/autotune.py at engine init: fill
+    # any block-shape field left at its auto sentinel (page_size=0 via
+    # sized_for, decode_block_pages=0, chunk_tokens=0) from the disk-cached
+    # tuning table for (model, kv_dtype, batch bucket), sweeping once on a
+    # cache miss. Explicitly-set fields are never overridden; the decision is
+    # surfaced in metrics() and as a `tuning_selected` trace instant
+    decode_block_pages: int = 0  # pages per decode-kernel compute block
+    # (paged_attention block_pages). 0 = auto: tuned when autotune is on,
+    # unblocked (the pre-knob schedule) otherwise; > 0 pins the value
+    sized_max_len: int = 0  # the max_len sized_for() was called with (0 when
+    # the pool was sized by hand); lets autotune re-derive the pool extents
+    # when page_size itself is deferred to the tuner
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
                   **kw) -> "EngineConfig":
         """Pool sized so max_batch sequences of ``max_len`` tokens (prompt + new)
         can run with no contention: per-seq pages cover max_len plus the one-page
-        decode headroom, and the pool adds the reserved null page 0."""
+        decode headroom, and the pool adds the reserved null page 0.
+
+        ``page_size=0`` defers the page size to the autotuner (requires
+        autotune=True): pool sizing then happens at engine init, after the
+        tuning table has been consulted, from the stored ``sized_max_len``."""
+        if page_size == 0:
+            if not kw.get("autotune"):
+                raise ValueError("page_size=0 requires autotune=True")
+            return cls(
+                num_pages=0, page_size=0, max_batch=max_batch,
+                max_pages_per_seq=0, sized_max_len=max_len, **kw,
+            )
         pages_per_seq = -(-max_len // page_size) + 1
         return cls(
             num_pages=max_batch * pages_per_seq + 1,
             page_size=page_size,
             max_batch=max_batch,
             max_pages_per_seq=pages_per_seq,
+            sized_max_len=max_len,
             **kw,
         )
 
@@ -194,11 +218,49 @@ def aligned_max_logit_err(eng_ref, eng, results_ref, results) -> float:
     return max(errs)
 
 
+def _apply_tuning(config: EngineConfig, tuned) -> EngineConfig:
+    """Fill every auto-sentinel block-shape field of ``config`` from a
+    TunedPoint; explicitly-set fields win. page_size=0 (sized_for deferral)
+    re-derives the pool extents from sized_max_len at the tuned page size."""
+    kw = {}
+    if config.page_size == 0:
+        if not config.sized_max_len:
+            raise ValueError(
+                "page_size=0 needs EngineConfig.sized_for (sized_max_len unset)"
+            )
+        ps = tuned.page_size
+        pps = -(-config.sized_max_len // ps) + 1
+        kw.update(
+            page_size=ps,
+            max_pages_per_seq=pps,
+            num_pages=config.max_batch * pps + 1,
+        )
+    if config.decode_block_pages == 0:
+        kw["decode_block_pages"] = tuned.block_pages
+    if config.chunked_prefill and config.chunk_tokens == 0:
+        kw["chunk_tokens"] = tuned.chunk_tokens
+    return dataclasses.replace(config, **kw) if kw else config
+
+
 class ServeEngine:
     def __init__(self, model, params, config: EngineConfig = EngineConfig(),
                  mesh=None, rules=None):
         self.model = model
         self.params = params
+        # autotune: resolve block shapes BEFORE the pool is sized — a deferred
+        # page_size (sized_for(..., page_size=0)) materializes here. Warm path
+        # (tuning table hit) is a pure file read; the sweep runs once per
+        # (model, kv_dtype, batch bucket) per cache file.
+        self.tuned = None
+        if config.autotune:
+            from repro.kernels import autotune as _autotune
+
+            self.tuned = _autotune.resolve(
+                model.cfg, kv_dtype=config.kv_dtype, batch=config.max_batch,
+                seq_len=config.sized_max_len,
+                page_size=config.page_size or None,
+            )
+            config = _apply_tuning(config, self.tuned)
         self.config = config
         self.cache = PagedKVCache(
             model,
@@ -221,6 +283,16 @@ class ServeEngine:
         self.trace = EngineTrace(config.trace_capacity) if config.trace else None
         self.cache.trace = self.trace
         self.scheduler.trace = self.trace
+        if self.trace is not None and self.tuned is not None:
+            # the tuning decision is an engine event like any other: observable
+            # in the exported trace, not a silent constant baked into the jit
+            self.trace.instant(
+                "tuning_selected",
+                page_size=config.page_size,
+                block_pages=config.decode_block_pages,
+                chunk_tokens=config.chunk_tokens,
+                source=self.tuned.source,
+            )
         self.registry = MetricsRegistry()
         self._h_step = self.registry.histogram("step_time_s")
         self._h_host = self.registry.histogram("host_overhead_s")
@@ -265,11 +337,13 @@ class ServeEngine:
         # mutates them in place. Tables are NOT donated — the device mirror is
         # persistent and only patched by allocator events (cache.device_state).
         step_donate = (1, 2, 4) + ((7,) if self._grammar_on else ())
+        self._block_pages = config.decode_block_pages or None
         self._step = jax.jit(
             make_paged_serve_step(
                 model, mesh, rules, attn_impl=config.attn_impl,
                 kv_spec=self.cache.kv_spec, vocab=vocab,
                 logprobs_k=self._lp_k, grammar=self._grammar_on,
+                block_pages=self._block_pages,
             ),
             donate_argnums=step_donate,
         )
@@ -282,6 +356,7 @@ class ServeEngine:
                     model, self._k, mesh, rules, attn_impl=config.attn_impl,
                     kv_spec=self.cache.kv_spec, vocab=vocab,
                     logprobs_k=self._lp_k, grammar=self._grammar_on,
+                    block_pages=self._block_pages,
                 ),
                 donate_argnums=step_donate,
             )
@@ -1126,10 +1201,24 @@ class ServeEngine:
         stats — same keys the bench suite always consumed, now backed by
         O(1)-memory sketches (histogram percentiles are within one log-bucket
         of exact, ~7.5% relative)."""
+        # the autotuner's decision rides every snapshot (empty ones included)
+        # so "what config is this engine actually running" is always one
+        # metrics() call away; absent entirely when autotune is off, keeping
+        # the no-autotune snapshot shape byte-identical to before the feature
+        tuning: Dict[str, float] = {}
+        if self.tuned is not None:
+            tuning = {
+                "tuned_page_size": self.config.page_size,
+                "tuned_block_pages": self.config.decode_block_pages,
+                "tuned_chunk_tokens": self.config.chunk_tokens,
+                "tuned_source": self.tuned.source,
+            }
         failed = [s for s in self.results.values() if s.error is not None]
         states = [s for s in self.results.values() if s.error is None]
         if not states:
-            return {"failed": len(failed)} if failed else {}
+            out = {"failed": len(failed)} if failed else {}
+            out.update(tuning)
+            return out
         wall = max(s.finish_time for s in states)
         # throughput over the SPAN the engine was actually serving: replayed
         # traces with offset arrivals used to divide by max(finish) alone,
@@ -1173,4 +1262,5 @@ class ServeEngine:
             "prefill_tokens_computed": self._c_pf_computed.value,
             "prefill_tokens_skipped": self._c_pf_skipped.value,
             **self.cache.stats(),
+            **tuning,
         }

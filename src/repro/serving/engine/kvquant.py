@@ -27,7 +27,10 @@ int4 deviation: ``QuantizedAccessor`` packs ADJACENT value pairs per byte;
 pages pack SPLIT-HALF along the feature dim (kernels/paged_attention.py:
 pack_int4_splithalf) so in-kernel dequant is a lane concat and a token's
 scatter stays nibble-local. The scale algebra is identical; only the nibble
-order differs, which no consumer outside this spec observes.
+order differs, and ``accessors.Int4SplitHalfAccessor`` (row = head_dim) is
+the flat accessor that speaks it — ``as_flat_accessor`` returns it for int4,
+so the instrumentation path (core/instrument.CountingAccessor) covers every
+kv dtype.
 
 Scale lifecycle (deterministic, so prefix sharing dedupes quantized pages):
   - prefill scatter: fresh scale per (page, head) from that page's own absmax
@@ -47,7 +50,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.accessors import QuantizedAccessor
+from repro.core.accessors import Int4SplitHalfAccessor, QuantizedAccessor
 from repro.kernels.paged_attention import dequantize_pages, pack_int4_splithalf
 
 
@@ -122,16 +125,23 @@ class PagedQuantSpec:
 
     # -- the composition law -------------------------------------------------------
     def as_flat_accessor(self, page_size: int, head_dim: int) -> QuantizedAccessor:
-        """The equivalent QuantizedAccessor over the flat LayoutPaged codomain:
+        """The equivalent flat accessor over the LayoutPaged codomain:
         (page, head) scales == block scales with block = page_size * head_dim.
-        int8 only — int4 nibble ORDER differs (split-half vs adjacent pairs)."""
-        if self.bits != 8:
-            raise NotImplementedError(
-                "int4 pages pack nibbles split-half (kernel-friendly); the flat "
-                "QuantizedAccessor packs adjacent pairs — byte layouts differ"
+
+        int8 returns a plain ``QuantizedAccessor`` (the pool's flat bytes ARE
+        its buffers). int4 returns ``Int4SplitHalfAccessor`` with
+        row = head_dim — the accessor that speaks the pages' split-half nibble
+        order (pack_int4_splithalf packs per (slot, :) head vector, and the
+        flat offset formula walks head vectors contiguously, so the packed
+        pool reshaped to 1-D is byte-identical to that accessor's encoding).
+        Both make the pool observable through core.instrument's
+        CountingAccessor."""
+        if self.bits == 8:
+            return QuantizedAccessor(
+                self.element_type, bits=8, block=page_size * head_dim
             )
-        return QuantizedAccessor(
-            self.element_type, bits=8, block=page_size * head_dim
+        return Int4SplitHalfAccessor(
+            self.element_type, bits=4, block=page_size * head_dim, row=head_dim
         )
 
 

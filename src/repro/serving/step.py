@@ -39,7 +39,7 @@ def top_logprobs(logits, vocab: int, k: int):
 
 def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
                   tokens, block_tables, context_lens, slot_f32, slot_i32,
-                  grammar=None):
+                  grammar=None, block_pages=None):
     """One fused decode iteration: append -> attend -> sample, all on device.
 
     The per-slot policy rides in TWO packed vectors (device_put on this
@@ -70,6 +70,7 @@ def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
     logits, caches = model.decode_step_paged(
         params, caches, tokens, block_tables, context_lens,
         shard=shard, attn_impl=attn_impl, kv_spec=kv_spec, active=active,
+        block_pages=block_pages,
     )
     mask = None
     if grammar is not None:
@@ -91,7 +92,7 @@ def _fused_decode(model, shard, attn_impl, kv_spec, vocab, params, caches,
 
 def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
                           kv_spec=None, vocab=None, logprobs_k=0,
-                          grammar=False):
+                          grammar=False, block_pages=None):
     shard = Sharder(mesh, rules)
 
     if vocab is None:
@@ -106,6 +107,7 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
             return model.decode_step_paged(
                 params, caches, tokens, block_tables, context_lens,
                 shard=shard, attn_impl=attn_impl, kv_spec=kv_spec,
+                block_pages=block_pages,
             )
 
         return paged_serve_step
@@ -130,7 +132,7 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
         out = _fused_decode(
             model, shard, attn_impl, kv_spec, vocab, params, caches,
             tokens, block_tables, context_lens, slot_f32, slot_i32,
-            grammar=tuple(g) if grammar else None,
+            grammar=tuple(g) if grammar else None, block_pages=block_pages,
         )
         if not logprobs_k:
             return out
@@ -141,7 +143,7 @@ def make_paged_serve_step(model, mesh=None, rules=None, attn_impl="auto",
 
 def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
                                attn_impl="auto", kv_spec=None, vocab=None,
-                               logprobs_k=0, grammar=False):
+                               logprobs_k=0, grammar=False, block_pages=None):
     """K fused decode iterations in one on-device loop (jax.lax.scan).
 
     Legal only over an event-free horizon (Scheduler.event_free_horizon): no
@@ -169,6 +171,7 @@ def make_paged_serve_multistep(model, k_steps: int, mesh=None, rules=None,
                 model, shard, attn_impl, kv_spec, vocab, params, cs,
                 toks, block_tables, lens, slot_f32, slot_i32,
                 grammar=(gs, g[1], g[2]) if grammar else None,
+                block_pages=block_pages,
             )
             nxt, logits, new_lens, cs, chosen_lp = out[:5]
             new_gs = out[5] if grammar else gs

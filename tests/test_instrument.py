@@ -10,9 +10,12 @@ scale is reused inside a block); bit-packed = distinct bytes touched.
 *Agreement law* — driving the paged-decode twin through a counted accessor
 over the flat LayoutPaged codomain must (a) reproduce the kernel twin's
 output exactly and (b) measure byte traffic that matches
-``benchmarks/roofline.py``'s analytic model within 10% for the f32 and int8
-paths — the formula and the measurement derive the same number from opposite
-ends, so a drift in either is a bug.
+``benchmarks/roofline.py``'s analytic model within 10% for the f32, int8 and
+int4 paths — the formula and the measurement derive the same number from
+opposite ends, so a drift in either is a bug. int4 counts through
+``Int4SplitHalfAccessor`` (the flat accessor that speaks the pages'
+split-half nibble order), whose encoding must be byte-identical to
+``PagedQuantSpec.encode_pages`` on the same pool.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -203,12 +206,53 @@ def test_counted_paged_decode_int8_matches_twin_and_analytic():
     assert f32_bytes / analytic > 3.5
 
 
-def test_int4_has_no_flat_accessor():
-    """int4 pages pack nibbles split-half; the flat QuantizedAccessor packs
-    adjacent pairs — kvquant refuses the composition, so the instrument path
-    is f32 + int8 only (what the acceptance pins)."""
-    with pytest.raises(NotImplementedError):
-        KV_DTYPES["int4"].as_flat_accessor(8, 16)
+def test_counted_paged_decode_int4_matches_twin_and_analytic():
+    """int4's flat accessor is Int4SplitHalfAccessor (row = head_dim): its
+    encoding must be byte-identical to the pool encoder's split-half packing,
+    and the counted decode must match the quant kernel twin AND the analytic
+    byte model — the full agreement law at the narrowest representation."""
+    rng = np.random.default_rng(2)
+    b, hq, hkv, d, ps = 3, 4, 2, 16, 8
+    num_pages, max_pages = 12, 4
+    lens = [29, 9, 17]
+    q, pool_k, pool_v, tables, ctx = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, num_pages=num_pages,
+        max_pages=max_pages, lens=lens,
+    )
+    spec = KV_DTYPES["int4"]
+    flat = spec.as_flat_accessor(ps, d)
+    assert flat.block == ps * d and flat.row == d
+    acc = CountingAccessor(flat)
+    kb = flat.from_codomain(jnp.asarray(pool_k.reshape(-1)))
+    vb = flat.from_codomain(jnp.asarray(pool_v.reshape(-1)))
+    # the composition law, bytes-level: the pool encoder's split-half packed
+    # pages, flattened, ARE the flat accessor's q buffer (same for scales)
+    enc_k = spec.encode_pages(jnp.asarray(pool_k))
+    np.testing.assert_array_equal(
+        np.asarray(enc_k["q"]).reshape(-1), np.asarray(kb["q"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(enc_k["scale"]).reshape(-1), np.asarray(kb["scale"])
+    )
+    out, tally = counted_paged_decode(
+        q, kb, vb, acc, tables, ctx, pool_shape=(num_pages, hkv, ps, d),
+    )
+    enc_v = spec.encode_pages(jnp.asarray(pool_v))
+    ref = paged_decode_attention_quant_jnp(
+        q, enc_k["q"], enc_k["scale"], enc_v["q"], enc_v["scale"],
+        tables, ctx, bits=4,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    analytic = paged_decode_analytic_bytes(
+        lens, page_size=ps, n_kv_heads=hkv, head_dim=d, kv_dtype="int4",
+    )
+    assert abs(tally.bytes_moved - analytic) / analytic <= 0.10
+    # two int4 values share a byte: traffic beats int8 by ~2x at equal pages
+    int8_bytes = paged_decode_analytic_bytes(
+        lens, page_size=ps, n_kv_heads=hkv, head_dim=d, kv_dtype="int8",
+    )
+    assert int8_bytes / analytic > 1.7
 
 
 def test_analytic_bytes_model():

@@ -99,9 +99,24 @@ def test_int8_pool_is_flat_quantized_accessor_over_layout_paged():
     np.testing.assert_allclose(via_accessor, via_pages, rtol=0, atol=0)
 
 
-def test_int4_flat_accessor_documented_deviation():
-    with pytest.raises(NotImplementedError, match="split-half"):
-        KV_DTYPES["int4"].as_flat_accessor(4, 8)
+def test_int4_flat_accessor_speaks_the_page_packing():
+    """as_flat_accessor covers int4 too (the PR-6 refusal is gone): the
+    returned split-half accessor reads back exactly what encode_pages packed,
+    element for element — the law that lets CountingAccessor price int4
+    pools through the bytes the kernel really touches."""
+    spec = KV_DTYPES["int4"]
+    ps, hkv, d = 4, 2, 8
+    flat = spec.as_flat_accessor(ps, d)
+    assert flat.bits == 4 and flat.row == d and flat.block == ps * d
+    pool = jnp.asarray(
+        np.random.default_rng(0).standard_normal((3, hkv, ps, d)), jnp.float32
+    )
+    enc = spec.encode_pages(pool)
+    bufs = {"q": jnp.asarray(np.asarray(enc["q"]).reshape(-1)),
+            "scale": jnp.asarray(np.asarray(enc["scale"]).reshape(-1))}
+    dense = np.asarray(spec.decode_pages(enc["q"], enc["scale"])).reshape(-1)
+    for o in (0, 1, d // 2, d - 1, d, ps * d, pool.size - 1):
+        assert float(flat.access(bufs, o)) == pytest.approx(dense[o], abs=1e-6)
 
 
 def test_quantized_accessor_rejects_negative_offsets():

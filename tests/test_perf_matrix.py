@@ -1,0 +1,181 @@
+"""Perf-matrix laws that hold without running the bench: grid pairing, byte
+accounting, the ratchet gate's three verdicts, the roofline arithmetic, and
+the once-per-host bandwidth calibration cache.
+
+The expensive halves (engine timing, the autotune comparison) are exercised
+by the bench itself — ``python -m benchmarks.run --only perf-matrix --smoke``
+in CI. What lives here is everything whose correctness is a pure function of
+its inputs, so a regression fails in seconds, not after a five-minute sweep.
+"""
+import json
+
+import pytest
+
+from benchmarks import perf_matrix, roofline
+from benchmarks.serving_suite import bench_config
+
+
+def _cell(key="ps8_ck32_f32_b2_k1", step_ms=1.0, attainment=0.5, **over):
+    c = {
+        "key": key, "page_size": 8, "chunk_tokens": 32, "kv_dtype": "f32",
+        "max_batch": 2, "multi_step": 1, "step_ms_p50": step_ms,
+        "step_ms_p95": step_ms * 1.5, "tokens_per_s": 1000.0,
+        "decode_steps": 64, "measured_bytes_per_step": 4096,
+        "analytic_bytes_per_step": 4096, "measured_vs_analytic_rel": 0.0,
+        "achieved_gb_s": 0.004, "attainment": attainment,
+        "attainment_floor": 5e-4, "below_floor": False,
+    }
+    c.update(over)
+    return c
+
+
+# =====================================================================================
+# grid: smoke cells must pair against full-run baselines
+# =====================================================================================
+def test_smoke_grid_is_exact_subset_of_full():
+    full = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(False)}
+    smoke = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(True)}
+    assert len(full) == 48 and len(smoke) == 8
+    assert smoke < full  # strict subset: every smoke cell has a committed twin
+
+
+def test_committed_baseline_covers_the_full_grid():
+    report = json.loads(perf_matrix.OUT_PATH.read_text())
+    assert report["schema_version"] == perf_matrix.SCHEMA_VERSION
+    keys = {c["key"] for c in report["cells"]}
+    assert keys == {
+        perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(False)
+    }
+    required = {
+        "step_ms_p50", "step_ms_p95", "tokens_per_s",
+        "measured_bytes_per_step", "analytic_bytes_per_step", "attainment",
+    }
+    for c in report["cells"]:
+        assert required <= set(c), c["key"]
+        assert 0.0 < c["attainment"] <= 1.0, c["key"]
+
+
+# =====================================================================================
+# ratchet gate: the three verdicts
+# =====================================================================================
+def test_check_cells_regression_fails_and_improvement_passes():
+    baseline = {"cells": [_cell(step_ms=1.0)]}
+    ok = perf_matrix.check_cells({"cells": [_cell(step_ms=1.19)]}, baseline)
+    assert ok == []
+    ok = perf_matrix.check_cells({"cells": [_cell(step_ms=0.2)]}, baseline)
+    assert ok == []  # faster never trips the ratchet
+    # one histogram bucket of quantization slack on top of REGRESSION_X: a
+    # 1.25x reading could be a bucket-low baseline vs a bucket-high current
+    ok = perf_matrix.check_cells({"cells": [_cell(step_ms=1.25)]}, baseline)
+    assert ok == []
+    bad = perf_matrix.check_cells({"cells": [_cell(step_ms=1.5)]}, baseline)
+    assert len(bad) == 1 and "1.50x" in bad[0]
+
+
+def test_check_cells_uniform_drift_cancels_targeted_regression_fails():
+    # four paired cells: a uniform 1.5x slowdown of everything is host
+    # condition (median-normalized away); the same 1.5x on ONE cell while its
+    # peers hold steady is a code regression and fails
+    keys = [f"ps8_ck32_f32_b2_k{k}" for k in (1, 2, 3, 4)]
+    baseline = {"cells": [_cell(key=k, step_ms=1.0) for k in keys]}
+    uniform = {"cells": [_cell(key=k, step_ms=1.5) for k in keys]}
+    assert perf_matrix.check_cells(uniform, baseline) == []
+    targeted = {"cells": [
+        _cell(key=keys[0], step_ms=1.5),
+        *[_cell(key=k, step_ms=1.0) for k in keys[1:]],
+    ]}
+    bad = perf_matrix.check_cells(targeted, baseline)
+    assert len(bad) == 1 and keys[0] in bad[0]
+
+
+def test_check_cells_roofline_violation_always_fails():
+    # attainment > 1.0 is a measurement bug by definition: fails even with no
+    # baseline to compare against, and even when latency looks fine
+    bad = perf_matrix.check_cells(
+        {"cells": [_cell(attainment=1.2)]}, baseline=None,
+    )
+    assert len(bad) == 1 and "1.0" in bad[0]
+
+
+def test_check_cells_unpaired_key_is_skipped():
+    baseline = {"cells": [_cell(key="ps8_ck32_f32_b2_k1", step_ms=1.0)]}
+    report = {"cells": [_cell(key="ps16_ck64_int4_b4_k4", step_ms=99.0)]}
+    assert perf_matrix.check_cells(report, baseline) == []
+
+
+# =====================================================================================
+# measured vs analytic bytes: the 10% law for every KV representation
+# =====================================================================================
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8", "int4"])
+def test_measured_step_bytes_matches_analytic(kv_dtype):
+    cfg = bench_config(smoke=True)
+    out = perf_matrix.measured_step_bytes(
+        cfg, page_size=8, kv_dtype=kv_dtype, batch=2, context_len=32,
+    )
+    assert out["measured_bytes_per_step"] > 0
+    assert out["measured_vs_analytic_rel"] <= 0.10
+
+
+def test_quantized_cells_move_fewer_bytes():
+    cfg = bench_config(smoke=True)
+    bytes_of = {
+        kv: perf_matrix.measured_step_bytes(
+            cfg, page_size=8, kv_dtype=kv, batch=2, context_len=32,
+        )["measured_bytes_per_step"]
+        for kv in ("f32", "int8", "int4")
+    }
+    assert bytes_of["f32"] > bytes_of["int8"] > bytes_of["int4"]
+
+
+# =====================================================================================
+# rendering
+# =====================================================================================
+def test_render_markdown_smoke():
+    report = {
+        "cells": [_cell(), _cell(key="ps8_ck32_int4_b2_k1", kv_dtype="int4",
+                                 below_floor=True)],
+        "machine_bandwidth_gb_s": 10.0,
+        "autotune": {
+            "selected": {"tuned_page_size": 16, "tuned_block_pages": 1,
+                         "tuned_chunk_tokens": 32, "tuned_source": "cached"},
+            "tokens_per_s_autotuned": 900.0, "tokens_per_s_default": 850.0,
+            "no_slower_than_default": True,
+        },
+    }
+    md = perf_matrix.render_markdown(report)
+    assert "ps8_ck32_f32_b2_k1" in md
+    assert "below-floor" in md
+    assert "page_size=16" in md and "no_slower=True" in md
+
+
+# =====================================================================================
+# roofline arithmetic + the per-host calibration cache
+# =====================================================================================
+def test_attainment_arithmetic():
+    # 100 bytes in 1s against a 100 B/s roof is exactly the roof
+    assert roofline.attainment(100, 1.0, 100.0) == pytest.approx(1.0)
+    assert roofline.attainment(50, 1.0, 100.0) == pytest.approx(0.5)
+    # degenerate inputs answer 0.0 instead of raising mid-bench
+    assert roofline.attainment(0, 1.0, 100.0) == 0.0
+    assert roofline.attainment(100, 0.0, 100.0) == 0.0
+    assert roofline.attainment(100, 1.0, 0.0) == 0.0
+
+
+def test_machine_bandwidth_measured_once_then_cached(tmp_path, monkeypatch):
+    path = tmp_path / "bw.json"
+    calls = []
+    monkeypatch.setattr(
+        roofline, "_stream_gbs", lambda: calls.append(1) or 7.5e9
+    )
+    bw = roofline.measure_machine_bandwidth(cache_path=path)
+    assert bw == 7.5e9 and len(calls) == 1 and path.exists()
+    # warm: a pure file read — the STREAM kernel must not run again
+    bw2 = roofline.measure_machine_bandwidth(cache_path=path)
+    assert bw2 == 7.5e9 and len(calls) == 1
+    # refresh forces recalibration and rewrites the cache
+    monkeypatch.setattr(
+        roofline, "_stream_gbs", lambda: calls.append(1) or 9.0e9
+    )
+    bw3 = roofline.measure_machine_bandwidth(cache_path=path, refresh=True)
+    assert bw3 == 9.0e9 and len(calls) == 2
+    assert roofline.measure_machine_bandwidth(cache_path=path) == 9.0e9

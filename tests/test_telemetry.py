@@ -64,6 +64,55 @@ def test_histogram_empty_single_and_out_of_range():
     assert h2.snapshot()["count"] == 2
 
 
+def test_histogram_sub_resolution_samples():
+    """Samples below the default lo=1e-7 (sub-100ns 'timings' — clock jitter,
+    zero-work steps) land in the underflow bucket but never corrupt the
+    sketch: count/mean/min stay exact and percentiles never fabricate a value
+    the data doesn't contain."""
+    h = Histogram()
+    tiny = (0.0, 1e-12, 9.9e-8)
+    for v in tiny:
+        h.observe(v)
+    assert h.counts[0] == len(tiny)  # all three under lo -> underflow bucket
+    assert h.percentile(50) == 0.0  # == observed min, not a bucket edge
+    assert h.snapshot()["min"] == 0.0
+    assert h.snapshot()["mean"] == pytest.approx(sum(tiny) / len(tiny))
+    # a normal sample after the underflow run: p99 tops out at the real max
+    h.observe(2e-3)
+    assert h.percentile(99) == pytest.approx(2e-3)
+    assert h.snapshot()["count"] == 4
+
+
+def test_histogram_single_sample_every_percentile():
+    """With one observation every percentile IS that observation — the
+    interpolation path must clamp to [min, max] rather than report an edge of
+    the covering bucket."""
+    h = Histogram()
+    h.observe(7.3e-4)
+    for q in (0, 1, 50, 95, 99, 100):
+        assert h.percentile(q) == pytest.approx(7.3e-4), q
+
+
+def test_histogram_reset_then_record():
+    """reset() must return the histogram to a pristine state: stale min/max
+    or counts surviving a reset would poison the first post-reset snapshot —
+    exactly the rehearsal -> reset_metrics -> measure idiom the bench suite
+    leans on."""
+    h = Histogram()
+    for v in (1e-9, 5e-3, 2.0, 5e3):  # underflow, two in-range, overflow
+        h.observe(v)
+    h.reset()
+    assert h.count == 0 and h.total == 0.0
+    assert h.percentile(50) == 0.0
+    assert all(c == 0 for c in h.counts)
+    snap = h.snapshot()
+    assert snap["min"] == 0.0 and snap["max"] == 0.0  # not inf / stale
+    h.observe(4e-2)
+    assert h.percentile(50) == pytest.approx(4e-2)
+    assert h.snapshot()["count"] == 1
+    assert h.min == pytest.approx(4e-2) and h.max == pytest.approx(4e-2)
+
+
 def test_registry_create_or_get_and_reset():
     reg = MetricsRegistry()
     c = reg.counter("steps")
