@@ -1,7 +1,7 @@
 """Roofline-anchored performance matrix: the serving engine swept cell by cell.
 
-Each cell of the (page_size x chunk_tokens x kv_dtype x max_batch x multi_step)
-grid runs a short steady-state decode workload (batch-full, fixed prompt and
+Each cell of the (page_size x chunk_tokens x kv_dtype x max_batch x multi_step
+x spec_tokens) grid runs a short steady-state decode workload (batch-full, fixed prompt and
 tail lengths, rehearsal first so measurement times compiled code; every cell's
 timing is the min over five measurement passes INTERLEAVED across the whole
 grid — host interference arrives in multi-second bursts, and spreading a
@@ -23,7 +23,8 @@ records:
     bug by construction and FAILS the run; attainment below the per-dtype
     floor is flagged in the report and the markdown table.
 
-The matrix is a RATCHET: cells are keyed (``ps8_ck32_f32_b2_k1``) and every
+The matrix is a RATCHET: cells are keyed (``ps8_ck32_f32_b2_k1``, speculative
+cells append ``_sp3``) and every
 run compares itself against the committed ``BENCH_perf_matrix.json`` — any
 cell whose step_ms_p50 regresses more than 20% vs its committed twin fails
 the run (CI's perf-matrix-smoke job runs the reduced grid, whose keys are an
@@ -64,22 +65,35 @@ from repro.serving import GenerationParams
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 from repro.serving.engine.kvquant import KV_DTYPES
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 OUT_PATH = Path("BENCH_perf_matrix.json")  # COMMITTED: the per-cell ratchet
 # baseline. Smoke runs never clobber it; they pair their cells against it.
 SMOKE_OUT_PATH = Path("artifacts/perf_matrix_smoke.json")
 MD_PATH = Path("artifacts/perf_matrix.md")
 
-# full grid: 2 x 2 x 3 x 2 x 2 = 48 cells
+# full grid: 2 x 2 x 3 x 2 x 2 = 48 plain cells + 4 speculative cells = 52
 PAGE_SIZES = (8, 16)
 CHUNKS = (32, 64)
 KV_AXIS = ("f32", "int8", "int4")
 BATCHES = (2, 4)
 KS = (1, 4)
 
-# smoke grid: 2 x 2 x 2 = 8 cells, an EXACT SUBSET of the full grid (chunk and
-# batch pinned to full-grid values) so every smoke cell has a committed twin
+# speculative axis: plain cells run sp=0 (no draft/verify machinery in the
+# dispatch); spec cells run sp=SPEC_SP draft tokens per window through the
+# chunk-kernel verify path (serving/speculative.py). Spec cells pin
+# chunk/batch/K to one plain combo so the _sp suffix is the ONLY difference
+# from their sp=0 sibling — the pair prices the verify-window machinery
+# itself. Backoff is disabled inside spec cells (spec_backoff=0): the random
+# steady-state stream is incompressible, and the cell exists to time the
+# window path, not the engine's decision to stop using it.
+SPEC_SP = 3
+SPEC_K = 4
+SPEC_KV_AXIS = ("f32", "int8")
+
+# smoke grid: 2 x 2 x 2 = 8 plain cells + 2 speculative cells = 10, an EXACT
+# SUBSET of the full grid (chunk and batch pinned to full-grid values) so
+# every smoke cell has a committed twin
 SMOKE_KV_AXIS = ("f32", "int8")
 SMOKE_CHUNK = 32
 SMOKE_BATCH = 2
@@ -106,17 +120,36 @@ _BUCKET_X = 10 ** (1 / 32)  # measurement-resolution allowance on top of
 ATTAINMENT_FLOORS = {"f32": 5e-4, "int8": 1e-4, "int4": 5e-5}
 
 
-def cell_key(ps: int, chunk: int, kv: str, batch: int, k: int) -> str:
-    return f"ps{ps}_ck{chunk}_{kv}_b{batch}_k{k}"
+def cell_key(ps: int, chunk: int, kv: str, batch: int, k: int,
+             sp: int = 0) -> str:
+    # sp=0 keys keep their pre-speculation spelling so existing committed
+    # baselines pair unchanged; only spec cells grow the _sp suffix
+    base = f"ps{ps}_ck{chunk}_{kv}_b{batch}_k{k}"
+    return f"{base}_sp{sp}" if sp else base
 
 
 def grid(smoke: bool):
     if smoke:
-        return [
-            (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, k)
+        plain = [
+            (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, k, 0)
             for ps, kv, k in itertools.product(PAGE_SIZES, SMOKE_KV_AXIS, KS)
         ]
-    return list(itertools.product(PAGE_SIZES, CHUNKS, KV_AXIS, BATCHES, KS))
+        spec = [
+            (ps, SMOKE_CHUNK, "f32", SMOKE_BATCH, SPEC_K, SPEC_SP)
+            for ps in PAGE_SIZES
+        ]
+        return plain + spec
+    plain = [
+        (ps, chunk, kv, batch, k, 0)
+        for ps, chunk, kv, batch, k in itertools.product(
+            PAGE_SIZES, CHUNKS, KV_AXIS, BATCHES, KS
+        )
+    ]
+    spec = [
+        (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, SPEC_K, SPEC_SP)
+        for ps, kv in itertools.product(PAGE_SIZES, SPEC_KV_AXIS)
+    ]
+    return plain + spec
 
 
 # -------------------------------------------------------------------------------
@@ -194,11 +227,11 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
     walk puts tens of seconds between them, and the min recovers the cell's
     capability (host noise only ever ADDS time)."""
     engines = []
-    for ps, chunk, kv, batch, k in combos:
+    for ps, chunk, kv, batch, k, sp in combos:
         conf = EngineConfig.sized_for(
             PROMPT_LEN + NEW_TOKENS + 1, page_size=ps, max_batch=batch,
             multi_step=k, kv_dtype=kv, chunked_prefill=True,
-            chunk_tokens=chunk,
+            chunk_tokens=chunk, spec_tokens=sp, spec_backoff=0,
         )
         eng = ServeEngine(model, params, conf)
         eng.run(_steady_requests(cfg.vocab, batch))  # rehearsal
@@ -220,7 +253,7 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
                 best[i]["tokens_per_s"] = max(best[i]["tokens_per_s"],
                                               m["tokens_per_s"])
     cells = []
-    for (ps, chunk, kv, batch, k), m in zip(combos, best):
+    for (ps, chunk, kv, batch, k, sp), m in zip(combos, best):
         # mid-stream occupancy: every slot half way through its decode tail
         traffic = measured_step_bytes(
             cfg, page_size=ps, kv_dtype=kv, batch=batch,
@@ -233,12 +266,13 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
         )
         floor = ATTAINMENT_FLOORS[kv]
         cells.append({
-            "key": cell_key(ps, chunk, kv, batch, k),
+            "key": cell_key(ps, chunk, kv, batch, k, sp),
             "page_size": ps,
             "chunk_tokens": chunk,
             "kv_dtype": kv,
             "max_batch": batch,
             "multi_step": k,
+            "spec_tokens": sp,
             "step_ms_p50": m["step_ms_p50"],
             "step_ms_p95": m["step_ms_p95"],
             "tokens_per_s": m["tokens_per_s"],
@@ -376,15 +410,16 @@ def check_cells(report: dict, baseline: dict | None) -> list:
 
 def render_markdown(report: dict) -> str:
     rows = [
-        "| cell | ps | chunk | kv | batch | K | p50 ms | p95 ms | tok/s "
+        "| cell | ps | chunk | kv | batch | K | sp | p50 ms | p95 ms | tok/s "
         "| measured B/step | vs analytic | GB/s | attainment | flag |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for c in report["cells"]:
         flag = "below-floor" if c["below_floor"] else ""
         rows.append(
             f"| {c['key']} | {c['page_size']} | {c['chunk_tokens']} "
             f"| {c['kv_dtype']} | {c['max_batch']} | {c['multi_step']} "
+            f"| {c.get('spec_tokens', 0)} "
             f"| {c['step_ms_p50']:.3f} | {c['step_ms_p95']:.3f} "
             f"| {c['tokens_per_s']:.1f} | {c['measured_bytes_per_step']} "
             f"| {c['measured_vs_analytic_rel']:.1%} | {c['achieved_gb_s']:.4f} "

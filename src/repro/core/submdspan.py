@@ -38,6 +38,22 @@ The laws (tests/test_submdspan_paged.py):
     sections): the slice transforms only the LAYOUT; reading a chunk of a
     quantized pool decodes through the same accessor and then gathers through
     the sliced offsets, so chunk reads commute with dequantization.
+
+Verification is a chunk (the speculative regime)
+------------------------------------------------
+Speculative decoding (serving/speculative.py) adds NO new view machinery —
+the verify step of a K-token draft window is the same pos-range submdspan the
+chunked prefill already compiles, at width K+1. Presenting [current token,
+draft] to the model is the slice ``(L, L + K + 1)`` of the sequence's paged
+view: one causal chunk whose logits score every draft position in a single
+kernel dispatch, exactly as a prefill chunk scores its prompt positions.
+Acceptance then moves the OTHER direction along the same arithmetic: rolling
+back the ``K + 1 - a`` rejected tokens never touches pool bytes, it shrinks
+the view — the per-sequence length (the lens) retreats to ``L + a``, and the
+garbage KV left past the lens is dead by construction because every later
+slice, chunk, and decode step reads through lens-bounded layouts. Draft,
+verify, and rollback are all index arithmetic over one pool: speculation is
+submdspan applied to time, as chunking is submdspan applied to prefill.
 """
 from __future__ import annotations
 

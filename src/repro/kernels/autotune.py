@@ -25,10 +25,12 @@ max length — block shapes tuned at 16-page contexts are the wrong answer for
 a 3-page engine, so the sweep shapes its pools to the regime the engine will
 actually run). On a miss it runs a short microbenchmark sweep over candidate
 (page_size, block_pages) points — timing the SAME ``ops.paged_decode_attention``
-entry point the serving step traces — picks the fastest, derives
-``chunk_tokens`` from the winning page size, writes the table back, and
-returns. Every later engine init with the same key is a pure table lookup
-(the warm path: no sweep, no device work).
+entry point the serving step traces — picks the fastest, then sweeps
+``chunk_tokens`` INDEPENDENTLY at the winning page size against real
+``ops.paged_prefill_chunk_attention`` timings (schema 2; pre-schema-2 it was
+derived as 2*page_size), writes the table back, and returns. Every later
+engine init with the same key is a pure table lookup (the warm path: no
+sweep, no device work).
 
 ``EngineConfig(autotune=True)`` is the consumer: ServeEngine.__init__ calls
 ``resolve()`` before sizing the page pool, applies the tuned values to any
@@ -50,12 +52,18 @@ import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_CACHE_PATH = Path("artifacts/autotune_cache.json")
-CACHE_SCHEMA = 1
+# schema 2: chunk_tokens is SWEPT from real prefill-chunk timings instead of
+# derived as 2*page_size — v1 entries carry the derived value and reload as
+# misses so every key re-tunes once under the new law
+CACHE_SCHEMA = 2
 
 # candidate grids — small on purpose: the sweep runs at engine init on a
 # cache miss, so it must stay a sub-second affair on the smoke models
 PAGE_SIZE_CANDIDATES = (8, 16, 32)
 BLOCK_PAGES_CANDIDATES = (1, 2, 4, 8)
+# chunk widths tried at the WINNING page size, as page multiples (chunk
+# boundaries must stay page-aligned — the engine validates it)
+CHUNK_PAGE_MULTIPLIERS = (1, 2, 4)
 
 # sweep workload shape (per candidate): enough pages that blocking matters,
 # small enough that jit + a few reps stays cheap
@@ -155,6 +163,73 @@ def _time_decode(fn, args, reps: int = _SWEEP_REPS) -> float:
     return float(np.min(ts))
 
 
+def sweep_chunk_tokens(
+    model_cfg,
+    *,
+    kv_dtype: str = "f32",
+    batch: int = 8,
+    seq_len: int = 0,
+    page_size: int = 16,
+    multipliers: Sequence[int] = CHUNK_PAGE_MULTIPLIERS,
+) -> int:
+    """Pick ``chunk_tokens`` from REAL prefill-chunk timings at a fixed page
+    size, instead of deriving it from the decode winner (pre-schema-2: always
+    2*page_size — but the chunk width is the prefill kernel's Q-tile height,
+    a different schedule axis with its own optimum: wider chunks amortize
+    dispatch, narrower ones bound the mixed step's decode-latency tax).
+
+    Times ``ops.paged_prefill_chunk_attention`` — the exact entry the chunked
+    prefill step traces — at candidate widths C = m * page_size against a
+    half-resident past, and compares on time PER TOKEN (each dispatch covers C
+    positions). The same tie band as the decode sweep applies, breaking toward
+    the pre-schema-2 default 2*page_size so dispatch-bound hosts keep the
+    engine's historical shape rather than flipping on noise."""
+    from repro.kernels import ops
+    from repro.serving.engine.kvquant import KV_DTYPES
+
+    hq = max(1, int(model_cfg.n_heads))
+    hkv = max(1, int(model_cfg.n_kv_heads or model_cfg.n_heads))
+    d = int(model_cfg.head_dim)
+    b = batch_bucket(batch)
+    ps = int(page_size)
+    spec = KV_DTYPES[kv_dtype]
+
+    max_pages = -(-seq_len // ps) if seq_len else _SWEEP_SEQ_PAGES
+    max_pages = max(max_pages, max(multipliers))  # a chunk must fit the table
+    num_pages = b * max_pages + 1
+    rng = np.random.default_rng(0)
+    tables = jnp.asarray(
+        1 + np.arange(b * max_pages, dtype=np.int32).reshape(b, max_pages)
+    )
+    # mid-prefill regime: half the context resident, the chunk is the present
+    cursors = jnp.full((b,), (max_pages // 2) * ps, jnp.int32)
+    pool_f32 = jnp.asarray(
+        rng.standard_normal((num_pages, hkv, ps, d)), jnp.float32
+    )
+    timed: list = []
+    for m in multipliers:
+        c = m * ps
+        q = jnp.asarray(rng.standard_normal((b, hq, c, d)), jnp.float32)
+        pres = jnp.asarray(rng.standard_normal((b, hkv, c, d)), jnp.float32)
+        if spec is None:
+            fn = jax.jit(lambda q, kc, vc, kp, vp, t, cu:
+                         ops.paged_prefill_chunk_attention(
+                             q, kc, vc, kp, vp, t, cu))
+            args = (q, pres, pres, pool_f32, pool_f32, tables, cursors)
+        else:
+            enc = spec.encode_pages(pool_f32)
+            fn = jax.jit(lambda q, kc, vc, kq, ks, vq, vs, t, cu:
+                         ops.paged_prefill_chunk_attention_quant(
+                             q, kc, vc, kq, ks, vq, vs, t, cu,
+                             bits=spec.bits))
+            args = (q, pres, pres, enc["q"], enc["scale"], enc["q"],
+                    enc["scale"], tables, cursors)
+        timed.append((c, _time_decode(fn, args) / c))  # seconds per token
+    t_min = min(t for _, t in timed)
+    ties = [c for c, t in timed if t <= _SWEEP_TIE_X * t_min]
+    return 2 * ps if 2 * ps in ties else ties[0]
+
+
 def sweep(
     model_cfg,
     *,
@@ -244,8 +319,13 @@ def sweep(
         None,
     )
     if anchor is not None and best.us_per_step > _SWEEP_DISPLACE_X * anchor.us_per_step:
-        return anchor
-    return best
+        best = anchor
+    # chunk_tokens is its own schedule axis: sweep it from real prefill-chunk
+    # timings AT the winning page size (schema 2), never derived from it
+    return dataclasses.replace(best, chunk_tokens=sweep_chunk_tokens(
+        model_cfg, kv_dtype=kv_dtype, batch=batch, seq_len=seq_len,
+        page_size=best.page_size,
+    ))
 
 
 def resolve(
@@ -274,6 +354,10 @@ def resolve(
     if hit is not None:
         point = TunedPoint(**{**hit, "source": "cached"})
         if page_size and point.page_size != page_size:
+            # projection onto a pinned page size keeps the warm path a pure
+            # file read: the cached chunk width was swept at a DIFFERENT page
+            # size, so fall back to the page-aligned default rather than
+            # re-timing (a fresh key sweeps chunk_tokens for real)
             point = dataclasses.replace(
                 point, page_size=page_size, chunk_tokens=2 * page_size
             )

@@ -255,6 +255,41 @@ def paged_prefill_chunk_attention_quant(
 # ---------------------------------------------------------------------------------
 # on-device token sampling (the serving hot path's logits consumer)
 # ---------------------------------------------------------------------------------
+
+# fold_in domain tags for the speculative verify op: each (slot, position) base
+# key fans out into an acceptance-uniform stream and a resample-Gumbel stream.
+# Disjoint from sample_tokens' key derivation (which never folds a tag), so a
+# speculative engine and a non-speculative one never reuse randomness across
+# semantically different draws. serving/sampling.py documents the contract.
+SPEC_ACCEPT_FOLD = 0x5ACC
+SPEC_RESAMPLE_FOLD = 0x5E5A
+
+
+def _filter_topk_topp(x, temperature, top_k, top_p, *, vocab: int):
+    """Temperature-scale + top-k/top-p filter a batch of masked logit rows.
+
+    x: (N, Vp) f32 with pad columns already -inf; temperature/top_k/top_p: (N,).
+    Returns z (N, Vp): x / max(temperature, eps) with filtered-out entries at
+    -inf — the categorical distribution Gumbel-max sampling draws from. Shared
+    by sample_tokens and verify_draft_tokens so the speculative accept test and
+    ordinary sampling see the SAME filtered distribution (the correctness
+    precondition for unbiased rejection sampling)."""
+    k_eff = jnp.clip(jnp.where(top_k > 0, top_k, vocab), 1, vocab)
+    x_desc = jnp.sort(x, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(x_desc, k_eff[:, None] - 1, axis=1)
+    xf = jnp.where(x >= kth, x, -jnp.inf)
+    # top-p over the temperature-scaled distribution of the survivors
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    z = xf / t
+    p_eff = jnp.where(top_p > 0, top_p, 1.0)[:, None]
+    z_desc = jnp.sort(z, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(z_desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < p_eff  # mass BEFORE the token; top-1 always kept
+    cutoff = jnp.min(jnp.where(keep, z_desc, jnp.inf), axis=-1, keepdims=True)
+    return jnp.where(z >= cutoff, z, -jnp.inf)
+
+
 def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int,
                   mask=None):
     """Batched token selection on device: greedy / temperature / top-k / top-p.
@@ -299,21 +334,7 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int,
     greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)
 
     def _sampled(_):
-        # top-k: threshold at the k-th largest (k = vocab when off)
-        k_eff = jnp.clip(jnp.where(top_k > 0, top_k, vocab), 1, vocab)
-        x_desc = jnp.sort(x, axis=-1)[:, ::-1]
-        kth = jnp.take_along_axis(x_desc, k_eff[:, None] - 1, axis=1)
-        xf = jnp.where(x >= kth, x, -jnp.inf)
-        # top-p over the temperature-scaled distribution of the survivors
-        t = jnp.maximum(temperature, 1e-6)[:, None]
-        z = xf / t
-        p_eff = jnp.where(top_p > 0, top_p, 1.0)[:, None]
-        z_desc = jnp.sort(z, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(z_desc, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        keep = (cum - probs) < p_eff  # mass BEFORE the token; top-1 always kept
-        cutoff = jnp.min(jnp.where(keep, z_desc, jnp.inf), axis=-1, keepdims=True)
-        z = jnp.where(z >= cutoff, z, -jnp.inf)
+        z = _filter_topk_topp(x, temperature, top_k, top_p, vocab=vocab)
         keys = jax.vmap(
             lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
         )(seed, pos)
@@ -324,6 +345,90 @@ def sample_tokens(logits, temperature, top_k, top_p, seed, pos, *, vocab: int,
     return jax.lax.cond(
         jnp.any(temperature > 0), _sampled, lambda _: greedy, operand=None
     )
+
+
+def verify_draft_tokens(logits, draft, temperature, top_k, top_p, seed, pos0,
+                        active, *, vocab: int):
+    """Speculative accept/resample over one verify window's logits.
+
+    logits: (B, C, Vp) the target model's rows for present positions
+    lens..lens+K (C = K+1; row j predicts the token at absolute position
+    pos0[b]+j where pos0 = lens+1); draft: (B, K) proposed tokens (clipped to
+    the vocab here — a garbage proposal can only be rejected, never crash);
+    temperature/top_k/top_p/seed: (B,) per-slot sampling state (the same packed
+    rows sample_tokens consumes); active: (B,) phase bitmap.
+
+    Returns (tokens_out (B, C) int32, committed (B,) int32, chosen_lp (B, C)
+    f32): committed[b] = n_acc+1 tokens of tokens_out[b] are final — n_acc
+    accepted draft tokens followed by one correction (first rejection) or
+    bonus (all accepted) token. chosen_lp is the UNMASKED model log-prob of
+    every tokens_out entry (rows past committed are dead — the caller's lens
+    arithmetic never exposes them). Inactive rows commit 0.
+
+    Greedy rows (temperature == 0): tokens_out = argmax per row and
+    accept_j ⇔ argmax_j == draft_j, which makes the committed stream
+    token-IDENTICAL to a one-token-at-a-time greedy decode — the correctness
+    law CI pins. Sampled rows run textbook rejection sampling against the
+    deterministic draft: accept d_j with prob p_j(d_j) under the SAME
+    filtered/scaled distribution sample_tokens uses (_filter_topk_topp); on
+    the first rejection resample from that distribution with the rejected
+    token masked out (the residual max(0, p - q) for a one-point q), and when
+    every draft survives the bonus row draws unconditionally. Keys derive from
+    fold_in(PRNGKey(seed), pos0+j) + a domain tag (SPEC_ACCEPT_FOLD /
+    SPEC_RESAMPLE_FOLD), so a given (stream, position) always consumes the
+    same randomness — preemption-recompute reproducibility, same law as
+    sample_tokens (though the speculative sampled stream intentionally differs
+    from the non-speculative one: only GREEDY promises cross-path exactness).
+    """
+    b, c, vp = logits.shape
+    k = c - 1
+    col = jnp.arange(vp)[None, None, :]
+    x = jnp.where(col < vocab, logits.astype(jnp.float32), -jnp.inf)
+    greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)  # (B, C)
+    draft = jnp.clip(draft.astype(jnp.int32), 0, vocab - 1)
+    acc_greedy = greedy[:, :k] == draft  # (B, K)
+
+    def _sampled(_):
+        z = _filter_topk_topp(
+            x.reshape(b * c, vp), jnp.repeat(temperature, c),
+            jnp.repeat(top_k, c), jnp.repeat(top_p, c), vocab=vocab,
+        ).reshape(b, c, vp)
+        pos = pos0[:, None] + jnp.arange(c)[None, :]  # (B, C)
+        base = jax.vmap(jax.vmap(
+            lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p),
+            in_axes=(None, 0)), in_axes=(0, 0))(seed, pos)
+        u = jax.vmap(jax.vmap(
+            lambda kk: jax.random.uniform(jax.random.fold_in(kk, SPEC_ACCEPT_FOLD))
+        ))(base)  # (B, C)
+        g = jax.vmap(jax.vmap(
+            lambda kk: jax.random.gumbel(
+                jax.random.fold_in(kk, SPEC_RESAMPLE_FOLD), (vp,))
+        ))(base)  # (B, C, Vp)
+        probs = jax.nn.softmax(z, axis=-1)
+        p_draft = jnp.take_along_axis(probs[:, :k], draft[:, :, None], axis=-1)[..., 0]
+        acc = u[:, :k] < p_draft  # (B, K)
+        # resample with the rejected draft token excluded; the bonus row
+        # (j == K) has no draft and samples from the full distribution
+        rb = jnp.arange(b)[:, None]
+        rj = jnp.arange(k)[None, :]
+        zm = z.at[rb, rj, draft].set(-jnp.inf)
+        resamp = jnp.argmax(zm + g, axis=-1).astype(jnp.int32)  # (B, C)
+        acc_f = jnp.concatenate([acc, jnp.zeros((b, 1), bool)], axis=1)
+        draft_f = jnp.concatenate([draft, jnp.zeros((b, 1), jnp.int32)], axis=1)
+        tok = jnp.where(acc_f, draft_f, resamp)
+        samp = (temperature > 0)
+        return (jnp.where(samp[:, None], tok, greedy),
+                jnp.where(samp[:, None], acc, acc_greedy))
+
+    tokens_out, accept = jax.lax.cond(
+        jnp.any(temperature > 0), _sampled,
+        lambda _: (greedy, acc_greedy), operand=None,
+    )
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+    committed = jnp.where(active > 0, n_acc + 1, 0).astype(jnp.int32)
+    lp = jax.nn.log_softmax(logits[..., :vocab].astype(jnp.float32), axis=-1)
+    chosen_lp = jnp.take_along_axis(lp, tokens_out[..., None], axis=-1)[..., 0]
+    return tokens_out, committed, chosen_lp
 
 
 # ---------------------------------------------------------------------------------

@@ -408,6 +408,88 @@ def self_attention_decode_paged(
     return y, {"k": ck, "v": cv}
 
 
+def self_attention_verify_paged(
+    cfg,
+    p,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    block_tables: jax.Array,
+    context_lens: jax.Array,
+    *,
+    shard: Sharder = NULL_SHARDER,
+    impl: str = "auto",
+    kv_spec=None,
+):
+    """Speculative VERIFY: score C = K+1 tokens per row in ONE chunk-style call.
+
+    x: (B, C, D) embeddings of [current token, draft_1..draft_K];
+    context_lens: (B,) tokens already resident per row. Token j of the present
+    lands at position lens+j through the SAME per-token append law the decode
+    path uses — a static sequential loop, because the quantized scale lifecycle
+    (_quant_append: fresh scale at slot 0, existing scale otherwise) is
+    order-dependent within a page. The present K/V are then gathered BACK from
+    the pool (dequantized under ``kv_spec``, pool dtype otherwise) so each
+    draft row attends exactly the bytes a sequential one-token decode would
+    have read, and a single chunk-attention call with cursors = context_lens
+    scores all C rows against past + causal present. Rejected suffixes need no
+    undo here: positions ≥ the accepted length are dead under the rolled-back
+    ``lens`` and are overwritten by later appends (rollback is lens
+    arithmetic, not page surgery).
+
+    Unlike the prefill chunk path, C is NOT page-aligned and the writes are
+    per-token scatters, not whole-page encodes — drafts start mid-page.
+    Inactive rows (nulled tables/lens) write into the reserved null page.
+    """
+    b, c, d = x.shape
+    ps = cache["k"]["q"].shape[2] if kv_spec is not None else cache["k"].shape[2]
+    q, k, v = _project_qkv(cfg, p, x)  # (B, H, C, Dh)
+    lens = jnp.asarray(context_lens, jnp.int32)
+    pos = lens[:, None] + jnp.arange(c)[None, :]  # (B, C)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    rows = jnp.arange(b)
+    ck, cv = cache["k"], cache["v"]
+    pages, slots = [], []
+    for j in range(c):
+        pj = pos[:, j]
+        page = block_tables[rows, pj // ps]  # (B,)
+        slot = pj % ps
+        pages.append(page)
+        slots.append(slot)
+        if kv_spec is not None:
+            ck = _quant_append(ck, k[:, :, j, :], page, slot, kv_spec)
+            cv = _quant_append(cv, v[:, :, j, :], page, slot, kv_spec)
+        else:
+            ck = ck.at[page, :, slot, :].set(k[:, :, j, :].astype(ck.dtype))
+            cv = cv.at[page, :, slot, :].set(v[:, :, j, :].astype(cv.dtype))
+    # gather the present back from the pool: draft rows must attend the bytes
+    # a sequential decode would read (pool dtype / page-scale dequant), not
+    # the fresh f32 projections — greedy exactness depends on it
+    pg = jnp.stack(pages, axis=1)  # (B, C)
+    sl = jnp.stack(slots, axis=1)
+    if kv_spec is not None:
+        ks = ck["scale"][pg]  # (B, C, Hkv)
+        vs = cv["scale"][pg]
+        k_pres = kv_spec.decode_pages(ck["q"][pg, :, sl, :][:, :, :, None, :], ks)[..., 0, :]
+        v_pres = kv_spec.decode_pages(cv["q"][pg, :, sl, :][:, :, :, None, :], vs)[..., 0, :]
+    else:
+        k_pres = ck[pg, :, sl, :].astype(jnp.float32)  # (B, C, Hkv, Dh)
+        v_pres = cv[pg, :, sl, :].astype(jnp.float32)
+    k_pres = jnp.swapaxes(k_pres, 1, 2)  # (B, Hkv, C, Dh)
+    v_pres = jnp.swapaxes(v_pres, 1, 2)
+    if kv_spec is not None:
+        out = ops.paged_prefill_chunk_attention_quant(
+            q, k_pres, v_pres, ck["q"], ck["scale"], cv["q"], cv["scale"],
+            block_tables, lens, bits=kv_spec.bits, impl=impl,
+        )
+    else:
+        out = ops.paged_prefill_chunk_attention(
+            q, k_pres, v_pres, ck, cv, block_tables, lens, impl=impl
+        )
+    y = _out_proj(p, out, x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
 def _scatter_chunk_pages(cache, kp, vp, dest, kv_spec):
     """Scatter whole chunk pages into the pool. kp/vp: (B, nP, Hkv, ps, Dh) page-
     factored chunk KV; dest: (B, nP) physical destinations (invalid entries

@@ -163,6 +163,18 @@ class DenseBlock:
         x = x + apply_mlp(cfg, p["mlp"], h, shard)
         return x, cache
 
+    def verify_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
+                     impl: str = "auto", kv_spec=None):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_verify_paged(
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
+            impl=impl, kv_spec=kv_spec,
+        )
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_mlp"])
+        x = x + apply_mlp(cfg, p["mlp"], h, shard)
+        return x, cache
+
 
 class MoEBlock(DenseBlock):
     def specs(self, cfg, quant=None):
@@ -214,6 +226,18 @@ class MoEBlock(DenseBlock):
         y, cache = attn.self_attention_prefill_chunk_paged(
             cfg, p["attn"], h, cache, block_tables, write_tables, cursors, n_new,
             shard=shard, impl=impl, kv_spec=kv_spec,
+        )
+        x = x + y
+        h = apply_norm(cfg, x, p["ln_moe"])
+        y, _ = moe_mod.apply_moe_dispatch(cfg, p["moe"], h, shard)
+        return x + y, cache
+
+    def verify_paged(self, cfg, p, x, cache, block_tables, context_lens, shard,
+                     impl: str = "auto", kv_spec=None):
+        h = apply_norm(cfg, x, p["ln_attn"])
+        y, cache = attn.self_attention_verify_paged(
+            cfg, p["attn"], h, cache, block_tables, context_lens, shard=shard,
+            impl=impl, kv_spec=kv_spec,
         )
         x = x + y
         h = apply_norm(cfg, x, p["ln_moe"])
@@ -643,7 +667,8 @@ class Model:
                           block_tables: jax.Array, context_lens: jax.Array, *,
                           shard: Sharder = NULL_SHARDER, attn_impl: str = "auto",
                           kv_spec=None, write_tables=None, n_new=None,
-                          last_index=None, active=None, block_pages=None):
+                          last_index=None, active=None, block_pages=None,
+                          spec_verify: bool = False):
         """The MIXED serving step: decode rows and prefill chunks are the same
         computation at different widths.
 
@@ -672,13 +697,19 @@ class Model:
         their table row and length nulled ON DEVICE, so their lockstep write
         lands in the null page and the host never copies/patches the full
         tables to mask them. The engine's device-resident table/len mirrors
-        stay untouched."""
+        stay untouched.
+
+        ``spec_verify=True`` with tokens (B, C) is the speculative VERIFY step:
+        C = K+1 rows of [current token, draft] appended and scored per block
+        via verify_paged, ``context_lens`` the per-row resident length
+        (NOT page-aligned), ``active`` honored as in decode, and the lm_head
+        applied to ALL C rows — returns logits (B, C, Vp)."""
         cfg = self.cfg
-        chunk = tokens.ndim == 2
+        chunk = tokens.ndim == 2 and not spec_verify
         if active is not None and not chunk:
             block_tables = jnp.where(active[:, None] > 0, block_tables, 0)
             context_lens = jnp.where(active > 0, context_lens, 0)
-        x = apply_embed(params["embed"], tokens if chunk else tokens[:, None])
+        x = apply_embed(params["embed"], tokens if tokens.ndim == 2 else tokens[:, None])
         if cfg.family == "hybrid":
             x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
         new_caches = []
@@ -693,6 +724,13 @@ class Model:
                         context_lens, n_new, shard, impl=attn_impl,
                         kv_spec=kv_spec,
                     )
+            elif spec_verify:
+                def body(xc, pc, _blk=blk):
+                    pl, cl = pc
+                    return _blk.verify_paged(
+                        cfg, pl, xc, cl, block_tables, context_lens, shard,
+                        impl=attn_impl, kv_spec=kv_spec,
+                    )
             else:
                 def body(xc, pc, _blk=blk):
                     pl, cl = pc
@@ -704,6 +742,11 @@ class Model:
             x, cache = stack_scan(body, x, (p, cache))
             new_caches.append(cache)
         x = apply_norm(cfg, x, params["final_norm"])
+        if spec_verify:
+            # every row of the verify window needs its logits: row j decides
+            # the fate of draft token j+1 (and the last row the bonus token)
+            logits = apply_lm_head(cfg, params["embed"], x)
+            return logits, new_caches
         if chunk:
             # read hidden state only at each row's requested position before
             # the lm_head: the chunk's other C-1 rows never pay the vocab matmul

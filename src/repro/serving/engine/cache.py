@@ -173,6 +173,13 @@ class PagedKVCache:
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size)
 
+    def capacity_tokens(self, slot: int) -> int:
+        """Tokens of owned page capacity beyond the slot's current length —
+        how far decode (or a speculative window) can append before the next
+        page-boundary event. The quantity event_free_horizon proves windows
+        against and reserve_decode_tokens raises up front."""
+        return len(self.pages_of[slot]) * self.page_size - int(self.lens[slot])
+
     def _take_free(self) -> int:
         p = self._free.popleft()
         self.ref[p] = 1

@@ -82,6 +82,10 @@ from repro.serving.params import (
     Sequence as SequenceResult,
 )
 from repro.serving.sampling import pack_slot_params, stream_seed
+from repro.serving.speculative import (
+    NGramProposer,
+    make_paged_serve_spec_multistep,
+)
 from repro.serving.step import (
     make_chunked_prefill_step,
     make_paged_serve_multistep,
@@ -124,6 +128,30 @@ class EngineConfig:
     # Scheduler.event_free_horizon), run them as ONE on-device lax.scan loop:
     # append -> attend -> sample -> feed back, amortizing a dispatch and a
     # (K, B) ids fetch over K tokens. 1 = off; token-exact for any K
+    spec_tokens: int = 0  # speculative decoding draft length K (0 = off):
+    # each decode step becomes a WINDOW — an n-gram table over the request's
+    # own context proposes K tokens, ONE chunk-style verify pass scores all of
+    # them against the paged cache, and the longest agreeing prefix (+1
+    # correction/bonus token) commits. Rejection is pure lens arithmetic —
+    # no page frees, no host work (serving/speculative.py). GREEDY requests
+    # are token-exact vs spec_tokens=0 (CI pins it); per-request opt-out via
+    # GenerationParams.speculative=False. Windows fuse multi_step-at-a-time
+    # under the same event-free-horizon contract as plain fused decode,
+    # with tokens_per_step = K+1
+    spec_ngram: int = 2  # n-gram order of the draft lookup key
+    spec_table_size: int = 512  # n-gram hash buckets per slot (power of two)
+    spec_accept_floor: float = 2.0  # adaptive backoff: a verify window costs
+    # ~2x a plain decode step (C=K+1 positions through the chunk kernel plus
+    # window host accounting), so speculation only pays while the mean
+    # accepted-tokens-per-window clears this floor. The engine keeps an EMA of
+    # per-dispatch acceptance; when it dips under the floor the planner runs
+    # plain decode for spec_backoff dispatches, then re-probes — repetitive
+    # streams keep full-window speed, incompressible streams pay only the
+    # occasional probe instead of a per-step verify tax. Consecutive
+    # under-floor probes DOUBLE the wait (capped at 32x spec_backoff; an
+    # above-floor probe resets it), so a stream that stays incompressible
+    # converges to ~zero verify overhead. 0 disables backoff
+    spec_backoff: int = 32  # base plain-dispatch count between re-probes
     chunked_prefill: bool = False  # mixed steps: page-sized prefill chunks
     # interleaved with decode instead of monolithic batch-1 prefills
     chunk_tokens: int = 0  # max tokens per prefill chunk (page multiple; 0 =
@@ -360,6 +388,62 @@ class ServeEngine:
                 ),
                 donate_argnums=step_donate,
             )
+        # speculative decoding (serving/speculative.py): the window step is a
+        # SIBLING of the fused multistep — same donation discipline (pools,
+        # fed-back tokens, lens mirror; tables NOT donated), plus the
+        # proposer's two persistent per-slot device arrays (hist, table)
+        # donated and flowed back exactly like the lens mirror. Host rebuilds
+        # of individual rows happen only on slot-composition events
+        # (_spec_stale), mirroring _sync_slot_state.
+        self._spec_k = int(config.spec_tokens)
+        if self._spec_k:
+            if config.record_logits:
+                raise ValueError(
+                    "spec_tokens does not compose with record_logits: "
+                    "recording needs per-step host logits rows, but the "
+                    "speculative window never materializes them off device"
+                )
+            self._spec_windows = max(1, int(config.multi_step))
+            # hist must cover every legal position plus one full window past
+            # it, so the in-scan history write never clamps for active rows
+            hist_len = (
+                config.max_pages_per_seq * config.page_size
+                + self._spec_k + 2
+            )
+            self._proposer = NGramProposer(
+                spec_tokens=self._spec_k, ngram=config.spec_ngram,
+                table_size=config.spec_table_size, vocab=vocab,
+                hist_len=hist_len,
+            )
+            self._spec_step = jax.jit(
+                make_paged_serve_spec_multistep(
+                    model, self._spec_windows, self._proposer, mesh, rules,
+                    attn_impl=config.attn_impl, kv_spec=self.cache.kv_spec,
+                    vocab=vocab, logprobs_k=self._lp_k,
+                ),
+                donate_argnums=(1, 2, 4, 7, 8),
+            )
+            self._hist_dev = jnp.zeros((config.max_batch, hist_len), jnp.int32)
+            self._table_dev = jnp.zeros(
+                (config.max_batch, config.spec_table_size + 1), jnp.int32
+            )
+            self._spec_stale: set = set()
+            # adaptive backoff state (spec_accept_floor / spec_backoff):
+            # EMA of per-dispatch mean accepted-tokens-per-window, the plain
+            # dispatches left before the next speculative re-probe, and the
+            # current (exponentially grown) backoff length
+            self._spec_accept_ema: float = None
+            self._spec_backoff_left = 0
+            self._spec_backoff_len = int(config.spec_backoff)
+            self._c_spec_windows = self.registry.counter("spec_windows")
+            self._c_spec_backoffs = self.registry.counter("spec_backoffs")
+            self._c_spec_accepted = self.registry.counter(
+                "spec_accepted_tokens"
+            )
+            self._c_spec_hits = self.registry.counter("spec_draft_hits")
+            self._c_spec_rollback = self.registry.counter(
+                "spec_rollback_tokens"
+            )
         if self._lp_k:
             # prefill first tokens sample from a single (Vp,) logits row; the
             # same row yields its top-k logprobs on device, fetched with the
@@ -511,6 +595,12 @@ class ServeEngine:
                 f"request {request.rid} asks for record_logits but the engine "
                 f"was built with record_logits=False"
             )
+        if p.speculative and not self.config.spec_tokens:
+            raise ValueError(
+                f"request {request.rid} asks for speculative decoding but the "
+                f"engine was built with spec_tokens=0 — set "
+                f"EngineConfig.spec_tokens"
+            )
         if p.n_branches > 1 and self.config.record_logits:
             raise ValueError(
                 "record_logits keys rows by rid — unsupported for parallel "
@@ -656,6 +746,10 @@ class ServeEngine:
         if state.grammar_state is not None:
             state.grammar_state = int(self._gtrans_host[state.grammar_state, tok])
         self._slots_stale = True  # the slot's next decode input is host-known
+        if self._spec_k:
+            # the proposer's hist/table rows for this slot must be rebuilt
+            # from the (new) context before the next speculative window
+            self._spec_stale.add(state.slot)
         if state.request.logprobs:
             vals, ids = self._row_logprobs(logits_row)
             vals, ids = np.asarray(vals[0]), np.asarray(ids[0])
@@ -953,16 +1047,202 @@ class ServeEngine:
     def _fused_k(self, now: float) -> int:
         """How many decode steps to run in one device dispatch: K when the
         scheduler proves the horizon event-free AND no pending arrival lands
-        inside it (estimated from the last measured step), else 1."""
+        inside it (estimated from the last measured step), else 1. Page
+        capacity is the one horizon limit the host can raise for free, so a
+        short horizon first pre-appends decode pages up to the window
+        (Scheduler.reserve_decode_tokens) and re-proves."""
         if self._k <= 1:
             return 1
         if self.scheduler.event_free_horizon(self.queue) < self._k:
-            return 1
+            if self.queue:
+                return 1
+            for slot, st in self.scheduler.running.items():
+                if st.phase == DECODING:
+                    self.scheduler.reserve_decode_tokens(slot, self._k)
+            if self.scheduler.event_free_horizon(self.queue) < self._k:
+                return 1
         if self._pending:
             est = self._last_step_time if self._last_step_time else 2e-3
             if self._pending[0].request.arrival_time <= now + self._k * est:
                 return 1
         return self._k
+
+    # -- speculative path (serving/speculative.py) --------------------------------
+    def _spec_plan(self, now: float, decoding) -> int:
+        """Windows to run speculatively in THIS dispatch (0 = plain decode).
+        Speculation is a batch-wide window: every decoding slot must be
+        eligible (no per-request opt-out, no grammar, no branch group), the
+        whole window's page budget must pre-reserve
+        (Scheduler.reserve_decode_tokens — at most S*(K+1) tokens per slot),
+        the horizon must prove S windows event-free at tokens_per_step = K+1,
+        and no pending arrival may land inside the window. Any failure
+        degrades to the plain path for this dispatch — never an error.
+
+        Adaptive backoff: while the acceptance EMA sits under
+        spec_accept_floor (speculation not paying for its ~2x-a-step verify
+        cost on this stream), the planner answers 0 for spec_backoff
+        dispatches before probing another window — an incompressible stream
+        pays an occasional probe, not a per-step verify tax."""
+        if not decoding or self.queue:
+            return 0
+        if self._spec_backoff_left:
+            self._spec_backoff_left -= 1
+            return 0
+        for state in decoding.values():
+            p = state.request.params
+            if (p.speculative is False or p.grammar is not None
+                    or state.group is not None):
+                return 0
+        c = self._spec_k + 1
+        s = self._spec_windows
+        for slot in decoding:
+            if not self.scheduler.reserve_decode_tokens(slot, s * c):
+                return 0
+        if self.scheduler.event_free_horizon(
+                self.queue, tokens_per_step=c) < s:
+            return 0
+        if self._pending:
+            est = self._last_step_time if self._last_step_time else 2e-3
+            if self._pending[0].request.arrival_time <= now + s * est:
+                return 0
+        return s
+
+    def _sync_spec_state(self, decoding) -> None:
+        """Rebuild the proposer's hist/table rows for slots whose context
+        changed outside a speculative window (admission, plain-decode steps,
+        preemption-recompute) — the spec twin of _sync_slot_state. Rebuilt
+        rows are bit-identical to what in-window device updates would have
+        produced (NGramProposer's shifted-insertion law; tests pin it), so
+        mixing plain and speculative dispatches never drifts the table."""
+        stale = sorted(s for s in self._spec_stale if s in decoding)
+        if stale:
+            hists, tables = [], []
+            for slot in stale:
+                h, t = self._proposer.rebuild_row(decoding[slot].context)
+                hists.append(h)
+                tables.append(t)
+            idx = jnp.asarray(stale, jnp.int32)
+            self._hist_dev = self._hist_dev.at[idx].set(
+                jnp.asarray(np.stack(hists))
+            )
+            self._table_dev = self._table_dev.at[idx].set(
+                jnp.asarray(np.stack(tables))
+            )
+        self._spec_stale.difference_update(stale)
+
+    def _decode_spec_once(self, now: float, decoding, s: int) -> None:
+        """One speculative dispatch: S windows of propose -> verify -> accept
+        inside one on-device lax.scan. Each window commits 1..K+1 tokens per
+        slot; the rejected suffix is never covered by the advanced lens
+        (rollback = layout arithmetic — its KV bytes sit in pre-reserved
+        owned pages and later appends overwrite them). The only bulk D2H is
+        the (S, B, K+1) ids + committed-counts fetch."""
+        wall0 = time.perf_counter()
+        self._sync_slot_state()
+        self._sync_spec_state(decoding)
+        tables, lens = self.cache.device_state()
+        kd = self._spec_k
+        c = kd + 1
+        tr = self.trace
+        if tr is not None:
+            tr.begin("spec_window", -1, windows=s, k=kd, batch=len(decoding))
+        want_lp = self._lp_k and any(
+            st.request.logprobs for st in decoding.values()
+        )
+        t0 = time.perf_counter()
+        out = self._spec_step(
+            self.params, self.cache.pools, self._tokens_dev, tables, lens,
+            self._slot_f32, self._slot_i32, self._hist_dev, self._table_dev,
+        )
+        toks, committed, last, new_lens, pools, lps = out[:6]
+        ids = np.asarray(toks)  # (S, B, C)
+        acc = np.asarray(committed)  # (S, B) tokens committed per window
+        lp_arr = np.asarray(lps)  # (S, B, C)
+        lp_vals = lp_ids = None
+        if want_lp:
+            lp_vals = np.asarray(out[8][0])  # (S, B, C, k)
+            lp_ids = np.asarray(out[8][1])
+        t_dev = time.perf_counter() - t0
+        self.cache.pools = pools
+        self.cache.adopt_lens_device(new_lens)
+        self._tokens_dev = last
+        self._hist_dev, self._table_dev = out[6], out[7]
+        per_win = t_dev / s  # one window = one model dispatch, like one step
+        for _ in range(s):
+            self._h_step.observe(per_win)
+        self._last_step_time = per_win
+        self._c_decode.inc(s)
+        self._c_fused.inc(s)
+        verdict = self._straggler.observe(per_win)
+        if verdict != "ok":
+            self._c_slow.inc()
+            if tr is not None:
+                tr.instant(
+                    "slow_step", -1, verdict=verdict,
+                    step_ms=per_win * 1e3,
+                    ema_ms=(self._straggler.ema or 0.0) * 1e3,
+                )
+        win_acc = 0
+        win_n = 0
+        for i in range(s):
+            for slot, state in decoding.items():
+                if state.done:
+                    continue  # finished mid-window: overrun windows discarded
+                a = int(acc[i, slot])
+                take = 0
+                for j in range(a):
+                    tok = int(ids[i, slot, j])
+                    state.generated.append(tok)
+                    state.cum_logprob += float(lp_arr[i, slot, j])
+                    take += 1
+                    n_lp = state.request.logprobs
+                    if n_lp and lp_vals is not None:
+                        state.logprobs[len(state.generated) - 1] = [
+                            (int(t), float(v))
+                            for t, v in zip(lp_ids[i, slot, j, :n_lp],
+                                            lp_vals[i, slot, j, :n_lp])
+                        ]
+                    if state.done:
+                        break  # EOS inside the window truncates the commit
+                # host mirror follows the HONEST count; an EOS-truncated slot
+                # (take < a) is done and sweeps out — free_slot dirty-marks
+                # its row, repairing the device lens the window over-advanced
+                self.cache.bump_len(slot, take)
+                win_n += 1
+                win_acc += take
+                self._c_spec_windows.inc()
+                self._c_spec_accepted.inc(take)
+                # draft hits: committed tokens that CAME from the draft (the
+                # last committed token is the target's correction/bonus)
+                self._c_spec_hits.inc(min(take, max(a - 1, 0)))
+                self._c_spec_rollback.inc(c - a)
+        mean = (win_acc / win_n) if win_n else 0.0
+        ema = self._spec_accept_ema
+        self._spec_accept_ema = mean if ema is None else 0.6 * ema + 0.4 * mean
+        if self.config.spec_backoff:
+            if self._spec_accept_ema < self.config.spec_accept_floor:
+                self._spec_backoff_left = self._spec_backoff_len
+                self._spec_backoff_len = min(
+                    self._spec_backoff_len * 2, 32 * self.config.spec_backoff
+                )
+                self._c_spec_backoffs.inc()
+                if tr is not None:
+                    tr.instant(
+                        "spec_backoff", -1, ema=self._spec_accept_ema,
+                        floor=self.config.spec_accept_floor,
+                        dispatches=self._spec_backoff_left,
+                    )
+            else:
+                # the stream pays again: next backoff starts from the base
+                self._spec_backoff_len = int(self.config.spec_backoff)
+        if tr is not None:
+            tr.instant(
+                "spec_accept", -1, windows=win_n, accepted=win_acc,
+                mean=mean,
+            )
+            tr.end("spec_window", -1)
+        wall = time.perf_counter() - wall0
+        self._h_host.observe((wall - t_dev) / s)
 
     def _decode_once(self, now: float) -> None:
         """One device dispatch of the decode hot path: a single fused step, or
@@ -974,6 +1254,14 @@ class ServeEngine:
         sampled ids ((B,) per step, (K, B) per fused window)."""
         running = self.scheduler.running
         decoding = {s: st for s, st in running.items() if st.phase == DECODING}
+        if self._spec_k:
+            n_win = self._spec_plan(now, decoding)
+            if n_win:
+                self._decode_spec_once(now, decoding, n_win)
+                return
+            # plain decode generates tokens the proposer's device arrays
+            # never saw — every decoding row is stale for the next window
+            self._spec_stale.update(decoding)
         wall0 = time.perf_counter()
         k = self._fused_k(now)
         self._sync_slot_state()
@@ -1235,6 +1523,28 @@ class ServeEngine:
             if s.group is not None else len(s.generated)
             for s in states
         )
+        # speculative acceptance telemetry (absent when spec_tokens=0, so the
+        # non-speculative snapshot keeps its exact pre-feature shape):
+        # accepted_tokens_per_step is the headline — mean tokens committed per
+        # slot-window (>= 1 by construction: the correction token always
+        # commits); draft_hit_rate is the fraction of PROPOSED draft tokens
+        # that committed; spec_rollback_tokens counts positions whose KV was
+        # written then abandoned to the lens rollback
+        spec: Dict[str, float] = {}
+        if self._spec_k:
+            w = self._c_spec_windows.value
+            spec = {
+                "spec_windows": w,
+                "spec_accepted_tokens": self._c_spec_accepted.value,
+                "accepted_tokens_per_step": (
+                    self._c_spec_accepted.value / w if w else 0.0
+                ),
+                "draft_hit_rate": (
+                    self._c_spec_hits.value / (w * self._spec_k) if w else 0.0
+                ),
+                "spec_rollback_tokens": self._c_spec_rollback.value,
+                "spec_backoffs": self._c_spec_backoffs.value,
+            }
         return {
             "requests": len(states),
             "failed": len(failed),
@@ -1250,6 +1560,11 @@ class ServeEngine:
             # refactor squeezed out, and what the bench's breakdown proves
             "step_ms_p50": self._h_step.percentile(50) * 1e3,
             "step_ms_p95": self._h_step.percentile(95) * 1e3,
+            # summed device step time (dispatch + execute + ids fetch) over
+            # every decode step/window: generated-minus-first tokens divided
+            # by this is DECODE throughput, the hot-path quantity the
+            # speculative bench gates on without prefill/scheduler noise
+            "decode_ms_total": self._h_step.total * 1e3,
             "host_overhead_ms_p50": self._h_host.percentile(50) * 1e3,
             "chunk_ms_p50": self._h_chunk.percentile(50) * 1e3,
             "latency_s_p50": float(np.percentile(e2e, 50)),
@@ -1261,6 +1576,7 @@ class ServeEngine:
             "slow_steps": self._c_slow.value,
             "prefill_tokens_computed": self._c_pf_computed.value,
             "prefill_tokens_skipped": self._c_pf_skipped.value,
+            **spec,
             **self.cache.stats(),
             **tuning,
         }

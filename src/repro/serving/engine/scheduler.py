@@ -247,18 +247,44 @@ class Scheduler:
                 )
 
     # -- fused-decode horizon --------------------------------------------------------
-    def event_free_horizon(self, queue: RequestQueue) -> int:
+    def reserve_decode_tokens(self, slot: int, n_tokens: int) -> bool:
+        """Best-effort page pre-append: grow ``slot``'s owned pages until it
+        can take ``n_tokens`` MORE tokens beyond lens[slot] with no further
+        host intervention — the horizon-aware pre-append that lets a fused (or
+        speculative) window prove its whole page budget UP FRONT instead of
+        shrinking to whatever the current page has left. Never preempts: a dry
+        pool or the per-seq page cap returns False and the caller degrades
+        (smaller window / non-speculative path). Appended pages are ordinary
+        owned pages — freed with the slot, filled by later decode either way,
+        so a failed window wastes nothing."""
+        cache = self.cache
+        while cache.capacity_tokens(slot) < n_tokens:
+            if len(cache.pages_of[slot]) >= cache.max_pages_per_seq:
+                return False
+            if not cache.append_page(slot):
+                return False
+        return True
+
+    def event_free_horizon(self, queue: RequestQueue,
+                           tokens_per_step: int = 1) -> int:
         """Largest K such that the next K decode steps provably need NO
         scheduler intervention — the precondition for running them as one
         on-device fused loop (make_paged_serve_multistep). A pure function of
         host-mirrored state: no admission (queue must be empty — free pages
         only shrink during decode, so nothing unadmittable becomes admittable
         mid-horizon), every slot DECODING, no CoW pending, and per slot at
-        least K tokens of both owned page capacity (no page-boundary append)
-        and max_new_tokens budget (no max-token finish). EOS finishes are NOT
+        least K steps' worth of both owned page capacity (no page-boundary
+        append; reserve_decode_tokens can raise capacity first) and
+        max_new_tokens budget (no max-token finish). EOS finishes are NOT
         predictable; a fused window may overrun an EOS by up to K-1 tokens —
         the driver discards them, and the overrun writes stay inside the
-        slot's owned pages because K never exceeds its remaining capacity."""
+        slot's owned pages because K never exceeds its remaining capacity.
+
+        ``tokens_per_step`` is the per-step token footprint: 1 for plain
+        decode, K_draft+1 for a speculative window (every window may append
+        up to the full present, and the max-new budget must cover a fully
+        accepted window — the speculative driver commits at most
+        ``remaining`` tokens by the same overrun-discard rule)."""
         if queue or not self.running:
             return 0
         k = 1 << 30
@@ -269,12 +295,10 @@ class Scheduler:
                 # beam steps interleave host-side candidate selection and
                 # block-table reorders between decodes — never fusable
                 return 0
-            capacity = (
-                len(self.cache.pages_of[slot]) * self.cache.page_size
-                - int(self.cache.lens[slot])
-            )
+            capacity = self.cache.capacity_tokens(slot)
             remaining = state.request.max_new_tokens - len(state.generated)
-            k = min(k, capacity, remaining)
+            k = min(k, capacity // tokens_per_step,
+                    max(remaining, 0) // tokens_per_step)
         return max(k, 0)
 
     def finish(self, slot: int) -> RequestState:

@@ -58,6 +58,11 @@ class GenerationParams:
     # per-request logits recording: None follows EngineConfig.record_logits,
     # True requires it, False opts this request out of an enabled engine
     record_logits: Optional[bool] = None
+    # speculative decoding: None follows EngineConfig.spec_tokens, True
+    # requires a speculation-enabled engine (submit() checks), False opts this
+    # request out — any non-eligible slot in the batch makes the whole step
+    # fall back to plain decode (speculation is a batch-wide window)
+    speculative: Optional[bool] = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
@@ -101,6 +106,21 @@ class GenerationParams:
                 "n>1 with temperature=0 would generate n identical greedy "
                 "branches — set temperature > 0 or use beam_width"
             )
+        if self.speculative:
+            if self.beam_width:
+                raise ValueError(
+                    "speculative decoding does not compose with beam search "
+                    "(survivor reorders break the event-free window); "
+                    "speculative=True cannot force it — beam requests opt "
+                    "out automatically under speculative=None"
+                )
+            if self.grammar is not None:
+                raise ValueError(
+                    "speculative decoding does not compose with "
+                    "grammar-constrained decoding (draft tokens would need "
+                    "the automaton advanced per candidate); grammar requests "
+                    "opt out automatically under speculative=None"
+                )
 
     @property
     def sampling(self) -> SamplingParams:

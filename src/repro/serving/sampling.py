@@ -16,6 +16,21 @@ Reproducibility contract (what the tests pin down):
     PRNG key folds the absolute position, never the step count or slot id;
   - multi-step fused decode (EngineConfig.multi_step) samples inside the
     on-device loop with the same fold, so K>1 is token-exact vs K=1.
+
+Speculative decoding stream contract (serving/speculative.py,
+ops.verify_draft_tokens): GREEDY requests are token-exact between the
+speculative and non-speculative paths — argmax has no randomness, so
+accepting argmax-agreeing draft prefixes reproduces the serial stream
+bit-for-bit (CI pins this). SAMPLED requests stay a pure function of
+(seed, rid, position) — the verify op derives per-position keys with the
+same fold_in(PRNGKey(stream), position) base as sample_tokens, then fans
+out into an acceptance-uniform and a resample-Gumbel stream via the
+ops.SPEC_ACCEPT_FOLD / ops.SPEC_RESAMPLE_FOLD domain tags — but the
+speculative sampled stream deliberately differs from the non-speculative
+one: rejection sampling consumes different randomness than Gumbel-max, so
+only reproducibility (same engine config -> same tokens, preemption-
+recompute invariant), not cross-path equality, is promised above
+temperature 0. Per-request opt-out: GenerationParams.speculative=False.
 """
 from __future__ import annotations
 

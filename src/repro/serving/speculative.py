@@ -1,0 +1,301 @@
+"""Speculative decoding inside the fused window — drafts, one-call verify,
+lens-rollback accept.
+
+PRs 1–8 established that a layout (LayoutPaged) and accessor (PagedQuantSpec,
+CountingAccessor) are customization points you EXTEND rather than special-case.
+Speculation is the next extension, and it needs no new memory format at all —
+only a new iteration scheme over the existing paged view:
+
+  * **propose** — a device-resident n-gram hash table over each request's
+    prompt+generated tokens proposes a K-token continuation (prompt-lookup
+    decoding: repetitive and agentic workloads quote their own context
+    constantly, so the cheapest possible draft model is the context itself).
+    No second model, no extra forward pass — two gathers and a hash.
+  * **verify** — ONE chunk-style attention call scores all K draft positions
+    against the paged past: the verify pass is literally a prefill chunk whose
+    "present" is [current token, draft] (core/submdspan.py §verification is a
+    chunk). The target model runs once per window regardless of K.
+  * **accept** — keep the longest draft prefix the target agrees with
+    (argmax agreement when greedy — token-exact vs non-speculative decode by
+    construction — or rejection sampling at temperature > 0), plus one
+    correction/bonus token the target supplies for free.
+  * **rollback** — the rejected suffix is pure layout arithmetic: positions
+    >= the accepted length are simply not covered by the advanced ``lens``,
+    and later appends overwrite them. No page frees, no copies — the
+    scheduler pre-reserved the window's page budget
+    (Scheduler.reserve_decode_tokens), so mid-window appends never touch the
+    host either.
+
+The whole propose->verify->accept loop runs inside the fused ``lax.scan``
+(make_paged_serve_spec_multistep, the speculative sibling of
+step.make_paged_serve_multistep): S windows per dispatch, hist/table riding
+the carry next to the lens mirror, one (S, B, C) ids fetch per S windows —
+the zero-D2H steady state of PR 5 is preserved while each target-model step
+now commits up to K+1 tokens.
+
+Draft-source abstraction: ``NGramProposer`` implements the ``DraftProposer``
+protocol; ``ModelDraftProposer`` stubs the registry-draft-model variant behind
+the same protocol for a later PR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.layers import Sharder
+
+from .step import top_logprobs
+
+# FNV-1a over int32 token ids, in uint32 arithmetic — chosen because the exact
+# same five lines express it in NumPy (host rebuild) and jnp (device insert),
+# and device/host agreement is load-bearing: the table must be a pure function
+# of the token context (preemption-recompute invariance).
+_FNV_INIT = 2166136261
+_FNV_MULT = 16777619
+
+
+def ngram_keys_jnp(grams: jax.Array, table_size: int) -> jax.Array:
+    """grams (..., g) int32 -> (...,) int32 bucket in [0, table_size)."""
+    h = jnp.full(grams.shape[:-1], _FNV_INIT, jnp.uint32)
+    for i in range(grams.shape[-1]):
+        h = (h ^ grams[..., i].astype(jnp.uint32)) * jnp.uint32(_FNV_MULT)
+    return (h & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def ngram_keys_np(grams: np.ndarray, table_size: int) -> np.ndarray:
+    """NumPy twin of ngram_keys_jnp — bit-identical buckets (tests pin it)."""
+    grams = np.asarray(grams, np.int32)
+    h = np.full(grams.shape[:-1], _FNV_INIT, np.uint32)
+    with np.errstate(over="ignore"):
+        for i in range(grams.shape[-1]):
+            h = (h ^ grams[..., i].astype(np.uint32)) * np.uint32(_FNV_MULT)
+    return (h & np.uint32(table_size - 1)).astype(np.int32)
+
+
+class DraftProposer:
+    """Protocol for speculative draft sources.
+
+    A proposer owns two persistent per-slot device arrays — ``hist`` (the
+    token history, hist[b, i] = sequence token at position i) and ``table``
+    (whatever index the proposer maintains over it) — that ride the fused
+    scan's carry exactly like the lens mirror does. Methods:
+
+      rebuild_row(context)         host: (hist_row, table_row) from a token
+                                   list — the recompute path (admission,
+                                   preemption, any host-side divergence)
+      propose(hist, table, lens, active)          traced: -> draft (B, K)
+      update(hist, table, lens, tokens_out,
+             committed, active)                   traced: fold one verified
+                                                  window back in
+    """
+
+    spec_tokens: int
+
+    def rebuild_row(self, context) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def propose(self, hist, table, lens, active):
+        raise NotImplementedError
+
+    def update(self, hist, table, lens, tokens_out, committed, active):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class NGramProposer(DraftProposer):
+    """Prompt-lookup drafting: propose the K tokens that followed the most
+    recent earlier occurrence of the current ``ngram``-gram.
+
+    ``table[b, key]`` holds the END position q of the latest n-gram hashing to
+    ``key`` (0 = empty — position 0 can never legally end a gram since
+    ngram >= 2; column ``table_size`` is a dump slot for masked writes, so
+    inactive rows and rejected positions update THROUGH the same scatter with
+    no branching). Insertion follows the SHIFTED rule: the gram ending at q is
+    inserted only once token q+1 is known — a lookup therefore always finds a
+    strictly EARLIER occurrence with a known continuation, never the suffix
+    currently being extended (the self-match that would kill drafting on
+    exactly the repetitive text speculation targets).
+
+    Hash collisions and recycled buckets only ever produce a WRONG draft,
+    never a wrong result — verify rejects it (the stored gram is re-checked
+    against the key gram anyway, so collisions mostly cost nothing). Both
+    hist and table are pure functions of the token context, so
+    preemption-recompute rebuilds them exactly (rebuild_row == the device
+    insertion history; tests pin this).
+    """
+
+    spec_tokens: int
+    ngram: int = 2
+    table_size: int = 512
+    vocab: int = 32000
+    hist_len: int = 0
+
+    def __post_init__(self):
+        if self.ngram < 2:
+            raise ValueError("spec_ngram must be >= 2 (a 1-gram lookup would "
+                             "match its own last token)")
+        if self.table_size & (self.table_size - 1):
+            raise ValueError("spec_table_size must be a power of two")
+        if self.hist_len <= 0:
+            raise ValueError("hist_len must cover max context + window")
+
+    # ---- host (recompute path) --------------------------------------------
+    def rebuild_row(self, context) -> Tuple[np.ndarray, np.ndarray]:
+        """context: the request's prompt+generated tokens (the current token
+        last). Replays the device insertion order: gram ending at q inserted
+        for q = ngram-1 .. n-2 ascending (last write wins per bucket)."""
+        toks = np.asarray(list(context), np.int32)
+        n = len(toks)
+        hist = np.zeros(self.hist_len, np.int32)
+        hist[:n] = toks[:self.hist_len]
+        table = np.zeros(self.table_size + 1, np.int32)
+        g = self.ngram
+        if n >= g + 1:
+            ends = np.arange(g - 1, n - 1)
+            grams = np.stack([toks[ends - (g - 1) + i] for i in range(g)], axis=-1)
+            keys = ngram_keys_np(grams, self.table_size)
+            for q, key in zip(ends, keys):
+                table[int(key)] = int(q)
+        return hist, table
+
+    # ---- device (in-scan path) --------------------------------------------
+    def propose(self, hist, table, lens, active):
+        """-> draft (B, K) int32. lens[b] = current token's position (the last
+        KNOWN index of hist); the key is the g-gram ending there."""
+        b, hl = hist.shape
+        g = self.ngram
+        idx = lens[:, None] + jnp.arange(-g + 1, 1)[None, :]  # (B, g)
+        grams = jnp.take_along_axis(hist, jnp.clip(idx, 0, hl - 1), axis=1)
+        key = ngram_keys_jnp(grams, self.table_size)  # (B,)
+        cand = table[jnp.arange(b), key]  # (B,) end position of the match
+        cidx = cand[:, None] + jnp.arange(-g + 1, 1)[None, :]
+        cgrams = jnp.take_along_axis(hist, jnp.clip(cidx, 0, hl - 1), axis=1)
+        ok = (cand > 0) & (cand < lens) & (cand >= g - 1)
+        ok = ok & jnp.all(cgrams == grams, axis=1) & (active > 0)
+        didx = cand[:, None] + jnp.arange(1, self.spec_tokens + 1)[None, :]
+        draft = jnp.take_along_axis(hist, jnp.clip(didx, 0, hl - 1), axis=1)
+        draft = jnp.clip(draft, 0, self.vocab - 1)
+        return jnp.where(ok[:, None], draft, 0)
+
+    def update(self, hist, table, lens, tokens_out, committed, active):
+        """Fold a verified window in: write the window's tokens at positions
+        lens+1.. (rows past ``committed`` are garbage the NEXT window's write
+        overwrites — it starts at the new lens+1), then insert the grams whose
+        continuation just became known (ends q = lens+j, j < committed)."""
+        b, hl = hist.shape
+        c = tokens_out.shape[1]
+        g = self.ngram
+        start = jnp.where(active > 0, lens + 1, hl)  # inactive -> clamped tail
+        hist = jax.vmap(
+            lambda row, toks, s: jax.lax.dynamic_update_slice(row, toks, (s,))
+        )(hist, tokens_out.astype(hist.dtype), start)
+        rows = jnp.arange(b)
+        for j in range(c):
+            q = lens + j
+            gidx = q[:, None] + jnp.arange(-g + 1, 1)[None, :]
+            grams = jnp.take_along_axis(hist, jnp.clip(gidx, 0, hl - 1), axis=1)
+            key = ngram_keys_jnp(grams, self.table_size)
+            valid = (j < committed) & (active > 0) & (q >= g - 1)
+            col = jnp.where(valid, key, self.table_size)  # masked -> dump col
+            table = table.at[rows, col].set(q.astype(table.dtype))
+        return hist, table
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDraftProposer(DraftProposer):
+    """Registry-model drafting behind the same protocol — a LATER PR: a small
+    draft model from the model registry runs its own fused decode for K cheap
+    tokens, and verify/accept/rollback are unchanged (the protocol is the
+    point: the engine never learns where drafts come from). Construction is
+    allowed so configs can name it; use raises."""
+
+    spec_tokens: int
+    draft_model: str = ""
+
+    def _todo(self):
+        raise NotImplementedError(
+            "registry-draft-model speculation is stubbed behind DraftProposer; "
+            "use NGramProposer (EngineConfig.spec_tokens) for now"
+        )
+
+    def rebuild_row(self, context):
+        self._todo()
+
+    def propose(self, hist, table, lens, active):
+        self._todo()
+
+    def update(self, hist, table, lens, tokens_out, committed, active):
+        self._todo()
+
+
+def make_paged_serve_spec_multistep(model, windows: int, proposer, mesh=None,
+                                    rules=None, attn_impl="auto", kv_spec=None,
+                                    vocab=None, logprobs_k=0):
+    """S speculative windows in one on-device ``lax.scan`` — the speculative
+    sibling of step.make_paged_serve_multistep.
+
+    Each window: propose K draft tokens from the n-gram table, run ONE verify
+    pass (decode_step_paged(spec_verify=True) — a chunk whose present is
+    [current, draft]), accept/resample via ops.verify_draft_tokens, advance
+    ``lens`` by the committed count (rollback = the rejected suffix simply not
+    being covered), and fold the committed tokens back into hist/table for the
+    NEXT window's proposal. Legal only under the same event-free-horizon
+    contract as the plain multistep, with tokens_per_step = K+1
+    (Scheduler.event_free_horizon) and the page budget pre-reserved
+    (Scheduler.reserve_decode_tokens) so no append ever crosses into
+    unowned pages.
+
+    Signature: (params, caches, tokens (B,), block_tables, context_lens,
+    slot_f32 (2, B), slot_i32 (3, B), hist (B, L), table (B, H+1)).
+    Returns (tokens (S, B, C) i32, committed (S, B) i32, last (B,) i32,
+    new_lens (B,) i32, caches, chosen_lps (S, B, C) f32, hist, table
+    [, (vals, ids) (S, B, C, k) when logprobs_k]): one dispatch and one
+    (S, B, C) fetch per up-to-S*(K+1) generated tokens.
+    """
+    shard = Sharder(mesh, rules)
+    c = proposer.spec_tokens + 1
+
+    def spec_multistep(params, caches, tokens, block_tables, context_lens,
+                       slot_f32, slot_i32, hist, table):
+        active = slot_i32[0]
+
+        def body(carry, _):
+            toks, lens, hs, tb, cs = carry
+            draft = proposer.propose(hs, tb, lens, active)  # (B, K)
+            present = jnp.concatenate([toks[:, None], draft], axis=1)  # (B, C)
+            logits, cs = model.decode_step_paged(
+                params, cs, present, block_tables, lens, shard=shard,
+                attn_impl=attn_impl, kv_spec=kv_spec, active=active,
+                spec_verify=True,
+            )  # (B, C, Vp)
+            tok_out, committed, lp = ops.verify_draft_tokens(
+                logits, draft, slot_f32[0], slot_i32[1], slot_f32[1],
+                slot_i32[2].astype(jnp.uint32), lens + 1, active, vocab=vocab,
+            )
+            new_lens = lens + committed.astype(lens.dtype)
+            b = tok_out.shape[0]
+            last = tok_out[jnp.arange(b), jnp.maximum(committed - 1, 0)]
+            nxt = jnp.where(active > 0, last, toks)
+            hs, tb = proposer.update(hs, tb, lens, tok_out, committed, active)
+            y = (tok_out, committed, lp)
+            if logprobs_k:
+                vals, ids = top_logprobs(logits.reshape(b * c, -1), vocab,
+                                         logprobs_k)
+                y = y + ((vals.reshape(b, c, -1), ids.reshape(b, c, -1)),)
+            return (nxt, new_lens, hs, tb, cs), y
+
+        (last, new_lens, hist, table, caches), ys = jax.lax.scan(
+            body, (tokens, context_lens, hist, table, caches), None,
+            length=windows,
+        )
+        out = (ys[0], ys[1], last, new_lens, caches, ys[2], hist, table)
+        if logprobs_k:
+            out = out + (ys[3],)
+        return out
+
+    return spec_multistep

@@ -8,6 +8,14 @@ its persistent mirror), and ``make_paged_serve_multistep`` runs K such
 iterations in one on-device ``lax.scan`` — the sampled token feeds straight
 back into the next embedding lookup, amortizing one dispatch and one (K, B)
 ids transfer over K generated tokens.
+
+The speculative sibling lives in serving/speculative.py:
+``make_paged_serve_spec_multistep`` scans S draft->verify->accept WINDOWS
+instead of S single-token steps, committing 1..K+1 tokens per window through
+the same fused sampling and lens plumbing — an engine with ``spec_tokens>0``
+swaps that factory in where this module's multistep would go, and everything
+else here (prefill buckets, chunked prefill, the plain step it falls back to
+under backoff) is shared between the two regimes.
 """
 from __future__ import annotations
 

@@ -136,10 +136,33 @@ def _sweep_with(monkeypatch, times_us, **kw):
     monkeypatch.setattr(
         autotune, "_time_decode", lambda fn, args, reps=1: next(it)[1] * 1e-6
     )
+    # the decode-grid laws under test are independent of the chunk sweep
+    # (schema 2 times it separately); pin it to the page-derived default
+    monkeypatch.setattr(
+        autotune, "sweep_chunk_tokens",
+        lambda cfg, *, page_size, **k: 2 * page_size,
+    )
     cfg = get_config("qwen2-0.5b", smoke=True)
     return autotune.sweep(
         cfg, page_sizes=page_sizes, block_pages=block_pages, **kw
     )
+
+
+def test_chunk_tokens_swept_per_token(monkeypatch):
+    """schema 2: chunk_tokens comes from real chunk timings compared PER
+    TOKEN, with the tie band breaking to the historical 2*page_size."""
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    # dispatch-bound host: every width costs the same wall per CALL, so
+    # per-token cost decisively favors the widest chunk
+    monkeypatch.setattr(autotune, "_time_decode", lambda fn, args, reps=1: 1e-4)
+    assert autotune.sweep_chunk_tokens(cfg, page_size=16, batch=2) == 64
+    # compute-bound host: wall scales linearly with width, so every
+    # candidate ties per-token and the default 2*page_size keeps its seat
+    widths = iter((16, 32, 64))
+    monkeypatch.setattr(
+        autotune, "_time_decode", lambda fn, args, reps=1: 1e-6 * next(widths)
+    )
+    assert autotune.sweep_chunk_tokens(cfg, page_size=16, batch=2) == 32
 
 
 def test_sweep_ties_break_to_simplest_schedule(monkeypatch):

@@ -35,8 +35,25 @@ def _cell(key="ps8_ck32_f32_b2_k1", step_ms=1.0, attainment=0.5, **over):
 def test_smoke_grid_is_exact_subset_of_full():
     full = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(False)}
     smoke = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(True)}
-    assert len(full) == 48 and len(smoke) == 8
+    assert len(full) == 52 and len(smoke) == 10
     assert smoke < full  # strict subset: every smoke cell has a committed twin
+
+
+def test_speculative_cells_differ_only_by_suffix():
+    # sp=0 keys keep their pre-speculation spelling (committed baselines pair
+    # unchanged); each spec cell's key is exactly its sp=0 sibling + "_sp{n}",
+    # so the pair isolates the verify-window machinery
+    for combos in (perf_matrix.grid(False), perf_matrix.grid(True)):
+        keys = {perf_matrix.cell_key(*c) for c in combos}
+        spec = [c for c in combos if c[5]]
+        assert spec  # both grids carry speculative cells
+        for c in spec:
+            key = perf_matrix.cell_key(*c)
+            assert key.endswith(f"_sp{c[5]}")
+            assert key.rsplit("_sp", 1)[0] in keys  # sp=0 sibling exists
+        for c in combos:
+            if not c[5]:
+                assert "_sp" not in perf_matrix.cell_key(*c)
 
 
 def test_committed_baseline_covers_the_full_grid():

@@ -1,0 +1,381 @@
+"""Speculative decoding: n-gram drafts, one-call verify, lens-rollback accept.
+
+Pins the speculative contract (serving/speculative.py, ops.verify_draft_tokens,
+the engine's _decode_spec_once driver):
+
+  - GREEDY speculative output is token-EXACT against the non-speculative
+    engine — same seed, same params, any K, any window count, quantized KV
+    included (acceptance is argmax agreement, so the committed stream IS the
+    serial greedy stream);
+  - the n-gram table is a pure function of the token context: the host
+    rebuild (NGramProposer.rebuild_row) is bit-identical to the device's
+    incremental in-window insertion history, so preemption-recompute and
+    plain/speculative interleaving never drift the proposer;
+  - rollback is layout arithmetic: after a run full of rejected drafts the
+    persistent device mirrors still equal the host allocator state;
+  - EOS inside an accepted draft truncates the commit exactly like the fused
+    window's overrun-discard rule;
+  - speculation degrades, never errors: page starvation, per-request opt-out
+    and short horizons all fall back to the plain path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models import build_model, get_config
+from repro.serving import GenerationParams
+from repro.serving.engine import (
+    EngineConfig, Request, SamplingParams, ServeEngine,
+)
+from repro.serving.engine.cache import PagedKVCache
+from repro.serving.engine.request import RequestQueue, RequestState
+from repro.serving.engine.scheduler import Scheduler, SchedulerConfig
+from repro.serving.speculative import (
+    NGramProposer, ngram_keys_jnp, ngram_keys_np,
+)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def _mk(prompts, n, **kw):
+    return [
+        Request(rid=i, prompt=list(p), params=GenerationParams(
+            max_new_tokens=n, **kw))
+        for i, p in enumerate(prompts)
+    ]
+
+
+# =====================================================================================
+# the n-gram proposer — host/device hash equality, rebuild == incremental
+# =====================================================================================
+def test_ngram_hash_host_device_bit_identical():
+    rng = np.random.default_rng(0)
+    grams = rng.integers(0, 50_000, size=(64, 3)).astype(np.int32)
+    host = ngram_keys_np(grams, 256)
+    dev = np.asarray(ngram_keys_jnp(jnp.asarray(grams), 256))
+    np.testing.assert_array_equal(host, dev)
+    assert host.min() >= 0 and host.max() < 256
+
+
+def test_rebuild_row_matches_incremental_device_updates():
+    """The device's in-window update (shifted insertion: gram ending at q
+    inserted once token q+1 commits) replays EXACTLY as the host rebuild of
+    the final context — the invariant that makes _spec_stale rebuilds safe."""
+    prop = NGramProposer(spec_tokens=3, ngram=2, table_size=64, vocab=40,
+                         hist_len=96)
+    rng = np.random.default_rng(1)
+    ctx = rng.integers(0, 40, size=9).tolist()  # current token last
+    hist_np, table_np = prop.rebuild_row(ctx)
+    hist = jnp.asarray(hist_np[None])
+    table = jnp.asarray(table_np[None])
+    active = jnp.asarray([1], jnp.int32)
+    c = prop.spec_tokens + 1
+    for _ in range(6):  # several windows with varying partial acceptance
+        lens = jnp.asarray([len(ctx) - 1], jnp.int32)
+        tokens_out = jnp.asarray(
+            rng.integers(0, 40, size=(1, c)).astype(np.int32)
+        )
+        a = int(rng.integers(1, c + 1))
+        hist, table = prop.update(
+            hist, table, lens, tokens_out, jnp.asarray([a], jnp.int32), active
+        )
+        ctx = ctx + np.asarray(tokens_out)[0, :a].tolist()
+        h_ref, t_ref = prop.rebuild_row(ctx)
+        n = len(ctx)
+        np.testing.assert_array_equal(np.asarray(hist)[0, :n], h_ref[:n])
+        np.testing.assert_array_equal(
+            np.asarray(table)[0, : prop.table_size], t_ref[: prop.table_size]
+        )
+
+
+def test_propose_never_self_matches_and_drafts_from_history():
+    """A repeating stream must draft its own continuation; the lookup must
+    find the EARLIER occurrence (shifted insertion), never the gram currently
+    being extended."""
+    prop = NGramProposer(spec_tokens=3, ngram=2, table_size=64, vocab=40,
+                         hist_len=64)
+    ctx = [5, 6, 7, 8] * 3  # current token = 8 at position 11
+    hist, table = prop.rebuild_row(ctx)
+    draft = prop.propose(
+        jnp.asarray(hist[None]), jnp.asarray(table[None]),
+        jnp.asarray([len(ctx) - 1], jnp.int32), jnp.asarray([1], jnp.int32),
+    )
+    # gram (7, 8) last INSERTED ending at position 7 -> continuation 5, 6, 7
+    assert np.asarray(draft)[0].tolist() == [5, 6, 7]
+    # inactive rows never draft
+    draft0 = prop.propose(
+        jnp.asarray(hist[None]), jnp.asarray(table[None]),
+        jnp.asarray([len(ctx) - 1], jnp.int32), jnp.asarray([0], jnp.int32),
+    )
+    assert np.asarray(draft0)[0].tolist() == [0, 0, 0]
+
+
+# =====================================================================================
+# ops.verify_draft_tokens — the accept/resample op
+# =====================================================================================
+def _verify(logits, draft, temperature=0.0, active=None, vocab=None):
+    b = logits.shape[0]
+    full = lambda v, dt: jnp.full((b,), v, dt)
+    if active is None:
+        active = full(1, jnp.int32)
+    return ops.verify_draft_tokens(
+        jnp.asarray(logits), jnp.asarray(draft), full(temperature, jnp.float32),
+        full(0, jnp.int32), full(1.0, jnp.float32), full(0, jnp.uint32),
+        full(4, jnp.int32), active, vocab=vocab or logits.shape[-1],
+    )
+
+
+def test_verify_greedy_accepts_longest_agreeing_prefix():
+    vp, k = 16, 3
+    rng = np.random.default_rng(2)
+    logits = rng.standard_normal((1, k + 1, vp)).astype(np.float32)
+    g = np.argmax(logits, axis=-1)[0]  # per-position greedy targets
+    # draft agrees at position 0, diverges at 1
+    draft = np.array([[g[0], (g[1] + 1) % vp, g[2]]], np.int32)
+    toks, committed, lp = _verify(logits, draft)
+    assert int(committed[0]) == 2  # 1 agreed draft token + the correction
+    np.testing.assert_array_equal(np.asarray(toks)[0], g)  # rows ARE greedy
+    # fully agreeing draft: K accepted + bonus
+    toks, committed, _ = _verify(logits, np.array([g[:k]], np.int32))
+    assert int(committed[0]) == k + 1
+    # inactive row commits nothing
+    _, committed, _ = _verify(
+        logits, np.array([g[:k]], np.int32), active=jnp.zeros((1,), jnp.int32)
+    )
+    assert int(committed[0]) == 0
+
+
+def test_verify_sampled_commits_at_least_one_token():
+    vp, k = 16, 3
+    rng = np.random.default_rng(3)
+    logits = rng.standard_normal((2, k + 1, vp)).astype(np.float32)
+    draft = rng.integers(0, vp, size=(2, k)).astype(np.int32)
+    toks, committed, lp = _verify(logits, draft, temperature=0.9)
+    assert (np.asarray(committed) >= 1).all()
+    assert (np.asarray(committed) <= k + 1).all()
+    assert (np.asarray(toks) < vp).all() and (np.asarray(toks) >= 0).all()
+    # deterministic: same inputs, same commits
+    toks2, committed2, _ = _verify(logits, draft, temperature=0.9)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+    np.testing.assert_array_equal(np.asarray(committed), np.asarray(committed2))
+
+
+# =====================================================================================
+# scheduler — horizon/tokens_per_step edges, window page reservation
+# =====================================================================================
+def test_event_free_horizon_tokens_per_step_edges(small_model):
+    cfg, model, params = small_model
+    cache = PagedKVCache(model, num_pages=16, page_size=4, max_batch=2,
+                         max_pages_per_seq=6)
+    sched = Scheduler(cache, SchedulerConfig(2, 1))
+    queue = RequestQueue()
+    st = RequestState(Request(0, [1, 2, 3, 4, 5, 6, 7],
+                              GenerationParams(max_new_tokens=12)))
+    queue.push(st)
+    sched.admit(queue, 0.0)
+    st.generated.append(1)  # DECODING
+    cache.set_len(st.slot, 8)  # EXACTLY the owned-page boundary (2 pages * 4)
+    assert cache.capacity_tokens(st.slot) == 0
+    assert sched.event_free_horizon(queue) == 0
+    assert sched.event_free_horizon(queue, tokens_per_step=4) == 0
+    # reserve one speculative window's budget: capacity rounds up by pages
+    assert sched.reserve_decode_tokens(st.slot, 4)
+    assert cache.capacity_tokens(st.slot) == 4
+    assert sched.event_free_horizon(queue) == 4
+    assert sched.event_free_horizon(queue, tokens_per_step=4) == 1
+    # tokens_per_step > capacity: no window fits
+    assert sched.event_free_horizon(queue, tokens_per_step=5) == 0
+    # remaining max_new budget caps it the same way (11 left, 4 per window)
+    assert sched.reserve_decode_tokens(st.slot, 12)
+    assert sched.event_free_horizon(queue, tokens_per_step=4) == 2
+    # the per-seq page cap bounds reservation without raising
+    assert not sched.reserve_decode_tokens(st.slot, 100)
+
+
+# =====================================================================================
+# engine — exactness, EOS, preemption, mirrors, opt-out, acceptance
+# =====================================================================================
+@pytest.mark.parametrize("kv_dtype", ["f32", "int8"])
+@pytest.mark.parametrize("windows", [1, 2])
+def test_engine_spec_greedy_token_exact(small_model, kv_dtype, windows):
+    """The headline law: greedy speculative output equals the non-speculative
+    engine token-for-token — single and multi-window, f32 and quantized KV."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(10)
+    prompts = [
+        (rng.integers(0, cfg.vocab, size=4).tolist() * 3)[:10] for _ in range(2)
+    ]
+    econf = EngineConfig(num_pages=64, page_size=8, max_batch=2,
+                         max_pages_per_seq=8, kv_dtype=kv_dtype)
+    res0 = ServeEngine(model, params, econf).run(_mk(prompts, 20))
+    spec = ServeEngine(model, params, dataclasses.replace(
+        econf, spec_tokens=3, multi_step=windows, spec_backoff=0))
+    res1 = spec.run(_mk(prompts, 20))
+    for i in range(len(prompts)):
+        assert res0[i].generated == res1[i].generated, i
+    m = spec.metrics()
+    assert m["spec_windows"] > 0  # the speculative path actually ran
+    assert m["accepted_tokens_per_step"] >= 1.0
+
+
+def test_engine_spec_sampled_reproducible(small_model):
+    """temperature > 0 speculation is reproducible (pure function of seed,
+    rid, position) even though its stream deliberately differs from the
+    non-speculative one (rejection sampling vs Gumbel-max)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(2)]
+    econf = EngineConfig(num_pages=64, page_size=8, max_batch=2,
+                         max_pages_per_seq=8, spec_tokens=3, spec_backoff=0)
+    kw = dict(temperature=0.8, top_k=12, top_p=0.95, seed=123)
+    res_a = ServeEngine(model, params, econf).run(_mk(prompts, 12, **kw))
+    res_b = ServeEngine(model, params, econf).run(_mk(prompts, 12, **kw))
+    for i in range(len(prompts)):
+        assert res_a[i].generated == res_b[i].generated, i
+    res_c = ServeEngine(model, params, econf).run(
+        _mk(prompts, 12, **{**kw, "seed": 124}))
+    assert any(res_c[i].generated != res_a[i].generated for i in res_c)
+
+
+def test_engine_spec_eos_in_draft_truncates_exact(small_model):
+    """An EOS landing INSIDE an accepted draft finishes the request at the
+    EOS token — the commit truncates exactly like the fused window's
+    overrun-discard, and output matches the non-speculative engine."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(2)]
+    econf = EngineConfig(num_pages=64, page_size=8, max_batch=2,
+                         max_pages_per_seq=8)
+    probe = ServeEngine(model, params, econf).run(_mk(prompts, 16))
+    eos = probe[0].generated[5]  # an id greedy is known to hit mid-sequence
+    res0 = ServeEngine(model, params, econf).run(_mk(prompts, 16, eos_id=eos))
+    spec = ServeEngine(model, params, dataclasses.replace(
+        econf, spec_tokens=3, multi_step=2, spec_backoff=0))
+    res1 = spec.run(_mk(prompts, 16, eos_id=eos))
+    assert res0[0].generated[-1] == eos and len(res0[0].generated) <= 16
+    for i in res0:
+        assert res0[i].generated == res1[i].generated, i
+
+
+def test_engine_spec_preemption_between_windows(small_model):
+    """A page-starved speculative engine (preemptions interleaving plain and
+    speculative dispatches, stale proposer rows rebuilt from recomputed
+    contexts) still produces the exact greedy stream."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(3)]
+    big = ServeEngine(model, params, EngineConfig(
+        num_pages=64, page_size=4, max_batch=3, max_pages_per_seq=8))
+    starved = ServeEngine(model, params, EngineConfig(
+        num_pages=12, page_size=4, max_batch=3, max_pages_per_seq=6,
+        spec_tokens=2, spec_backoff=0))
+    res_big = big.run(_mk(prompts, 10))
+    res_sp = starved.run(_mk(prompts, 10))
+    assert starved.metrics()["preemptions"] >= 1
+    for i in range(len(prompts)):
+        assert res_big[i].generated == res_sp[i].generated, i
+
+
+def test_engine_spec_mirrors_match_host_after_rollbacks(small_model):
+    """The device-mirror law survives speculation: every window over-writes
+    KV for rejected positions and the lens rollback abandons them, yet at
+    quiescence the persistent device tables/lens equal the host allocator."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(2)]
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=48, page_size=4, max_batch=2, max_pages_per_seq=8,
+        spec_tokens=3, multi_step=2, spec_backoff=0))
+    eng.run(_mk(prompts, 12))
+    assert eng.metrics()["spec_rollback_tokens"] > 0  # rollbacks happened
+    tables_dev, lens_dev = eng.cache.device_state()
+    np.testing.assert_array_equal(np.asarray(tables_dev), eng.cache.tables)
+    np.testing.assert_array_equal(np.asarray(lens_dev), eng.cache.lens)
+
+
+def test_engine_spec_opt_out_and_validation(small_model):
+    cfg, model, params = small_model
+    rng = np.random.default_rng(15)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist()]
+    spec_conf = EngineConfig(num_pages=32, page_size=8, max_batch=1,
+                             max_pages_per_seq=4, spec_tokens=3)
+    # speculative=False on a spec engine: plain path, same tokens
+    eng = ServeEngine(model, params, spec_conf)
+    res = eng.run(_mk(prompts, 8, speculative=False))
+    assert eng.metrics()["spec_windows"] == 0
+    base = ServeEngine(model, params, dataclasses.replace(
+        spec_conf, spec_tokens=0)).run(_mk(prompts, 8))
+    assert res[0].generated == base[0].generated
+    # speculative=True on a non-spec engine fails at enqueue
+    plain = ServeEngine(model, params, dataclasses.replace(
+        spec_conf, spec_tokens=0))
+    with pytest.raises(ValueError, match="spec_tokens"):
+        plain.submit(prompts[0], GenerationParams(speculative=True))
+    # incompatible combos fail at construction
+    with pytest.raises(ValueError, match="beam"):
+        GenerationParams(speculative=True, beam_width=2)
+    # spec engine + record_logits fails at init
+    with pytest.raises(ValueError, match="record_logits"):
+        ServeEngine(model, params, dataclasses.replace(
+            spec_conf, record_logits=True))
+
+
+def test_engine_spec_accepts_on_predictable_stream(small_model):
+    """End-to-end acceptance: a degenerate model whose greedy stream is
+    constant (all params zeroed except the embedding, so logits are uniformly
+    zero and argmax pins token 0) must accept nearly every draft —
+    accepted_tokens_per_step approaches K+1, and the stream stays exact."""
+    cfg, model, params = small_model
+    zp = jax.tree.map(jnp.zeros_like, params)
+    zp = dict(zp)
+    zp["embed"] = params["embed"]
+    prompts = [[3, 1, 4, 1, 5, 9, 2, 6]]
+    econf = EngineConfig(num_pages=64, page_size=8, max_batch=1,
+                         max_pages_per_seq=8)
+    res0 = ServeEngine(model, zp, econf).run(_mk(prompts, 32))
+    spec = ServeEngine(model, zp, dataclasses.replace(
+        econf, spec_tokens=3, multi_step=2))
+    res1 = spec.run(_mk(prompts, 32))
+    assert res0[0].generated == res1[0].generated
+    m = spec.metrics()
+    assert m["accepted_tokens_per_step"] > 1.5
+    assert m["draft_hit_rate"] > 0.5
+    # spec did the bulk of the decode work: every token not produced by a
+    # plain decode step or the prefill first-token came from a window
+    plain_steps = m["decode_steps"] - m["spec_windows"]
+    assert m["spec_accepted_tokens"] == 32 - 1 - plain_steps
+    # full acceptance keeps the EMA at K+1 — the backoff never fires
+    assert m["spec_backoffs"] == 0
+
+
+def test_engine_spec_adaptive_backoff_on_incompressible_stream(small_model):
+    """On a stream with no n-gram structure drafts never hit; the acceptance
+    EMA drops under spec_accept_floor after the first probe and the planner
+    stops paying the per-step verify tax — plain dispatches carry the stream
+    between rare re-probes, and the output stays token-exact throughout."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(16)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist()]
+    econf = EngineConfig(num_pages=64, page_size=8, max_batch=1,
+                         max_pages_per_seq=8)
+    res0 = ServeEngine(model, params, econf).run(_mk(prompts, 40))
+    spec = ServeEngine(model, params, dataclasses.replace(
+        econf, spec_tokens=3, multi_step=2, spec_backoff=8))
+    res1 = spec.run(_mk(prompts, 40))
+    assert res0[0].generated == res1[0].generated
+    m = spec.metrics()
+    assert m["spec_backoffs"] >= 1  # the EMA tripped the floor
+    # the plain path carried the stream between probes: more plain decode
+    # steps than speculative windows, unlike the backoff=0 engines above
+    plain_steps = m["decode_steps"] - m["spec_windows"]
+    assert plain_steps > m["spec_windows"] > 0
