@@ -24,7 +24,7 @@ records:
     floor is flagged in the report and the markdown table.
 
 The matrix is a RATCHET: cells are keyed (``ps8_ck32_f32_b2_k1``, speculative
-cells append ``_sp3``) and every
+cells append ``_sp3``, host-tier cells append ``_hk``) and every
 run compares itself against the committed ``BENCH_perf_matrix.json`` — any
 cell whose step_ms_p50 regresses more than 20% vs its committed twin fails
 the run (CI's perf-matrix-smoke job runs the reduced grid, whose keys are an
@@ -49,6 +49,7 @@ plus the chosen config as surfaced by ``engine.metrics()``.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import json
 from pathlib import Path
@@ -65,14 +66,14 @@ from repro.serving import GenerationParams
 from repro.serving.engine import EngineConfig, Request, ServeEngine
 from repro.serving.engine.kvquant import KV_DTYPES
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 OUT_PATH = Path("BENCH_perf_matrix.json")  # COMMITTED: the per-cell ratchet
 # baseline. Smoke runs never clobber it; they pair their cells against it.
 SMOKE_OUT_PATH = Path("artifacts/perf_matrix_smoke.json")
 MD_PATH = Path("artifacts/perf_matrix.md")
 
-# full grid: 2 x 2 x 3 x 2 x 2 = 48 plain cells + 4 speculative cells = 52
+# full grid: 2 x 2 x 3 x 2 x 2 = 48 plain + 4 speculative + 4 host-tier = 56
 PAGE_SIZES = (8, 16)
 CHUNKS = (32, 64)
 KV_AXIS = ("f32", "int8", "int4")
@@ -91,9 +92,18 @@ SPEC_SP = 3
 SPEC_K = 4
 SPEC_KV_AXIS = ("f32", "int8")
 
-# smoke grid: 2 x 2 x 2 = 8 plain cells + 2 speculative cells = 10, an EXACT
-# SUBSET of the full grid (chunk and batch pinned to full-grid values) so
-# every smoke cell has a committed twin
+# host-tier axis: hk cells run the SAME steady workload through an engine
+# whose HBM pool is deliberately too small for the batch (just roomy enough
+# to admit two requests) plus a host pool sized for full demand — so every
+# cell's measurement includes real preempt-demote / readmit-promote churn.
+# The _hk suffix is the only difference from the sp=0 / k=1 sibling: the
+# pair prices the swap machinery itself. K pinned to 1 because preemption
+# events break the event-free horizons multi-step dispatch needs.
+HK_KV_AXIS = ("f32", "int8")
+
+# smoke grid: 2 x 2 x 2 = 8 plain + 2 speculative + 2 host-tier = 12, an
+# EXACT SUBSET of the full grid (chunk and batch pinned to full-grid values)
+# so every smoke cell has a committed twin
 SMOKE_KV_AXIS = ("f32", "int8")
 SMOKE_CHUNK = 32
 SMOKE_BATCH = 2
@@ -121,35 +131,45 @@ ATTAINMENT_FLOORS = {"f32": 5e-4, "int8": 1e-4, "int4": 5e-5}
 
 
 def cell_key(ps: int, chunk: int, kv: str, batch: int, k: int,
-             sp: int = 0) -> str:
-    # sp=0 keys keep their pre-speculation spelling so existing committed
-    # baselines pair unchanged; only spec cells grow the _sp suffix
+             sp: int = 0, hk: int = 0) -> str:
+    # sp=0 / hk=0 keys keep their earlier spelling so existing committed
+    # baselines pair unchanged; only spec/host-tier cells grow a suffix
     base = f"ps{ps}_ck{chunk}_{kv}_b{batch}_k{k}"
-    return f"{base}_sp{sp}" if sp else base
+    if sp:
+        base = f"{base}_sp{sp}"
+    return f"{base}_hk" if hk else base
 
 
 def grid(smoke: bool):
     if smoke:
         plain = [
-            (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, k, 0)
+            (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, k, 0, 0)
             for ps, kv, k in itertools.product(PAGE_SIZES, SMOKE_KV_AXIS, KS)
         ]
         spec = [
-            (ps, SMOKE_CHUNK, "f32", SMOKE_BATCH, SPEC_K, SPEC_SP)
+            (ps, SMOKE_CHUNK, "f32", SMOKE_BATCH, SPEC_K, SPEC_SP, 0)
             for ps in PAGE_SIZES
         ]
-        return plain + spec
+        hk = [
+            (ps, SMOKE_CHUNK, "f32", SMOKE_BATCH, 1, 0, 1)
+            for ps in PAGE_SIZES
+        ]
+        return plain + spec + hk
     plain = [
-        (ps, chunk, kv, batch, k, 0)
+        (ps, chunk, kv, batch, k, 0, 0)
         for ps, chunk, kv, batch, k in itertools.product(
             PAGE_SIZES, CHUNKS, KV_AXIS, BATCHES, KS
         )
     ]
     spec = [
-        (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, SPEC_K, SPEC_SP)
+        (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, SPEC_K, SPEC_SP, 0)
         for ps, kv in itertools.product(PAGE_SIZES, SPEC_KV_AXIS)
     ]
-    return plain + spec
+    hk = [
+        (ps, SMOKE_CHUNK, kv, SMOKE_BATCH, 1, 0, 1)
+        for ps, kv in itertools.product(PAGE_SIZES, HK_KV_AXIS)
+    ]
+    return plain + spec + hk
 
 
 # -------------------------------------------------------------------------------
@@ -227,12 +247,22 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
     walk puts tens of seconds between them, and the min recovers the cell's
     capability (host noise only ever ADDS time)."""
     engines = []
-    for ps, chunk, kv, batch, k, sp in combos:
+    for ps, chunk, kv, batch, k, sp, hk in combos:
         conf = EngineConfig.sized_for(
             PROMPT_LEN + NEW_TOKENS + 1, page_size=ps, max_batch=batch,
             multi_step=k, kv_dtype=kv, chunked_prefill=True,
             chunk_tokens=chunk, spec_tokens=sp, spec_backoff=0,
         )
+        if hk:
+            # oversubscribe: HBM holds just enough to admit two requests
+            # (pages_for(prompt+1) each, plus the scheduler's watermark
+            # page), the host pool holds full demand — decode growth then
+            # preempts and every pass swaps for real
+            admit = -(-(PROMPT_LEN + 1) // ps)
+            demand = batch * -(-(PROMPT_LEN + NEW_TOKENS) // ps)
+            conf = dataclasses.replace(
+                conf, num_pages=2 * admit + 2, host_pool_pages=demand,
+            )
         eng = ServeEngine(model, params, conf)
         eng.run(_steady_requests(cfg.vocab, batch))  # rehearsal
         engines.append(eng)
@@ -253,7 +283,7 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
                 best[i]["tokens_per_s"] = max(best[i]["tokens_per_s"],
                                               m["tokens_per_s"])
     cells = []
-    for (ps, chunk, kv, batch, k, sp), m in zip(combos, best):
+    for (ps, chunk, kv, batch, k, sp, hk), m in zip(combos, best):
         # mid-stream occupancy: every slot half way through its decode tail
         traffic = measured_step_bytes(
             cfg, page_size=ps, kv_dtype=kv, batch=batch,
@@ -266,13 +296,14 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
         )
         floor = ATTAINMENT_FLOORS[kv]
         cells.append({
-            "key": cell_key(ps, chunk, kv, batch, k, sp),
+            "key": cell_key(ps, chunk, kv, batch, k, sp, hk),
             "page_size": ps,
             "chunk_tokens": chunk,
             "kv_dtype": kv,
             "max_batch": batch,
             "multi_step": k,
             "spec_tokens": sp,
+            "host_tier": bool(hk),
             "step_ms_p50": m["step_ms_p50"],
             "step_ms_p95": m["step_ms_p95"],
             "tokens_per_s": m["tokens_per_s"],
@@ -282,6 +313,10 @@ def run_cells(model, params, cfg, machine_bw: float, combos,
             "attainment": att,
             "attainment_floor": floor,
             "below_floor": att < floor,
+            # hk cells carry their churn counters: a cell that stopped
+            # swapping would silently be timing a different workload
+            **({"preemptions": m["preemptions"],
+                "swap_in_pages": m["swap_in_pages"]} if hk else {}),
         })
     return cells
 
@@ -410,9 +445,9 @@ def check_cells(report: dict, baseline: dict | None) -> list:
 
 def render_markdown(report: dict) -> str:
     rows = [
-        "| cell | ps | chunk | kv | batch | K | sp | p50 ms | p95 ms | tok/s "
-        "| measured B/step | vs analytic | GB/s | attainment | flag |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "| cell | ps | chunk | kv | batch | K | sp | hk | p50 ms | p95 ms "
+        "| tok/s | measured B/step | vs analytic | GB/s | attainment | flag |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for c in report["cells"]:
         flag = "below-floor" if c["below_floor"] else ""
@@ -420,6 +455,7 @@ def render_markdown(report: dict) -> str:
             f"| {c['key']} | {c['page_size']} | {c['chunk_tokens']} "
             f"| {c['kv_dtype']} | {c['max_batch']} | {c['multi_step']} "
             f"| {c.get('spec_tokens', 0)} "
+            f"| {'y' if c.get('host_tier') else ''} "
             f"| {c['step_ms_p50']:.3f} | {c['step_ms_p95']:.3f} "
             f"| {c['tokens_per_s']:.1f} | {c['measured_bytes_per_step']} "
             f"| {c['measured_vs_analytic_rel']:.1%} | {c['achieved_gb_s']:.4f} "

@@ -6,6 +6,7 @@ roofline reader. Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run --only roofline
   PYTHONPATH=src python -m benchmarks.run --only serving   # writes BENCH_serving.json
   PYTHONPATH=src python -m benchmarks.run --only perf-matrix  # writes BENCH_perf_matrix.json
+  PYTHONPATH=src python -m benchmarks.run --oversubscribe  # host-tier section only
 """
 import argparse
 import sys
@@ -36,7 +37,23 @@ def main() -> None:
         help="KV page representations to compare in the serving suite's "
              "quantized section (f32 always runs as the baseline)",
     )
+    ap.add_argument(
+        "--oversubscribe", action="store_true",
+        help="run ONLY the serving suite's hierarchical-KV host-tier "
+             "section, smoke-sized (session resume vs recompute, sustained "
+             "decode under pool oversubscription, enabled-but-idle "
+             "overhead); prints the JSON report and never touches the "
+             "committed BENCH_serving*.json",
+    )
     args = ap.parse_args()
+    if args.oversubscribe:
+        import json
+
+        from benchmarks import serving_suite
+
+        report = serving_suite.run_hierarchical_kv(smoke=True)
+        print(json.dumps(report, indent=2))
+        return
     if args.only in ("all", "paper"):
         from benchmarks import paper_suite
 

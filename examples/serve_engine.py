@@ -62,6 +62,17 @@ event-free (no admission, page append, CoW, or finish within K) — append,
 attend, sample and feed back without touching the host, amortizing dispatch
 over K tokens. Token-exact for any K; the run reports how many steps fused.
 
+Hierarchical KV: ``--host-pool N`` adds a host-RAM page tier of N pages
+behind the accessor customization point — the same page pool, one more
+memory space. Finished sessions RETIRE their KV pages to the host tier
+(content-keyed, retention-windowed) instead of dropping them; a follow-up
+request that opens with the same context PREFETCHES those pages back at
+admission, so resuming a conversation costs a page copy instead of a prefill
+recompute. The demo resumes every session through the tiered engine and
+through the identical config with the tier off (one ``dataclasses.replace``
+apart) and reports resume TTFT side by side plus token-exactness. Under
+memory pressure the same machinery turns preemption into swap-out.
+
 Lifecycle tracing: ``--trace FILE`` records every engine transition (enqueue,
 admit, prefill/chunk spans, page appends, CoW, preemption, fused decode
 windows, finish) into a bounded in-memory ring and exports it as Chrome
@@ -74,7 +85,8 @@ Knobs: ``num_pages`` (pool memory budget), ``page_size`` (tokens per page),
 through the paged flash kernel; "auto" picks by backend), ``kv_dtype``
 (f32 | int8 | int4 page representation), ``--chunked`` + ``--chunk-tokens``
 (mixed-step prefill), ``--temperature/--top-k/--top-p/--seed`` (on-device
-sampling), ``--multi-step`` (fused decode horizon), ``--trace FILE``
+sampling), ``--multi-step`` (fused decode horizon), ``--host-pool`` (host-RAM
+page tier for session resume / preemption-as-swap), ``--trace FILE``
 (lifecycle trace export).
 """
 import argparse
@@ -125,6 +137,11 @@ def main():
     ap.add_argument("--multi-step", type=int, default=1, metavar="K",
                     help="fused decode horizon: run K decode iterations in one "
                          "on-device loop over event-free horizons (1 = off)")
+    ap.add_argument("--host-pool", type=int, default=0, metavar="N",
+                    help="host-RAM page tier of N pages (try 64): finished "
+                         "sessions retire their KV pages host-side and resume "
+                         "by prefetching them back; the demo compares resume "
+                         "TTFT against the same engine with the tier off")
     ap.add_argument("--trace", default="", metavar="FILE",
                     help="record the request-lifecycle trace and export it to "
                          "FILE as Chrome trace-event JSON (view in Perfetto)")
@@ -264,6 +281,68 @@ def main():
             f"more KV capacity per byte (same {m['peak_pages_in_use']} peak pages) | "
             f"greedy outputs match f32 on {agree}/{len(results)} requests "
             f"(quantization is lossy; the CI bench bounds the logit error)"
+        )
+
+    if args.host_pool:
+        # hierarchical KV: every finished session is resumed — its full
+        # context plus a fresh user tail — through a tiered engine (pages
+        # prefetched back from host RAM) and through the identical config one
+        # dataclasses.replace away (tier off: full prefill recompute). Each
+        # engine rehearses the resume TWICE so the comparison times compiled
+        # code — after the first rehearsal the tiered engine retains the
+        # resume context itself, so only the second rehearsal runs the exact
+        # (smaller) chunk shapes the measured resume will — then measures a
+        # final resume of the same contexts.
+        resume_tail = rng.integers(0, cfg.vocab, size=8).tolist()
+        max_resume = (
+            max(len(p) for p in prompts) + 2 * args.tokens
+            + len(resume_tail) + 1
+        )
+        hconf = EngineConfig.sized_for(
+            max_resume, page_size=args.page_size, max_batch=args.max_batch,
+            attn_impl=args.attn_impl, chunked_prefill=True,
+            chunk_tokens=args.chunk_tokens,
+            host_pool_pages=args.host_pool, retain_finished_s=600.0,
+        )
+        tiered = ServeEngine(model, params, hconf)
+        untiered = ServeEngine(
+            model, params,
+            dataclasses.replace(hconf, host_pool_pages=0,
+                                retain_finished_s=0.0),
+        )
+        resumed, rstats = {}, {}
+        for name, eng in (("prefetch", tiered), ("recompute", untiered)):
+            sessions = eng.run(make_requests())
+            resume = lambda base: [
+                Request(
+                    rid=base + rid,
+                    prompt=list(s.request.prompt) + list(s.generated)
+                    + resume_tail,
+                    params=gen_params,
+                )
+                for rid, s in sorted(sessions.items())
+                if rid < 100
+            ]
+            eng.run(resume(200))  # rehearsal 1: warms the tier
+            eng.run(resume(300))  # rehearsal 2: compiles warm-tier shapes
+            eng.reset_metrics()
+            out = eng.run(resume(100))
+            resumed[name] = {
+                r - 100: out[r].generated for r in out if 100 <= r < 200
+            }
+            rstats[name] = eng.metrics()
+        assert resumed["prefetch"] == resumed["recompute"], (
+            "host-tier resume must not change tokens"
+        )
+        wm, cm = rstats["prefetch"], rstats["recompute"]
+        print(
+            f"hierarchical KV (host pool {args.host_pool} pages): resume "
+            f"ttft p50 {wm['ttft_s_p50']*1e3:.1f}ms prefetching vs "
+            f"{cm['ttft_s_p50']*1e3:.1f}ms recomputing "
+            f"({cm['ttft_s_p50']/max(wm['ttft_s_p50'], 1e-9):.1f}x) | "
+            f"{wm['prefetch_hits']} pages prefetched, prefill tokens "
+            f"computed {wm['prefill_tokens_computed']} vs "
+            f"{cm['prefill_tokens_computed']} | outputs identical"
         )
 
     if args.shared_prefix:

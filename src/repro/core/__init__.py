@@ -19,6 +19,7 @@ from .accessors import (
     AccumulateAccessor,
     BasicAccessor,
     BitPackedAccessor,
+    HostTierAccessor,
     MemorySpace,
     MemorySpaceAccessor,
     QuantizedAccessor,
@@ -44,6 +45,7 @@ __all__ = [
     "AccumulateAccessor",
     "BasicAccessor",
     "BitPackedAccessor",
+    "HostTierAccessor",
     "MemorySpace",
     "MemorySpaceAccessor",
     "QuantizedAccessor",

@@ -24,6 +24,10 @@ Accessors implemented:
   MemorySpaceAccessor  strong memory-space types (HBM/VMEM/SMEM/HOST) — the paper's
                        "strong pointer types for heterogeneous memory"; the tag flows
                        into Pallas BlockSpec memory_space and sharding memory_kind
+  HostTierAccessor     TWO-space composition: wraps any element accessor over an
+                       {hbm, host} buffer pair and routes offsets by page residency —
+                       the hierarchical-KV customization point (see the "accessors as
+                       memory spaces" section at the bottom of this module)
 
 All access/store implementations are vectorized: ``i`` may be a scalar or an ndarray
 of offsets (gather/scatter semantics), so whole-domain reads cost one gather.
@@ -524,3 +528,134 @@ def require_same_space(*accessors: Accessor) -> None:
     } - {MemorySpace.ANY}
     if len(spaces) > 1:
         raise TypeError(f"operands live in incompatible memory spaces: {spaces}")
+
+
+# -- accessors as memory spaces (the hierarchical-KV customization point) --------
+#
+# The paper's accessor policy is explicitly the hook for HETEROGENEOUS MEMORY:
+# one view type spans HBM, host RAM, and beyond without the layout or the
+# algorithm changing, because only the accessor resolves an offset to storage
+# (PAPER §IV — "strong pointer types for heterogeneous memory", the same
+# argument MemorySpaceAccessor makes for single-space tagging). HostTierAccessor
+# makes the MULTI-space case concrete: it wraps ANY element accessor (f32 /
+# int8 / int4 pages keep their representation in either space — the inner
+# policy is untouched) and routes each offset to an HBM or a host buffer set by
+# PAGE residency. The page granularity matches LayoutPaged's codomain: every
+# offset inside one physical page's ``page_elems``-sized range lives in one
+# space, so ``space_for_offset`` is a total map and migration is invisible to
+# the layout — exactly the property the serving tier (serving/engine/cache.py
+# TierManager) exploits when it demotes cold pages to host RAM and promotes
+# them back: the block table keeps its page ids, only the residency set (and
+# the bytes) move. LayoutPaged.space_for / space_for_offset report the same
+# classification from the layout side, so index -> (space, page, slot) is
+# answerable from either policy axis.
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTierAccessor(Accessor):
+    """Two-space accessor: ``inner`` applied over {"hbm": ..., "host": ...}
+    buffer sets, with each offset routed by the page residency set.
+
+    ``page_elems`` is the codomain extent of one physical page
+    (n_heads * page_size * d for KV pools); ``host_pages`` names the page ids
+    whose storage currently lives in the host tier. Both buffer sets are full
+    inner-accessor buffers over the SAME span, so a page's bytes keep their
+    representation (including quantization scales) wherever they live, and
+    migration is a pure content copy plus a residency-set update — no offset
+    changes, no re-encoding."""
+
+    inner: Accessor = dataclasses.field(default_factory=lambda: BasicAccessor())
+    page_elems: int = 1
+    host_pages: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.page_elems <= 0:
+            raise ValueError("page_elems must be positive")
+        object.__setattr__(
+            self, "host_pages", tuple(sorted({int(p) for p in self.host_pages}))
+        )
+
+    @property
+    def element_type(self):
+        return self.inner.element_type
+
+    def storage_dtype(self):
+        return self.inner.storage_dtype()
+
+    def space_for_offset(self, i) -> MemorySpace:
+        """The memory space holding offset ``i`` — total over the span."""
+        page = int(np.asarray(i)) // self.page_elems
+        return (
+            MemorySpace.HOST if page in set(self.host_pages) else MemorySpace.HBM
+        )
+
+    def _route(self, i):
+        pages = jnp.asarray(i) // self.page_elems
+        if not self.host_pages:
+            return jnp.zeros_like(pages, dtype=bool)
+        host = jnp.asarray(np.asarray(self.host_pages, np.int64))
+        return jnp.isin(pages, host)
+
+    def alloc(self, span_size: int):
+        return {
+            "hbm": self.inner.alloc(span_size),
+            "host": self.inner.alloc(span_size),
+        }
+
+    def from_codomain(self, dense):
+        """Encode into the HBM set; the host set starts cold (zeroed)."""
+        dense = jnp.asarray(dense)
+        return {
+            "hbm": self.inner.from_codomain(dense),
+            "host": self.inner.alloc(int(dense.shape[0])),
+        }
+
+    def access(self, buffers, i):
+        in_host = self._route(i)
+        hbm = self.inner.access(buffers["hbm"], i)
+        host = self.inner.access(buffers["host"], i)
+        return jnp.where(in_host, host, hbm)
+
+    def store(self, buffers, i, value):
+        """Route each store to the space holding its page. Mixed batches write
+        both sets with the complementary halves masked to their old values —
+        the functional-update analogue of two partial scatters."""
+        in_host = self._route(i)
+        old_h = self.inner.access(buffers["host"], i)
+        old_b = self.inner.access(buffers["hbm"], i)
+        value = jnp.asarray(value)
+        return {
+            "hbm": self.inner.store(
+                buffers["hbm"], i, jnp.where(in_host, old_b, value)
+            ),
+            "host": self.inner.store(
+                buffers["host"], i, jnp.where(in_host, value, old_h)
+            ),
+        }
+
+    def decay(self, buffers):
+        """Flatten to one plain codomain: each page read from its residency."""
+        hbm = self.inner.decay(buffers["hbm"])
+        host = self.inner.decay(buffers["host"])
+        idx = jnp.arange(hbm.shape[0])
+        return jnp.where(self._route(idx), host, hbm)
+
+    def bytes_for_offsets(self, i) -> int:
+        return self.inner.bytes_for_offsets(i)
+
+    def migrate(self, buffers, page: int, to: MemorySpace):
+        """Move one page's content between spaces: copy its ``page_elems``
+        offsets through the inner accessor, return (buffers, accessor) with the
+        residency set updated. The offsets never change — only which buffer set
+        answers them (the block-table-invariance law the serving tier relies
+        on)."""
+        here = self.space_for_offset(page * self.page_elems)
+        if to == here:
+            return buffers, self
+        src, dst = ("host", "hbm") if to == MemorySpace.HBM else ("hbm", "host")
+        offs = jnp.arange(page * self.page_elems, (page + 1) * self.page_elems)
+        vals = self.inner.access(buffers[src], offs)
+        buffers = {**buffers, dst: self.inner.store(buffers[dst], offs, vals)}
+        pages = set(self.host_pages)
+        (pages.discard if to == MemorySpace.HBM else pages.add)(page)
+        return buffers, dataclasses.replace(self, host_pages=tuple(sorted(pages)))

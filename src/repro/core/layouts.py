@@ -450,6 +450,11 @@ class LayoutPaged(LayoutMapping):
     num_pages: int = 0
     shared_pages: Tuple[int, ...] = ()
     pos_offset: int = 0  # physical position of logical pos 0 within the first page
+    host_pages: Tuple[int, ...] = ()  # physical pages whose storage is currently
+    # host-resident (the hierarchical-KV tier): the per-page residency set that
+    # makes index -> (space, page, slot) a TOTAL map (space_for /
+    # space_for_offset). Orthogonal to the offset algebra — migration moves a
+    # page's bytes and flips its membership here, never an offset
 
     def __post_init__(self):
         if self.extents.rank != 4:
@@ -483,6 +488,11 @@ class LayoutPaged(LayoutMapping):
         for p in shared:
             if not (0 <= p < self.num_pages):
                 raise ValueError(f"shared page id {p} outside pool [0, {self.num_pages})")
+        host = tuple(sorted({int(p) for p in self.host_pages}))
+        object.__setattr__(self, "host_pages", host)
+        for p in host:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"host page id {p} outside pool [0, {self.num_pages})")
 
     @staticmethod
     def dense(n_seq: int, n_heads: int, max_pos: int, d: int, page_size: int) -> "LayoutPaged":
@@ -516,6 +526,40 @@ class LayoutPaged(LayoutMapping):
     def pool_shape(self) -> Tuple[int, int, int, int]:
         """The codomain factored as an ndarray: (num_pages, n_heads, page_size, d)."""
         return (self.num_pages, self.extents.extent(1), self.page_size, self.extents.extent(3))
+
+    # -- memory spaces (hierarchical KV) -------------------------------------------
+    def space_for(self, s: int, h: int, p: int, d: int):
+        """The memory space holding index (s, h, p, d) — HOST when the page the
+        position maps to is in the residency set, HBM otherwise. Together with
+        __call__ this makes index -> (space, page, slot) a TOTAL map: every
+        domain index answers both WHERE in the flat codomain it lives and WHICH
+        tier holds those bytes (accessors.HostTierAccessor answers the same
+        question from the accessor axis; the two agree by construction when
+        built over the same residency set)."""
+        from .accessors import MemorySpace
+
+        page = self.block_table[s][(p + self.pos_offset) // self.page_size]
+        return (
+            MemorySpace.HOST if page in set(self.host_pages) else MemorySpace.HBM
+        )
+
+    def space_for_offset(self, offset: int):
+        """The memory space holding flat codomain ``offset`` (total over the
+        span: offsets factor through pages, and residency is per page)."""
+        from .accessors import MemorySpace
+
+        page_elems = (
+            self.extents.extent(1) * self.page_size * self.extents.extent(3)
+        )
+        page = int(offset) // page_elems
+        if not (0 <= page < self.num_pages):
+            raise ValueError(
+                f"offset {offset} outside the pool span "
+                f"[0, {self.required_span_size()})"
+            )
+        return (
+            MemorySpace.HOST if page in set(self.host_pages) else MemorySpace.HBM
+        )
 
     # -- observers ----------------------------------------------------------------
     def required_span_size(self) -> int:
@@ -586,6 +630,7 @@ class LayoutPaged(LayoutMapping):
             self.num_pages,
             shared,
             phys0 - first_page * self.page_size,
+            host_pages=tuple(p for p in self.host_pages if p in referenced),
         )
 
     # -- prefix sharing / copy-on-write / parallel generation ----------------------
@@ -640,6 +685,7 @@ class LayoutPaged(LayoutMapping):
             self.num_pages,
             self.shared_pages,
             self.pos_offset,
+            host_pages=self.host_pages,
         )
 
     def fork_group(self, seq: int, n: int,
@@ -682,6 +728,7 @@ class LayoutPaged(LayoutMapping):
             self.num_pages,
             self.shared_pages,
             self.pos_offset,
+            host_pages=self.host_pages,
         )
 
     def cow_slice(self, seq: int, logical_page: int, new_page: int) -> "LayoutPaged":
@@ -705,6 +752,9 @@ class LayoutPaged(LayoutMapping):
         return LayoutPaged(
             self.extents, table, self.page_size, self.num_pages, shared,
             self.pos_offset,
+            # the fresh CoW target is HBM by construction (cow copies through
+            # the device pool); the donor keeps whatever residency it had
+            host_pages=tuple(p for p in self.host_pages if p != new_page),
         )
 
 

@@ -37,6 +37,7 @@ against f32 pages; ``stats()`` reports them.
 from __future__ import annotations
 
 import functools
+import time
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -83,10 +84,251 @@ def _patch_slot(tables, lens, patch):
 _patch_slot = jax.jit(_patch_slot, donate_argnums=(0, 1))
 
 
+def _gather_pages(pool, idx):
+    """Stack the given physical pages out of a pool pytree, page-major — the
+    demotion gather (ONE batched device op per pool per migration event; the
+    same tree path as _copy_page, so quantized {q, scale} leaves ride along
+    and a page's scales travel with its bytes)."""
+    return jax.tree.map(lambda a: a[:, idx], pool)
+
+
+_gather_pages = jax.jit(_gather_pages)
+
+
+def _adopt_pages(pool, staged, idx):
+    """Scatter ``staged`` (host-promoted) pages into the pool at page ids
+    ``idx`` — the promotion scatter, donated in place. Callers pad ``idx`` to a
+    power-of-two bucket with the reserved null page 0 (whose content is never
+    read unmasked), so migrations of any size share O(log) compiles."""
+    return jax.tree.map(lambda a, s: a.at[:, idx].set(s), pool, staged)
+
+
+_adopt_pages = jax.jit(_adopt_pages, donate_argnums=(0,))
+
+
+def _pad_bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class TierManager:
+    """The host-RAM page tier behind the device pool (ROADMAP item 3): a
+    second-level, CONTENT-KEYED prefix index whose pages live in host memory.
+
+    The mdspan framing: HBM and host RAM are two memory spaces behind the
+    accessor axis (core/accessors.py §"accessors as memory spaces"), and the
+    block table is the indirection that makes migration invisible — a page's
+    id, its chain key, and every offset that reaches it are space-blind, so
+    moving its bytes is pure policy. This class IS that policy:
+
+      - DEMOTION (preemption as swap): a preempted / finished-but-retained
+        slot's complete pages are copied host-side under their page-hash chain
+        keys BEFORE the device pages free. Write-back-free for clean pages: a
+        key already host-resident skips the copy (the host bytes are still
+        exact — pages are immutable once published; CoW replaces, never
+        rewrites).
+      - PROMOTION (resume as prefetch): ``PagedKVCache.allocate`` extends its
+        device-index match with ``match_run`` over this index; hits are copied
+        into freshly-popped device pages at admission, so a resumed session's
+        first decode hits warm HBM pages instead of recomputing prefill.
+      - EVICTION: expired retained pages first (``retain_finished_s``
+        deadlines), then LRU by last-touch tick. Host pages carry no refcounts
+        — they are cache entries, safe to drop at any time (the fallback is
+        today's free-and-recompute path, token-exact by construction).
+      - BUDGET: ``begin_step`` re-arms a per-step migration allowance
+        (demote + promote pages both draw from it); overflow truncates the
+        TAIL of a run, and a shorter warm prefix is still a valid prefix by
+        the chain-key semantics.
+
+    Transfers move whole page-major pytrees (``_gather_pages`` /
+    ``_adopt_pages`` + one ``jax.device_get`` / ``jnp.asarray`` upload per
+    event), so int8/int4 pages round-trip bit-identically, scales included.
+    Host pools are lazily allocated numpy mirrors of the device pools — a
+    tier that never demotes costs no host RAM and no device work at all.
+    """
+
+    def __init__(self, cache: "PagedKVCache", host_pages: int,
+                 budget_pages_per_step: int = 0):
+        if host_pages <= 0:
+            raise ValueError("TierManager needs host_pages >= 1")
+        self.cache = cache
+        self.host_pages = host_pages
+        self.budget_pages = int(budget_pages_per_step)
+        self._pools = None  # lazy numpy mirrors of cache.pools, page axis 1
+        self._free: deque = deque(range(host_pages))
+        self._index: Dict[tuple, int] = {}  # chain key -> host page
+        self._key_of: Dict[int, tuple] = {}  # host page -> chain key
+        self._tick = 0
+        self._touch: Dict[int, int] = {}  # host page -> last-use tick (LRU)
+        self._expiry: Dict[int, float] = {}  # host page -> retention deadline
+        self._budget_left = self.budget_pages or (1 << 30)
+        # counters (PagedKVCache.stats merges these into every snapshot)
+        self.swap_out_pages = 0
+        self.swap_out_elided = 0  # demotions satisfied by existing residency
+        self.swap_in_pages = 0
+        self.prefetch_hits = 0
+        self.evictions = 0
+
+    @property
+    def resident(self) -> int:
+        return len(self._index)
+
+    @property
+    def budget_left(self) -> int:
+        return self._budget_left
+
+    def begin_step(self) -> None:
+        """Re-arm the per-step migration budget (engine calls this once per
+        step; with budget 0 the allowance is effectively unlimited)."""
+        self._budget_left = self.budget_pages or (1 << 30)
+
+    def _ensure_pools(self) -> None:
+        if self._pools is None:
+            self._pools = [
+                jax.tree.map(
+                    lambda a: np.zeros(
+                        (a.shape[0], self.host_pages) + a.shape[2:], a.dtype
+                    ),
+                    pool,
+                )
+                for pool in self.cache.pools
+            ]
+
+    def match_run(self, chain, start: int) -> int:
+        """Length of the host-resident run extending ``chain[start:]`` — the
+        second-level prefix match allocate consults after the device index."""
+        n = 0
+        for key in chain[start:]:
+            if key not in self._index:
+                break
+            n += 1
+        return n
+
+    def _drop(self, hp: int) -> None:
+        key = self._key_of.pop(hp, None)
+        if key is not None:
+            self._index.pop(key, None)
+        self._expiry.pop(hp, None)
+        self._touch.pop(hp, None)
+        self._free.append(hp)
+
+    def _evict_one(self) -> bool:
+        """Free one host page: expired retained pages first, then global LRU."""
+        if not self._key_of:
+            return False
+        now = time.monotonic()
+        expired = [
+            p for p in self._key_of
+            if self._expiry.get(p, float("inf")) <= now
+        ]
+        pool = expired or list(self._key_of)
+        victim = min(pool, key=lambda p: self._touch.get(p, 0))
+        self._drop(victim)
+        self.evictions += 1
+        tr = self.cache.trace
+        if tr is not None:
+            tr.instant("tier_evict", -1, expired=bool(expired),
+                       resident=len(self._index))
+        return True
+
+    def release(self, chain) -> int:
+        """Drop residency for a context's keys (request-failure paths): a
+        request that can never resume must not orphan host pages until LRU
+        pressure happens to find them."""
+        n = 0
+        for key in chain:
+            hp = self._index.get(key)
+            if hp is not None:
+                self._drop(hp)
+                n += 1
+        return n
+
+    def demote(self, keys, dev_pages, retain_s: float = 0.0) -> int:
+        """Copy device pages host-side under their chain keys (swap-out).
+        Skips already-resident keys (write-back-free), truncates to the
+        per-step budget, and evicts to make room; returns pages copied. Must
+        run while the device pages still hold their content (i.e. BEFORE the
+        slot frees them)."""
+        todo = [
+            (k, p) for k, p in zip(keys, dev_pages) if k not in self._index
+        ]
+        self.swap_out_elided += len(keys) - len(todo)
+        if len(todo) > self._budget_left:
+            todo = todo[: self._budget_left]
+        while todo and len(self._free) < len(todo):
+            if not self._evict_one():
+                todo = todo[: len(self._free)]
+        if not todo:
+            return 0
+        self._ensure_pools()
+        hps = [self._free.popleft() for _ in todo]
+        self._tick += 1
+        for (key, _), hp in zip(todo, hps):
+            self._index[key] = hp
+            self._key_of[hp] = key
+            self._touch[hp] = self._tick
+            if retain_s > 0:
+                self._expiry[hp] = time.monotonic() + retain_s
+        n = len(todo)
+        pad = _pad_bucket(n)
+        dps = np.zeros((pad,), np.int32)  # pad gathers read the null page
+        dps[:n] = [p for _, p in todo]
+        idx_h = np.asarray(hps)
+        for host, pool in zip(self._pools, self.cache.pools):
+            staged = jax.device_get(_gather_pages(pool, jnp.asarray(dps)))
+            for h_leaf, s_leaf in zip(
+                jax.tree.leaves(host), jax.tree.leaves(staged)
+            ):
+                h_leaf[:, idx_h] = s_leaf[:, :n]
+        self._budget_left -= n
+        self.swap_out_pages += n
+        return n
+
+    def promote(self, keys, dst_pages) -> int:
+        """Copy host-resident pages into freshly-popped device pages (swap-in;
+        the prefetch-on-admission path). The host copies STAY resident — pages
+        are immutable once published, so a later demotion of the same content
+        is write-back-free. Caller owns ``dst_pages`` and caps by
+        ``budget_left``."""
+        n = len(keys)
+        if n == 0:
+            return 0
+        hps = [self._index[k] for k in keys]
+        self._tick += 1
+        for hp in hps:
+            self._touch[hp] = self._tick
+        pad = _pad_bucket(n)
+        dst = np.zeros((pad,), np.int32)  # pad scatters hit the null page
+        dst[:n] = dst_pages
+        idx_h = np.zeros((pad,), np.int64)
+        idx_h[:n] = hps
+        new_pools = []
+        for host, pool in zip(self._pools, self.cache.pools):
+            staged = jax.tree.map(lambda h: jnp.asarray(h[:, idx_h]), host)
+            new_pools.append(_adopt_pages(pool, staged, jnp.asarray(dst)))
+        self.cache.pools = new_pools
+        self._budget_left -= n
+        self.swap_in_pages += n
+        self.prefetch_hits += n
+        return n
+
+    def reset_counters(self) -> None:
+        """Zero the migration counters WITHOUT flushing residency — bench
+        rehearsals reset metrics but a warm tier must stay warm."""
+        self.swap_out_pages = 0
+        self.swap_out_elided = 0
+        self.swap_in_pages = 0
+        self.prefetch_hits = 0
+        self.evictions = 0
+
+
 class PagedKVCache:
     def __init__(self, model, *, num_pages: int, page_size: int, max_batch: int,
                  max_pages_per_seq: int, prefix_sharing: bool = True,
-                 kv_dtype: str = "f32"):
+                 kv_dtype: str = "f32", host_pool_pages: int = 0,
+                 swap_budget_pages_per_step: int = 0):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
         if kv_dtype not in KV_DTYPES:
@@ -148,6 +390,23 @@ class PagedKVCache:
         # every page BEHIND the chunk cursor is final and adoptable)
         self._deferred: Dict[int, List[tuple]] = {}
         self._published: Dict[int, int] = {}  # deferred keys already registered
+        # same-step twin adoption (per-page written frontier): chain key ->
+        # (donor slot, page index) for every deferred-but-unpublished key, so a
+        # co-admitted twin can adopt a donor's pages BEFORE they are written
+        # and skip the duplicate prefill compute. The adopter is gated out of
+        # chunk dispatch until the donor's frontier covers its adopted pages
+        # (frontier_ready); if the donor dies first the adopter lands in
+        # _broken and the engine preempts it back to the queue.
+        self._inflight: Dict[tuple, Tuple[int, int]] = {}
+        self._frontier_deps: Dict[int, Tuple[int, int]] = {}  # adopter -> (donor, pages needed)
+        self._broken: set = set()
+        # host page tier (ROADMAP item 3): preemption as swap, resume as
+        # prefetch. None when host_pool_pages == 0 — every tier touchpoint
+        # below is `is None`-guarded, the PR 6 zero-overhead discipline.
+        self.tier = (
+            TierManager(self, host_pool_pages, swap_budget_pages_per_step)
+            if host_pool_pages > 0 else None
+        )
         # stats (benchmarks read these through ServeEngine.metrics)
         self.pages_shared_total = 0
         self.cow_copies = 0
@@ -229,31 +488,79 @@ class PagedKVCache:
         if chain is None or not self.prefix_sharing:
             chain = self._chain(tokens)
         shared = self._match_prefix(chain)[:n_pages]
-        n_new = n_pages - len(shared)
+        base = len(shared)
+        # second-level match: extend the device-index run with host-resident
+        # pages (prefetch-on-admission). Promoted pages pop from the free list
+        # like fresh ones — `fits` counts HBM only — but arrive pre-written.
+        promote_keys: List[tuple] = []
+        if self.tier is not None and base < n_pages:
+            run = self.tier.match_run(chain, base)
+            k = min(run, n_pages - base, self.tier.budget_left)
+            promote_keys = list(chain[base : base + k])
+        # same-step twin adoption: extend the warm run further with a donor's
+        # in-flight (allocated, not yet published) pages — incref, no pop.
+        # Only a single donor, only a contiguous run at matching page indices,
+        # and only for deferred (chunked) allocations that can be gated.
+        pos = base + len(promote_keys)
+        donor: Optional[int] = None
+        twin_pages: List[int] = []
+        if not publish and self.prefix_sharing:
+            while pos + len(twin_pages) < min(len(chain), n_pages):
+                ent = self._inflight.get(chain[pos + len(twin_pages)])
+                if ent is None:
+                    break
+                d_slot, d_idx = ent
+                if (d_idx != pos + len(twin_pages)
+                        or (donor is not None and d_slot != donor)
+                        or d_slot == slot):
+                    break
+                donor = d_slot
+                twin_pages.append(self.pages_of[d_slot][d_idx])
+        n_new = n_pages - base - len(twin_pages)
         if n_new > len(self._free):
             raise RuntimeError(
                 f"pool exhausted: want {n_new} new pages "
-                f"({n_pages} total, {len(shared)} shared), free {len(self._free)}"
+                f"({n_pages} total, {base} shared), free {len(self._free)}"
             )
         for p in shared:
             self.ref[p] += 1
-        self.pages_shared_total += len(shared)
-        pages = shared + [self._take_free() for _ in range(n_new)]
+        for p in twin_pages:
+            self.ref[p] += 1
+        self.pages_shared_total += len(shared) + len(twin_pages)
+        fresh = [self._take_free() for _ in range(n_new)]
+        k = len(promote_keys)
+        pages = shared + fresh[:k] + twin_pages + fresh[k:]
+        if promote_keys:
+            self.tier.promote(promote_keys, fresh[:k])
+            # promoted content is FINAL — register even for deferred (chunked)
+            # allocations so later arrivals share it immediately
+            self._register(promote_keys, pages, base)
+            if self.trace is not None:
+                self.trace.instant("prefetch", slot, pages=k)
+        adopted = base + k + len(twin_pages)
+        if twin_pages:
+            self._frontier_deps[slot] = (donor, pos + len(twin_pages))
+            if self.trace is not None:
+                self.trace.instant(
+                    "twin_adopt", slot, donor=donor, pages=len(twin_pages),
+                )
         # register the fresh content-bearing pages (chain covers exactly the
         # pages prefill fills; the +1 decode-headroom tail has no content yet)
-        fresh_keys = list(chain[len(shared) : min(len(chain), n_pages)])
+        fresh_keys = list(chain[adopted : min(len(chain), n_pages)])
         if publish:
-            self._register(fresh_keys, pages, len(shared))
+            self._register(fresh_keys, pages, adopted)
         else:
             self._deferred[slot] = fresh_keys
+            for j, key in enumerate(fresh_keys):
+                self._inflight.setdefault(key, (slot, adopted + j))
         self.pages_of[slot] = pages
-        self._shared_upto[slot] = len(shared)
+        self._shared_upto[slot] = adopted
         self.tables[slot, :] = 0
         self.tables[slot, : len(pages)] = pages
         self._dirty_slots.add(slot)
         if self.trace is not None:
             self.trace.instant(
-                "alloc", slot, pages=n_pages, shared=len(shared),
+                "alloc", slot, pages=n_pages, shared=adopted,
                 free=len(self._free),
             )
         return pages
@@ -284,11 +591,22 @@ class PagedKVCache:
         )
         if end > done:
             self._register(keys[done:end], self.pages_of[slot], start + done)
+            # published keys are ordinary index entries now — twins arriving
+            # later adopt via _match_prefix, not the in-flight map
+            for key in keys[done:end]:
+                ent = self._inflight.get(key)
+                if ent is not None and ent[0] == slot:
+                    self._inflight.pop(key)
         if end >= len(keys):
             self._deferred.pop(slot, None)
             self._published.pop(slot, None)
         elif end > done:
             self._published[slot] = end
+        # release twin adopters whose adopted run the frontier now covers
+        final = start + end
+        for adopter, (d_slot, need) in list(self._frontier_deps.items()):
+            if d_slot == slot and need <= final:
+                self._frontier_deps.pop(adopter)
 
     def adopted_pages(self, slot: int) -> int:
         """Pages of this slot adopted from the prefix index at allocation (the
@@ -342,12 +660,96 @@ class PagedKVCache:
             self.trace.instant("free_slot", slot, pages=len(released))
         for p in released:
             self._release_page(p)
+        self._drop_inflight(slot)
         self._shared_upto.pop(slot, None)
         self._deferred.pop(slot, None)
         self._published.pop(slot, None)
         self.tables[slot, :] = 0
         self.lens[slot] = 0
         self._dirty_slots.add(slot)
+
+    def _drop_inflight(self, slot: int) -> None:
+        """Unwind the twin bookkeeping for a dying slot: its own unpublished
+        in-flight entries leave the map, and any adopter still waiting on it
+        as a donor is marked broken (its adopted pages hold garbage — the
+        engine preempts it back to the queue for a clean re-admit)."""
+        for key in self._deferred.get(slot, []):
+            ent = self._inflight.get(key)
+            if ent is not None and ent[0] == slot:
+                self._inflight.pop(key)
+        for adopter, (d_slot, _) in list(self._frontier_deps.items()):
+            if d_slot == slot:
+                self._frontier_deps.pop(adopter)
+                self._broken.add(adopter)
+        self._frontier_deps.pop(slot, None)
+        self._broken.discard(slot)
+
+    def frontier_ready(self, slot: int) -> bool:
+        """False while the slot waits on a twin donor's written frontier —
+        chunk dispatch must skip it (its adopted pages are not yet real)."""
+        return slot not in self._frontier_deps
+
+    def take_broken(self) -> List[int]:
+        """Slots whose twin donor died before covering their adopted run;
+        cleared on read. The engine preempts these back to the queue."""
+        out = sorted(self._broken)
+        self._broken.clear()
+        return out
+
+    # -- host tier ---------------------------------------------------------------
+    def demote_slot(self, slot: int, chain, retain_s: float = 0.0) -> int:
+        """Swap a slot's COMPLETE pages out to the host tier before freeing
+        them (preemption as swap / finished-session retention). Only full
+        pages demote — a partial page holds fewer tokens than its chain key
+        claims — and a twin adopter with an unsatisfied frontier holds garbage
+        pages, so it never demotes. Must run BEFORE free_slot (the device
+        pages must still hold their content; device_get syncs the stream)."""
+        if self.tier is None or not chain or slot in self._frontier_deps:
+            return 0
+        pages = self.pages_of.get(slot)
+        if not pages:
+            return 0
+        n = min(int(self.lens[slot]) // self.page_size, len(pages), len(chain))
+        if n <= 0:
+            return 0
+        moved = self.tier.demote(chain[:n], pages[:n], retain_s=retain_s)
+        if moved and self.trace is not None:
+            self.trace.instant(
+                "swap_out", slot, pages=moved,
+                host_resident=self.tier.resident,
+            )
+        return moved
+
+    def release_host(self, chain) -> int:
+        """Drop host-tier residency for a context that can never resume
+        (request-failure paths — no orphaned host pages)."""
+        if self.tier is None or not chain:
+            return 0
+        return self.tier.release(chain)
+
+    def check_conservation(self) -> None:
+        """Allocator conservation invariants, checked on every stats() pull:
+        refcount mass equals slot ownership, live + free covers the pool, and
+        the host tier's free list + index partition its pages exactly."""
+        owned = sum(len(v) for v in self.pages_of.values())
+        total_ref = int(self.ref.sum())
+        assert total_ref == owned, (
+            f"refcount mass {total_ref} != owned pages {owned}"
+        )
+        live = sum(1 for p in range(1, self.num_pages) if self.ref[p] > 0)
+        assert live + len(self._free) == self.num_pages - 1, (
+            f"live {live} + free {len(self._free)} != pool {self.num_pages - 1}"
+        )
+        if self.tier is not None:
+            t = self.tier
+            assert len(t._free) + len(t._index) == t.host_pages, (
+                f"host free {len(t._free)} + resident {len(t._index)} "
+                f"!= host pool {t.host_pages}"
+            )
+            for key, hp in t._index.items():
+                assert t._key_of.get(hp) == key, (
+                    f"host page {hp} index/reverse-map mismatch"
+                )
 
     # -- parallel generation: layout forks ---------------------------------------
     def fork_slot(self, src: int, dst: int, n_tokens: int) -> List[int]:
@@ -414,6 +816,7 @@ class PagedKVCache:
         for c, p in live.items():
             pages, length = snap[p]
             self.pages_of[c] = list(pages)
+            self._drop_inflight(c)
             self._shared_upto.pop(c, None)
             self._deferred.pop(c, None)
             self._published.pop(c, None)
@@ -581,7 +984,8 @@ class PagedKVCache:
 
     # -- stats -------------------------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        return {
+        self.check_conservation()
+        out = {
             "peak_pages_in_use": self.peak_pages_in_use,
             "pages_shared": self.pages_shared_total,
             "cow_copies": self.cow_copies,
@@ -589,6 +993,17 @@ class PagedKVCache:
             "beam_reorders": self.beam_reorders,
             "kv_pool_bytes": kv_pool_bytes(self.pools),
         }
+        if self.tier is not None:
+            out.update(
+                swap_out_pages=self.tier.swap_out_pages,
+                swap_out_elided=self.tier.swap_out_elided,
+                swap_in_pages=self.tier.swap_in_pages,
+                prefetch_hits=self.tier.prefetch_hits,
+                evictions=self.tier.evictions,
+                host_pages_resident=self.tier.resident,
+                host_pool_pages=self.tier.host_pages,
+            )
+        return out
 
     def reset_stats(self) -> None:
         self.pages_shared_total = 0
@@ -596,3 +1011,5 @@ class PagedKVCache:
         self.branch_forks = 0
         self.beam_reorders = 0
         self.peak_pages_in_use = self.pages_in_use
+        if self.tier is not None:
+            self.tier.reset_counters()

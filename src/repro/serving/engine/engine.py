@@ -199,6 +199,20 @@ class EngineConfig:
     sized_max_len: int = 0  # the max_len sized_for() was called with (0 when
     # the pool was sized by hand); lets autotune re-derive the pool extents
     # when page_size itself is deferred to the tuner
+    host_pool_pages: int = 0  # host-RAM page tier capacity (README
+    # "Hierarchical KV"). 0 = no tier (identical engine to before the
+    # feature); > 0 turns preemption into swap-out and re-admission into
+    # prefetch: demoted pages live host-side under their prefix-chain keys,
+    # so resumable-session capacity scales with host RAM, not HBM. Requires
+    # prefix_sharing (the tier is a content-keyed index)
+    swap_budget_pages_per_step: int = 0  # per-step HBM<->host migration
+    # allowance, shared by demotions and promotions (0 = unlimited). Keeps
+    # swap traffic from starving a step; overflow truncates a run's TAIL, and
+    # a shorter warm prefix is still a valid prefix
+    retain_finished_s: float = 0.0  # on finish, demote a request's pages to
+    # the host tier and retain them for this many seconds (session resume: a
+    # follow-up sharing the context prefetches instead of re-prefilling).
+    # Retained pages are evicted deadline-first, then LRU; 0 = don't retain
 
     @classmethod
     def sized_for(cls, max_len: int, *, page_size: int, max_batch: int,
@@ -290,6 +304,11 @@ class ServeEngine:
             )
             config = _apply_tuning(config, self.tuned)
         self.config = config
+        if config.host_pool_pages and not config.prefix_sharing:
+            raise ValueError(
+                "host_pool_pages requires prefix_sharing: the host tier is a "
+                "content-keyed index over the same page-hash chains"
+            )
         self.cache = PagedKVCache(
             model,
             num_pages=config.num_pages,
@@ -298,6 +317,8 @@ class ServeEngine:
             max_pages_per_seq=config.max_pages_per_seq,
             prefix_sharing=config.prefix_sharing,
             kv_dtype=config.kv_dtype,
+            host_pool_pages=config.host_pool_pages,
+            swap_budget_pages_per_step=config.swap_budget_pages_per_step,
         )
         self.scheduler = Scheduler(
             self.cache, SchedulerConfig(config.max_batch, config.watermark_pages)
@@ -927,7 +948,10 @@ class ServeEngine:
         # chunk-cursor holders only: await_fork and beam-hold slots are
         # PREFILLING (masked from decode) but have no chunk to advance
         prefilling = [
-            s for s in sorted(running) if running[s].chunk_cursor is not None
+            s for s in sorted(running)
+            if running[s].chunk_cursor is not None
+            and self.cache.frontier_ready(s)  # twin adopters wait on the
+            # donor's written frontier — their adopted pages are not real yet
         ]
         if not prefilling:
             return
@@ -1392,6 +1416,16 @@ class ServeEngine:
                         "finish", slot, rid=state.request.rid, reason=reason,
                         generated=len(state.generated), branch=state.branch,
                     )
+                # session retention: demote a cleanly-finished request's pages
+                # to the host tier with an eviction deadline, so a follow-up
+                # sharing this context prefetches instead of re-prefilling
+                if (self.cache.tier is not None
+                        and self.config.retain_finished_s > 0
+                        and state.error is None):
+                    self.cache.demote_slot(
+                        slot, state.hash_chain(self.cache.page_size),
+                        retain_s=self.config.retain_finished_s,
+                    )
                 # freeing this branch's pages decrefs — never frees — the
                 # pages its still-running siblings alias (cache.free_slot),
                 # so one branch's EOS neither stalls nor corrupts the rest
@@ -1418,6 +1452,14 @@ class ServeEngine:
         self._t0 = time.perf_counter()
         while self._pending or self.queue or self.scheduler.running:
             now = time.perf_counter() - self._t0
+            if self.cache.tier is not None:
+                self.cache.tier.begin_step()
+            # broken twins: a slot whose twin donor died before covering its
+            # adopted pages holds garbage — preempt it back to the queue for a
+            # clean re-admit (its pages never demote; they were never written)
+            for slot in self.cache.take_broken():
+                if slot in self.scheduler.running:
+                    self.scheduler.preempt_slot(slot, self.queue)
             while self._pending and self._pending[0].request.arrival_time <= now:
                 state = self._pending.pop(0)
                 if self.trace is not None:
@@ -1425,6 +1467,12 @@ class ServeEngine:
                 self.queue.push(state)
             for state in self.scheduler.reject_impossible(self.queue):
                 state.finish_time = time.perf_counter() - self._t0
+                # a rejected request can never resume: drop any host-tier
+                # residency its context holds (no orphaned host pages)
+                if self.cache.tier is not None:
+                    self.cache.release_host(
+                        state.hash_chain(self.cache.page_size)
+                    )
                 if state.group is not None:
                     for st in state.group.branches:
                         if st.finish_reason is None:  # keep earlier finishes

@@ -16,8 +16,11 @@ Each engine step the scheduler:
      requests making progress, so total recompute work is bounded); preempted
      sequences release all pages (shared ones survive with their co-owners) and
      requeue at the FRONT with their generated tokens kept — on re-admission
-     the full context is re-prefilled (recompute, not swap) and may re-share
-     any of its prefix pages that stayed alive.
+     the full context is re-prefilled and may re-share any of its prefix pages
+     that stayed alive. With a host tier configured
+     (EngineConfig.host_pool_pages) preemption becomes SWAP instead: complete
+     pages demote to host RAM before freeing, and re-admission promotes them
+     back (prefetch) so only the tail is recomputed.
 """
 from __future__ import annotations
 
@@ -215,8 +218,41 @@ class Scheduler:
             )
         for st in members:
             if st.slot is not None:
+                # preemption as swap: demote the victim's complete pages to
+                # the host tier (no-op without one) BEFORE freeing, so
+                # re-admission prefetches instead of recomputing prefill
+                self.cache.demote_slot(st.slot, self._chain_of(st))
                 self.cache.free_slot(st.slot)
             st.release()  # drops the slot AND any mid-prefill chunk cursor
+        head = state if group is None else group.primary
+        head.n_preemptions += 1
+        queue.requeue_front(head)
+        return head
+
+    def preempt_slot(self, slot: int, queue: RequestQueue) -> Optional[RequestState]:
+        """Targeted eviction of ONE specific slot (the broken-twin recovery
+        path: its donor died before covering its adopted pages, so those
+        pages hold garbage). Same whole-group semantics as _preempt_one but
+        NEVER demotes — garbage pages must not enter the host tier."""
+        if slot not in self.running:
+            return None
+        state = self.running.pop(slot)
+        group = state.group
+        members = [state]
+        if group is not None:
+            for s in [s for s, st in list(self.running.items()) if st.group is group]:
+                members.append(self.running.pop(s))
+            group.pending_rows.clear()
+        if self.trace is not None:
+            self.trace.instant(
+                "preempt", slot, rid=state.request.rid,
+                n_preemptions=state.n_preemptions + 1, keep_slot=-1,
+                group_size=len(members),
+            )
+        for st in members:
+            if st.slot is not None:
+                self.cache.free_slot(st.slot)
+            st.release()
         head = state if group is None else group.primary
         head.n_preemptions += 1
         queue.requeue_front(head)

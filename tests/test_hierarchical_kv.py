@@ -1,0 +1,376 @@
+"""Hierarchical KV: the host-memory page tier behind the accessor axis.
+
+Core laws first — HostTierAccessor / LayoutPaged residency are the formal
+model (space routing is total, migration never moves an offset) — then the
+serving realization: TierManager demotion/promotion through the engine
+(preemption as swap, session resume as prefetch), the tier edge cases the
+satellite list names, and the same-step twin prefill sharing protocol.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BasicAccessor, Extents, HostTierAccessor, LayoutPaged, MemorySpace,
+)
+from repro.models import build_model, get_config
+from repro.serving import GenerationParams
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine.request import page_hash_chain
+
+
+# =====================================================================================
+# core laws — the accessor/layout model of residency
+# =====================================================================================
+def test_host_tier_accessor_routes_by_page_and_decays_merged():
+    acc = HostTierAccessor(BasicAccessor(), page_elems=4, host_pages=(1, 3))
+    span = 16  # 4 pages of 4 elements
+    assert acc.space_for_offset(0) == MemorySpace.HBM
+    assert acc.space_for_offset(5) == MemorySpace.HOST
+    assert acc.space_for_offset(15) == MemorySpace.HOST
+    dense = jnp.arange(span, dtype=jnp.float32)
+    buffers = acc.from_codomain(dense)
+    # from_codomain encodes into HBM; host pages read cold zeros until stores
+    # route values there
+    idx = jnp.arange(span)
+    got = acc.access(buffers, idx)
+    host_mask = np.isin(np.arange(span) // 4, [1, 3])
+    np.testing.assert_array_equal(np.asarray(got)[~host_mask],
+                                  np.asarray(dense)[~host_mask])
+    np.testing.assert_array_equal(np.asarray(got)[host_mask], 0.0)
+    # a full-span store lands every element in its page's space; decay merges
+    buffers = acc.store(buffers, idx, dense * 2)
+    np.testing.assert_array_equal(np.asarray(acc.decay(buffers)),
+                                  np.asarray(dense) * 2)
+
+
+def test_host_tier_accessor_migrate_is_pure_copy_plus_residency_flip():
+    acc = HostTierAccessor(BasicAccessor(), page_elems=4, host_pages=())
+    dense = jnp.arange(8, dtype=jnp.float32)  # 2 pages
+    buffers = acc.from_codomain(dense)
+    buffers, acc2 = acc.migrate(buffers, 1, MemorySpace.HOST)
+    assert acc2.host_pages == (1,)
+    assert acc2.space_for_offset(4) == MemorySpace.HOST
+    # offsets unchanged: the merged view still reads the same codomain
+    np.testing.assert_array_equal(np.asarray(acc2.decay(buffers)),
+                                  np.asarray(dense))
+    # round-trip back to HBM restores the original accessor's routing
+    buffers, acc3 = acc2.migrate(buffers, 1, MemorySpace.HBM)
+    assert acc3.host_pages == ()
+    np.testing.assert_array_equal(np.asarray(acc3.decay(buffers)),
+                                  np.asarray(dense))
+
+
+def test_layout_paged_space_queries_total_and_migration_invariant():
+    H, D, ps = 2, 4, 4
+    lp = LayoutPaged(
+        Extents.fully_dynamic(2, H, 8, D), ((5, 2), (7, 1)), ps, 9,
+        host_pages=(2, 7),
+    )
+    # total over the domain: every index answers a space
+    assert lp.space_for(0, 0, 0, 0) == MemorySpace.HBM   # page 5
+    assert lp.space_for(0, 1, 5, 3) == MemorySpace.HOST  # page 2
+    assert lp.space_for(1, 0, 1, 0) == MemorySpace.HOST  # page 7
+    # the offset query agrees with the index query through __call__
+    for idx in [(0, 0, 0, 0), (0, 1, 5, 3), (1, 0, 1, 0), (1, 1, 6, 2)]:
+        assert lp.space_for_offset(lp(*idx)) == lp.space_for(*idx)
+    with pytest.raises(ValueError):
+        lp.space_for_offset(lp.required_span_size())
+    # residency threads through the layout algebra without touching offsets
+    forked = lp.fork(0, ())
+    assert forked.host_pages == lp.host_pages
+    assert [forked(0, 0, p, 0) for p in range(8)] == [
+        lp(0, 0, p, 0) for p in range(8)
+    ]
+
+
+# =====================================================================================
+# serving — the tier through the engine
+# =====================================================================================
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b", smoke=True), dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def _reqs(prompts, n_gen):
+    return [
+        Request(rid=i, prompt=list(p), params=GenerationParams(max_new_tokens=n_gen))
+        for i, p in enumerate(prompts)
+    ]
+
+
+def test_preemption_swaps_and_resume_prefetches_token_exact(small_model):
+    """Tight pool + host tier: preemption demotes, re-admission promotes, and
+    outputs match an unconstrained tier-less engine exactly."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(3)]
+    big = ServeEngine(model, params, EngineConfig(
+        num_pages=64, page_size=4, max_batch=3, max_pages_per_seq=6))
+    ref = big.run(_reqs(prompts, 10))
+    tiered = ServeEngine(model, params, EngineConfig(
+        num_pages=10, page_size=4, max_batch=3, max_pages_per_seq=6,
+        host_pool_pages=32))
+    res = tiered.run(_reqs(prompts, 10))
+    m = tiered.metrics()
+    assert m["preemptions"] >= 1
+    assert m["swap_out_pages"] > 0
+    assert m["prefetch_hits"] > 0
+    assert m["swap_in_pages"] == m["prefetch_hits"]
+    for i in range(len(prompts)):
+        assert res[i].generated == ref[i].generated
+
+
+def test_zero_host_headroom_falls_back_to_recompute_token_exact(small_model):
+    """A starved tier (or none) degrades to the seed behaviour — free and
+    recompute — with identical tokens. host_pool_pages=1 forces constant
+    eviction; every promotion miss recomputes."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=8).tolist() for _ in range(3)]
+    base = ServeEngine(model, params, EngineConfig(
+        num_pages=10, page_size=4, max_batch=3, max_pages_per_seq=6))
+    ref = base.run(_reqs(prompts, 10))
+    starved = ServeEngine(model, params, EngineConfig(
+        num_pages=10, page_size=4, max_batch=3, max_pages_per_seq=6,
+        host_pool_pages=1))
+    res = starved.run(_reqs(prompts, 10))
+    m = starved.metrics()
+    assert m["preemptions"] >= 1
+    assert m["host_pages_resident"] <= 1
+    for i in range(len(prompts)):
+        assert res[i].generated == ref[i].generated
+
+
+def test_prefetch_preempt_resume_deterministic_and_mirror_matches(small_model):
+    """Churn loop — retention, resume-prefetch, preemption mid-flight — run
+    twice end to end: identical outputs both times, and the device-resident
+    table/len mirrors equal the host allocator state afterwards."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(9)
+    session = rng.integers(0, cfg.vocab, size=16).tolist()
+    prompts = [session + rng.integers(0, cfg.vocab, size=k).tolist()
+               for k in (2, 3, 4)]
+
+    def run_once():
+        eng = ServeEngine(model, params, EngineConfig(
+            num_pages=14, page_size=4, max_batch=3, max_pages_per_seq=8,
+            host_pool_pages=32, retain_finished_s=300.0))
+        first = eng.run(_reqs([session], 4))
+        resumed = eng.run(_reqs(prompts, 6))
+        return eng, first, resumed
+
+    eng_a, first_a, res_a = run_once()
+    eng_b, first_b, res_b = run_once()
+    assert first_a[0].generated == first_b[0].generated
+    for i in range(len(prompts)):
+        assert res_a[i].generated == res_b[i].generated
+    m = eng_a.metrics()
+    assert m["prefetch_hits"] > 0
+    # mirror == allocator: the patched device tables/lens equal host state
+    tables_dev, lens_dev = eng_a.cache.device_state()
+    np.testing.assert_array_equal(np.asarray(tables_dev), eng_a.cache.tables)
+    np.testing.assert_array_equal(np.asarray(lens_dev), eng_a.cache.lens)
+
+
+def test_cow_on_host_promoted_shared_page(small_model):
+    """Resume twice from one retained session (unaligned extensions): both
+    resumers share the promoted pages plus a partial page, so decode appends
+    must CoW — and the host copies stay valid for a third resume after the
+    churn."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    session = rng.integers(0, cfg.vocab, size=12).tolist()  # 3 aligned pages
+    ext = session + [7, 8]  # partial 4th page -> CoW on first decode append
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=48, page_size=4, max_batch=3, max_pages_per_seq=8,
+        host_pool_pages=32, retain_finished_s=300.0))
+    eng.run(_reqs([session], 3))
+    assert eng.metrics()["host_pages_resident"] >= 3
+    res = eng.run([
+        Request(rid=10, prompt=list(ext), params=GenerationParams(max_new_tokens=5)),
+        Request(rid=11, prompt=list(ext), params=GenerationParams(max_new_tokens=5)),
+    ])
+    m = eng.metrics()
+    assert m["prefetch_hits"] >= 3
+    assert m["cow_copies"] >= 1
+    assert res[10].generated == res[11].generated
+    # third resume after CoW churn: the host tier still answers, exactly
+    res2 = eng.run([
+        Request(rid=12, prompt=list(ext), params=GenerationParams(max_new_tokens=5)),
+    ])
+    assert res2[12].generated == res[10].generated
+    oracle = ServeEngine(model, params, EngineConfig(
+        num_pages=48, page_size=4, max_batch=3, max_pages_per_seq=8))
+    ref = oracle.run([
+        Request(rid=10, prompt=list(ext), params=GenerationParams(max_new_tokens=5)),
+    ])
+    assert res[10].generated == ref[10].generated
+
+
+def test_int4_pages_round_trip_hbm_host_bit_identical(small_model):
+    """Demote -> free -> promote of int4 pages preserves every stored byte —
+    packed q AND per-(page, head) scales — because migration moves whole
+    page-major pytrees, never re-encoding."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=16, page_size=4, max_batch=2, max_pages_per_seq=6,
+        kv_dtype="int4", host_pool_pages=8))
+    cache = eng.cache
+    rng = np.random.default_rng(3)
+    tokens = rng.integers(0, cfg.vocab, size=12).tolist()
+    chain = page_hash_chain(tokens, cache.page_size)
+    pages = cache.allocate(0, 4, tokens=tokens)
+    # fill the slot's pages with distinctive bytes via the pool arrays
+    seed = [3]
+
+    def scribble(leaf):
+        arr = np.asarray(leaf).copy()
+        seed[0] += 1
+        r = np.random.default_rng(seed[0])
+        arr[:, pages] = r.integers(0, 100, size=arr[:, pages].shape).astype(arr.dtype)
+        return jnp.asarray(arr)
+
+    cache.pools = [jax.tree.map(scribble, pool) for pool in cache.pools]
+    snapshot = [
+        jax.tree.map(lambda l: np.asarray(l)[:, pages[:3]].copy(), pool)
+        for pool in cache.pools
+    ]
+    cache.set_len(0, 12)
+    assert cache.demote_slot(0, chain) == 3  # full pages only
+    cache.free_slot(0)
+    # wipe the freed device pages so the comparison can only pass via the tier
+    cache.pools = [
+        jax.tree.map(lambda l: l.at[:, pages[:3]].set(0), pool)
+        for pool in cache.pools
+    ]
+    new_pages = cache.allocate(1, 4, tokens=tokens, chain=chain)
+    assert cache.tier.prefetch_hits == 3
+    for pool, snap in zip(cache.pools, snapshot):
+        got = jax.tree.map(lambda l: np.asarray(l)[:, new_pages[:3]], pool)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(snap)):
+            np.testing.assert_array_equal(a, b)
+    cache.free_slot(1)
+    cache.check_conservation()
+
+
+def test_reject_impossible_releases_host_residency(small_model):
+    """A rejected request's context drops its host-tier residency (no
+    orphaned host pages), and the conservation invariant holds throughout."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    session = rng.integers(0, cfg.vocab, size=12).tolist()
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=8, page_size=4, max_batch=2, max_pages_per_seq=11,
+        host_pool_pages=16, retain_finished_s=300.0))
+    eng.run(_reqs([session], 3))
+    assert eng.metrics()["host_pages_resident"] >= 3
+    # the preemption-growth failure mode: a request servable at submit time
+    # whose context (prompt + generated) outgrew the pool while requeued —
+    # reject_impossible condemns it, and its host residency must go with it
+    doomed = session + rng.integers(0, cfg.vocab, size=12).tolist()  # 24 toks
+    eng.submit(Request(rid=99, prompt=doomed,
+                       params=GenerationParams(max_new_tokens=16)))
+    eng._pending[0].generated.extend(int(t) for t in
+                                     rng.integers(0, cfg.vocab, size=8))
+    res = eng.run()
+    assert res[99].error is not None
+    assert len(res[99].generated) == 8  # nothing generated past the requeue
+    assert eng.metrics()["host_pages_resident"] == 0
+    eng.cache.check_conservation()
+
+
+def test_conservation_check_catches_refcount_leak(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=8, page_size=4, max_batch=2, max_pages_per_seq=4))
+    cache = eng.cache
+    cache.allocate(0, 2, tokens=list(range(5)))
+    cache.check_conservation()  # clean state passes
+    cache.ref[cache.pages_of[0][0]] += 1  # simulate a leak
+    with pytest.raises(AssertionError):
+        cache.check_conservation()
+    cache.ref[cache.pages_of[0][0]] -= 1
+    cache.free_slot(0)
+    cache.check_conservation()
+
+
+# =====================================================================================
+# same-step twins — prefill sharing via the written frontier
+# =====================================================================================
+def test_same_step_twins_share_prefill_compute(small_model):
+    """Two identical prompts co-admitted in one step under chunked prefill:
+    the second adopts the first's in-flight pages (per-page written frontier)
+    instead of recomputing, and both outputs match the solo oracle."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab, size=24).tolist()
+    conf = EngineConfig(
+        num_pages=32, page_size=4, max_batch=2, max_pages_per_seq=9,
+        chunked_prefill=True, chunk_tokens=8)
+    solo = ServeEngine(model, params, conf)
+    ref = solo.run(_reqs([prompt], 5))
+    twin = ServeEngine(model, params, conf)
+    res = twin.run(_reqs([prompt, prompt], 5))
+    m = twin.metrics()
+    assert res[0].generated == res[1].generated == ref[0].generated
+    # the adopter skipped (almost) the whole prompt: computed tokens stay far
+    # below 2x the solo engine's
+    assert m["prefill_tokens_computed"] < 2 * solo.metrics()["prefill_tokens_computed"]
+    assert m["prefill_tokens_skipped"] >= 16
+
+
+def test_twin_donor_death_breaks_adopter_for_clean_readmit(small_model):
+    """Cache-level protocol: when the donor frees before its frontier covers
+    the adopter's run, the adopter lands in take_broken() and its garbage
+    pages never demote; a fresh allocation then proceeds normally."""
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=16, page_size=4, max_batch=3, max_pages_per_seq=6,
+        chunked_prefill=True, chunk_tokens=8, host_pool_pages=8))
+    cache = eng.cache
+    tokens = list(range(100, 112))  # 3 content pages
+    chain = page_hash_chain(tokens, cache.page_size)
+    cache.allocate(0, 4, tokens=tokens, chain=chain, publish=False)  # donor
+    cache.allocate(1, 4, tokens=tokens, chain=chain, publish=False)  # twin
+    assert not cache.frontier_ready(1)
+    cache.set_len(1, 12)
+    assert cache.demote_slot(1, chain) == 0  # gated twin never demotes
+    cache.free_slot(0)  # donor dies mid-prefill
+    assert cache.take_broken() == [1]
+    assert cache.frontier_ready(1)  # dependency cleared with the break
+    cache.free_slot(1)
+    cache.check_conservation()
+    # after the wreck, a clean allocation of the same chain works
+    pages = cache.allocate(2, 4, tokens=tokens, chain=chain)
+    assert len(pages) == 4
+    cache.free_slot(2)
+    cache.check_conservation()
+
+
+def test_twin_frontier_clears_as_donor_publishes(small_model):
+    cfg, model, params = small_model
+    eng = ServeEngine(model, params, EngineConfig(
+        num_pages=16, page_size=4, max_batch=3, max_pages_per_seq=6,
+        chunked_prefill=True, chunk_tokens=8))
+    cache = eng.cache
+    tokens = list(range(200, 212))
+    chain = page_hash_chain(tokens, cache.page_size)
+    donor_pages = cache.allocate(0, 4, tokens=tokens, chain=chain, publish=False)
+    twin_pages = cache.allocate(1, 4, tokens=tokens, chain=chain, publish=False)
+    # the twin increfed the donor's content pages instead of popping free ones
+    assert twin_pages[:3] == donor_pages[:3]
+    assert all(cache.ref[p] == 2 for p in donor_pages[:3])
+    cache.publish_prefix(0, 2)  # frontier at 2 of 3 pages: still gated
+    assert not cache.frontier_ready(1)
+    cache.publish_prefix(0)  # complete
+    assert cache.frontier_ready(1)
+    cache.free_slot(0)
+    cache.free_slot(1)
+    cache.check_conservation()

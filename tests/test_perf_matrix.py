@@ -35,8 +35,25 @@ def _cell(key="ps8_ck32_f32_b2_k1", step_ms=1.0, attainment=0.5, **over):
 def test_smoke_grid_is_exact_subset_of_full():
     full = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(False)}
     smoke = {perf_matrix.cell_key(*combo) for combo in perf_matrix.grid(True)}
-    assert len(full) == 52 and len(smoke) == 10
+    assert len(full) == 56 and len(smoke) == 12
     assert smoke < full  # strict subset: every smoke cell has a committed twin
+
+
+def test_host_tier_cells_differ_only_by_suffix():
+    # hk=0 keys keep their earlier spelling (committed baselines pair
+    # unchanged); each hk cell's key is exactly its hk=0 sibling + "_hk", so
+    # the pair prices the preempt-demote / readmit-promote machinery
+    for combos in (perf_matrix.grid(False), perf_matrix.grid(True)):
+        keys = {perf_matrix.cell_key(*c) for c in combos}
+        hk = [c for c in combos if c[6]]
+        assert hk  # both grids carry host-tier cells
+        for c in hk:
+            key = perf_matrix.cell_key(*c)
+            assert key.endswith("_hk")
+            assert key[: -len("_hk")] in keys  # hk=0 sibling exists
+        for c in combos:
+            if not c[6]:
+                assert not perf_matrix.cell_key(*c).endswith("_hk")
 
 
 def test_speculative_cells_differ_only_by_suffix():
